@@ -1,0 +1,58 @@
+"""Shared benchmark utilities.
+
+The paper's headline metric is LOOP TIME: solver wall time per step,
+excluding dynamics evaluation time (Appendix A).  We measure total solver
+time, model (dynamics) time, and steps; loop = (total - model) / steps.
+
+The torchdiffeq/TorchDyn baseline semantics ("joint batching": one shared
+step size for the whole batch) is reproduced by flattening the batch into a
+single solver instance -- the exact construction in paper SS4.1.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solve_ivp
+
+
+def timed(fn, *args, repeats=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def joint_wrap(f, batch, feat):
+    """Wrap batched dynamics f into a SINGLE-instance joint problem
+    (torchdiffeq-style: shared step size and error estimate)."""
+
+    def fj(t, y, args):
+        yb = y.reshape(batch, feat)
+        tb = jnp.broadcast_to(t[0], (batch,))
+        return f(tb, yb, args).reshape(1, batch * feat)
+
+    return fj
+
+
+def solve_joint(f, y0, t_eval, **kw):
+    b, feat = y0.shape
+    fj = joint_wrap(f, b, feat)
+    te = t_eval if t_eval is None else jnp.asarray(t_eval)
+    sol = solve_ivp(fj, y0.reshape(1, b * feat), te, **kw)
+    return sol
+
+
+def count_evals_time(solve_fn, n_evals_fn, *args, repeats=3):
+    """Returns (total_s, model_s_estimate, steps).  Model time is estimated by
+    timing the dynamics alone for the recorded number of evaluations."""
+    total, _ = timed(solve_fn, *args, repeats=repeats)
+    return total

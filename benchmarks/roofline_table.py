@@ -1,0 +1,38 @@
+"""Render EXPERIMENTS.md roofline tables from dryrun_results.json."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path="dryrun_results.json", mesh="16x16"):
+    rows = json.load(open(path))
+    out = []
+    out.append(
+        "| arch | shape | kind | compute s | memory s | collective s | bottleneck "
+        "| model GFLOP | useful ratio | peak GiB/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP ({r['skipped'][:40]}…) | — | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | ERROR | | | | | | |")
+            continue
+        rl = r["roofline"]
+        pd = r["per_device_bytes"]
+        peak = max(pd.get("peak", 0), pd.get("argument", 0) + pd.get("temp", 0)) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {rl['compute_s']:.4f} "
+            f"| {rl['memory_s']:.4f} | {rl['collective_s']:.4f} "
+            f"| {rl['bottleneck'].replace('_s','')} | {r['model_gflops_global']:.0f} "
+            f"| {r['useful_flops_ratio']:.2f} | {peak:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "16x16"
+    print(render(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json", mesh))

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run [table3|table4|table5|fig1|fig2|all]
+
+Prints ``name,value,derived`` CSV rows (value is microseconds for *_time rows).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    suites = []
+    if which in ("all", "table3"):
+        from . import vdp_bench
+
+        suites.append(("table3_vdp", vdp_bench.rows))
+    if which in ("all", "fig1"):
+        from . import interaction_bench
+
+        suites.append(("fig1_interaction", interaction_bench.rows))
+    if which in ("all", "table4"):
+        from . import fen_bench
+
+        suites.append(("table4_fen", fen_bench.rows))
+    if which in ("all", "table5"):
+        from . import cnf_bench
+
+        suites.append(("table5_cnf", cnf_bench.rows))
+    if which in ("all", "fig2"):
+        from . import pid_bench
+
+        suites.append(("fig2_pid", pid_bench.rows))
+
+    print("name,value,derived")
+    for tag, fn in suites:
+        t0 = time.time()
+        for name, v, extra in fn():
+            print(f"{tag}/{name},{v},{extra}", flush=True)
+        print(f"# {tag} took {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

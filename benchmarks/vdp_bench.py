@@ -1,0 +1,86 @@
+"""Table 3: VdP loop-time benchmark.
+
+Paper setup: batch of 256 VdP problems, one cycle, mu=2, atol=rtol=1e-5,
+200 evenly spaced evaluation points, dopri5.  We compare:
+
+  parallel        our batch-parallel solver (per-instance state)
+  parallel-nodense same but final-state-only (no eval tracking)
+  joint           torchdiffeq-style single joint instance (shared step size)
+
+Loop time = solver wall time / mean steps.  (CPU-host numbers; relative
+ordering is the reproducible claim, see EXPERIMENTS.md.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solve_ivp
+
+from .common import solve_joint, timed
+
+
+def vdp(t, y, mu):
+    x, xd = y[..., 0], y[..., 1]
+    return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
+
+
+def run(batch=256, mu=2.0, n_eval=200, tol=1e-5):
+    key = jax.random.PRNGKey(0)
+    y0 = jnp.array([2.0, 0.0]) + 0.1 * jax.random.normal(key, (batch, 2))
+    t_cycle = (3.0 - 2.0 * np.log(2.0)) * mu + 2 * np.pi / mu**(1 / 3)  # ~ one cycle
+    t_eval = jnp.linspace(0.0, float(t_cycle), n_eval)
+
+    results = {}
+
+    par = jax.jit(lambda y: solve_ivp(vdp, y, t_eval, method="dopri5",
+                                      atol=tol, rtol=tol, args=mu, max_steps=2000))
+    sol = par(y0)
+    steps = float(np.mean(np.asarray(sol.stats["n_steps"])))
+    total, std = timed(par, y0)
+    results["parallel"] = dict(total_s=total, steps=steps, loop_ms=1e3 * total / steps)
+
+    par_w = jax.jit(lambda y: solve_ivp(vdp, y, t_eval, method="dopri5",
+                                        atol=tol, rtol=tol, args=mu, max_steps=2000,
+                                        dense_window=8))
+    solw = par_w(y0)
+    steps_w = float(np.mean(np.asarray(solw.stats["n_steps"])))
+    total_w, _ = timed(par_w, y0)
+    results["parallel-windowed"] = dict(total_s=total_w, steps=steps_w,
+                                        loop_ms=1e3 * total_w / steps_w)
+
+    par_nd = jax.jit(lambda y: solve_ivp(vdp, y, None, t_start=0.0, t_end=float(t_cycle),
+                                         method="dopri5", atol=tol, rtol=tol,
+                                         args=mu, max_steps=2000))
+    soln = par_nd(y0)
+    steps_nd = float(np.mean(np.asarray(soln.stats["n_steps"])))
+    total_nd, _ = timed(par_nd, y0)
+    results["parallel-nodense"] = dict(total_s=total_nd, steps=steps_nd,
+                                       loop_ms=1e3 * total_nd / steps_nd)
+
+    joint = jax.jit(lambda y: solve_joint(vdp, y, t_eval, method="dopri5",
+                                          atol=tol, rtol=tol, args=mu, max_steps=4000))
+    solj = joint(y0)
+    steps_j = float(np.asarray(solj.stats["n_steps"])[0])
+    total_j, _ = timed(joint, y0)
+    results["joint"] = dict(total_s=total_j, steps=steps_j, loop_ms=1e3 * total_j / steps_j)
+
+    return results
+
+
+def rows():
+    r = run()
+    out = []
+    for name, d in r.items():
+        out.append((f"vdp/{name}/loop_time", d["loop_ms"] * 1e3,
+                    f"steps={d['steps']:.0f}"))
+    out.append(("vdp/joint_vs_parallel_step_ratio",
+                r["joint"]["steps"] / r["parallel"]["steps"], "x more steps when joint"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, extra in rows():
+        print(f"{name},{us:.1f},{extra}")

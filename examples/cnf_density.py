@@ -1,0 +1,40 @@
+"""Continuous normalizing flow (FFJORD-style) on a 2-D density, trained with
+the JOINT adjoint backward (the paper's torchode-joint fast path).
+
+    PYTHONPATH=src python examples/cnf_density.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.cnf_bench import aug_dynamics, clip_tree, init_mlp, nll_loss, two_moons  # noqa: E402
+from repro.core.adjoint import make_adjoint_solve  # noqa: E402
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = init_mlp(key)
+    x = two_moons(key, 512)
+    solve = make_adjoint_solve(aug_dynamics, mode="joint", rtol=1e-4, atol=1e-4)
+    loss_grad = jax.jit(jax.value_and_grad(lambda p: nll_loss(p, x, solve)))
+
+    lr, m = 1e-2, jax.tree.map(jnp.zeros_like, params)
+    for it in range(60):
+        nll, g = loss_grad(params)
+        g = clip_tree(g)
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+        params = jax.tree.map(lambda p, mm: p - lr * mm, params, m)
+        if it % 10 == 0:
+            print(f"iter {it:3d}  nll {float(nll):.4f}")
+    print(f"final nll {float(nll):.4f} (standard-normal baseline "
+          f"{0.5*2*np.log(2*np.pi) + 1.0:.4f})")
+    assert float(nll) < 2.5, "CNF should beat the unit-gaussian baseline"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Continuous-depth transformer: the block stack integrated as a neural ODE by
+the repro.core batch-parallel solver (weight-tied, adaptive depth per token
+batch) -- the direct integration of the paper's technique into the LM substrate.
+
+    PYTHONPATH=src python examples/continuous_depth_lm.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    main([
+        "--arch", "stablelm-3b", "--reduced", "--ode-depth", "--steps", "30",
+        "--batch", "8", "--seq", "64", "--lr", "3e-3",
+    ])

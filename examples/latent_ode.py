@@ -1,0 +1,68 @@
+"""Latent ODE for irregularly-sampled time series (Rubanova et al., 2019
+setting, scaled down): every sequence has its OWN evaluation time grid --
+the per-instance t_eval feature that torchode supports natively and joint
+solvers cannot express without padding tricks.
+
+    PYTHONPATH=src python examples/latent_ode.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import solve_ivp_scan  # noqa: E402
+
+
+def init_params(key, latent=8, hidden=32, obs=2):
+    ks = jax.random.split(key, 5)
+    s = lambda k, sh: jax.random.normal(k, sh) / np.sqrt(sh[0])
+    return {
+        "dyn_w1": s(ks[0], (latent, hidden)), "dyn_w2": s(ks[1], (hidden, latent)),
+        "dec_w": s(ks[2], (latent, obs)),
+        "enc_w": s(ks[3], (obs, latent)),
+    }
+
+
+def dynamics(t, z, p):
+    return jnp.tanh(z @ p["dyn_w1"]) @ p["dyn_w2"]
+
+
+def make_data(key, batch=16, n_obs=12):
+    """Spirals observed at random, per-sequence times."""
+    k1, k2 = jax.random.split(key)
+    t = jnp.sort(jax.random.uniform(k1, (batch, n_obs)) * 4.0, axis=1)
+    phase = jax.random.uniform(k2, (batch, 1)) * 2 * np.pi
+    xy = jnp.stack([jnp.sin(t + phase), jnp.cos(t + phase)], -1)  # (b, n, 2)
+    return t, xy
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = init_params(key)
+    t_obs, x_obs = make_data(key)
+
+    def loss_fn(params):
+        z0 = x_obs[:, 0, :] @ params["enc_w"]
+        sol = solve_ivp_scan(dynamics, z0, t_obs, args=params, rtol=1e-3,
+                             atol=1e-4, max_steps=64)  # per-instance time grids!
+        pred = sol.ys @ params["dec_w"]
+        return jnp.mean((pred - x_obs) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    lr = 5e-2
+    m = jax.tree.map(jnp.zeros_like, params)
+    for it in range(80):
+        mse, g = grad_fn(params)
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+        params = jax.tree.map(lambda p, mm: p - lr * mm, params, m)
+        if it % 20 == 0:
+            print(f"iter {it:3d}  mse {float(mse):.4f}")
+    print(f"final mse {float(mse):.4f}")
+    assert float(mse) < 0.3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""End-to-end LM training driver on a reduced assigned architecture --
+exercises the full production path: sharded train step, activation
+constraints, checkpointing, watchdog, resumable data.
+
+    PYTHONPATH=src python examples/train_lm.py [arch] [steps]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2.5-14b"
+    steps = sys.argv[2] if len(sys.argv) > 2 else "200"
+    main([
+        "--arch", arch, "--reduced", "--steps", steps, "--batch", "16",
+        "--seq", "128", "--ckpt-dir", "/tmp/repro_lm_ckpt", "--remat",
+    ])

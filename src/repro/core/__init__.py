@@ -1,0 +1,31 @@
+"""repro.core -- batch-parallel adaptive ODE solving (the torchode technique in JAX)."""
+
+from .controller import (
+    FixedController,
+    PIDController,
+    integral_controller,
+    pi_controller,
+    pid_controller,
+)
+from .loop import make_solver, solve_ivp, solve_ivp_scan
+from .solution import Solution, Status
+from .tableau import TABLEAUS, ButcherTableau, get_tableau
+from .terms import ODETerm, as_term
+
+__all__ = [
+    "FixedController",
+    "PIDController",
+    "integral_controller",
+    "pi_controller",
+    "pid_controller",
+    "make_solver",
+    "solve_ivp",
+    "solve_ivp_scan",
+    "Solution",
+    "Status",
+    "TABLEAUS",
+    "ButcherTableau",
+    "get_tableau",
+    "ODETerm",
+    "as_term",
+]

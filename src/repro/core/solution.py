@@ -1,0 +1,40 @@
+"""Solution container, per-instance status codes and solver statistics."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+
+
+class Status(enum.IntEnum):
+    """Per-instance termination status (SUCCESS == 0, as in torchode)."""
+
+    SUCCESS = 0
+    REACHED_MAX_STEPS = 1
+    INFINITE = 2
+    REACHED_DT_MIN = 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Solution:
+    """Result of a batched IVP solve.
+
+    ts:     (b, n) evaluation times (== the t_eval passed in), or (b,) final times
+    ys:     (b, n, f) solution values, or (b, f) final states when t_eval is None
+    status: (b,) int32, one of ``Status``
+    stats:  dict of per-instance statistics, each (b,) int32:
+            n_steps, n_accepted, n_f_evals, n_initialized
+    """
+
+    ts: jax.Array
+    ys: jax.Array
+    status: jax.Array
+    stats: dict[str, Any]
+
+    @property
+    def success(self) -> jax.Array:
+        return self.status == Status.SUCCESS.value

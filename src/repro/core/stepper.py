@@ -1,0 +1,111 @@
+"""Explicit Runge-Kutta stepper with FSAL/SSAL reuse and fused stage math.
+
+One ``step`` computes all stage derivatives, the 5th/embedded-order update and
+the error estimate.  The per-stage accumulation and the final (update, error)
+pair go through ``repro.kernels.ops`` so the hot loops run as single fused
+kernels (Pallas on TPU, XLA-fused jnp on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .tableau import ButcherTableau
+from .terms import ODETerm
+
+
+class StepResult(NamedTuple):
+    y1: jax.Array  # (b, f) candidate next state
+    err: jax.Array  # (b, f) embedded error estimate (zeros for fixed-step)
+    f1: jax.Array  # (b, f) f(t + dt, y1) -- exact for FSAL/SSAL tableaus
+    n_f_evals: int  # static count of dynamics evaluations in this step
+
+
+def rk_step(
+    term: ODETerm,
+    tab: ButcherTableau,
+    t: jax.Array,  # (b,)
+    dt: jax.Array,  # (b,)
+    y: jax.Array,  # (b, f)
+    f0: jax.Array,  # (b, f) derivative at (t, y); FSAL cache
+    args: Any,
+) -> StepResult:
+    import numpy as np
+
+    s = tab.stages
+    dtype = y.dtype
+    # Tableau coefficients stay as host-side numpy: they are compile-time
+    # constants, which lets the Pallas kernels unroll them into the VPU
+    # instruction stream (no coefficient loads at runtime).
+    a = np.asarray(tab.a, dtype=dtype)
+    c = np.asarray(tab.c, dtype=dtype)
+    b_sol = np.asarray(tab.b_sol, dtype=dtype)
+    b_err = (
+        np.asarray(tab.b_err, dtype=dtype)
+        if tab.b_err is not None
+        else np.zeros((s,), dtype=dtype)
+    )
+
+    ks = [f0]  # stage 0 is always f(t, y) == the FSAL cache
+    n_evals = 0
+    for i in range(1, s):
+        K = jnp.stack(ks)
+        yi = ops.stage_accum(y, dt, K, a[i, :i])
+        ti = t + c[i] * dt
+        ks.append(term.vf(ti, yi, args))
+        n_evals += 1
+
+    K = jnp.stack(ks)
+    y1, err = ops.fused_update(y, K, dt, b_sol, b_err)
+
+    if tab.fsal:
+        f1 = ks[-1]
+    else:
+        f1 = term.vf(t + dt, y1, args)
+        n_evals += 1
+    return StepResult(y1=y1, err=err, f1=f1, n_f_evals=n_evals)
+
+
+def initial_step_size(
+    term: ODETerm,
+    t0: jax.Array,  # (b,)
+    y0: jax.Array,  # (b, f)
+    f0: jax.Array,  # (b, f)
+    direction: jax.Array,  # (b,) +-1
+    order: int,
+    atol,
+    rtol,
+    args: Any = None,
+) -> jax.Array:
+    """Hairer/Noersett/Wanner automatic initial step selection, vectorized."""
+    dtype = y0.dtype
+    atol = jnp.asarray(atol, dtype=dtype)
+    rtol = jnp.asarray(rtol, dtype=dtype)
+    if atol.ndim == 1:
+        atol = atol[:, None]
+    if rtol.ndim == 1:
+        rtol = rtol[:, None]
+    scale = atol + jnp.abs(y0) * rtol
+
+    def rms(x):
+        return jnp.sqrt(jnp.mean(jnp.square(x / scale), axis=-1))
+
+    d0 = rms(y0)
+    d1 = rms(f0)
+    h0 = jnp.where((d0 < 1e-5) | (d1 < 1e-5), 1e-6, 0.01 * d0 / jnp.maximum(d1, 1e-30))
+
+    y1 = y0 + (h0 * direction)[:, None] * f0
+    f1 = term.vf(t0 + h0 * direction, y1, args)
+    d2 = rms(f1 - f0) / jnp.maximum(h0, 1e-30)
+
+    dmax = jnp.maximum(d1, d2)
+    h1 = jnp.where(
+        dmax <= 1e-15,
+        jnp.maximum(1e-6, h0 * 1e-3),
+        (0.01 / jnp.maximum(dmax, 1e-30)) ** (1.0 / order),
+    )
+    return jnp.minimum(100.0 * h0, h1) * direction

@@ -1,0 +1,198 @@
+"""Butcher tableaus for the explicit Runge-Kutta steppers.
+
+Conventions:
+  - ``a`` is the full (s, s) lower-triangular stage matrix.
+  - ``b_sol`` are the solution weights, ``b_err = b_sol - b_hat`` are the weights
+    of the embedded error estimate (``None`` for fixed-step methods).
+  - ``fsal``: the last stage equals f(t + dt, y1), so an accepted step seeds the
+    next step's first stage for free (First Same As Last).
+  - ``ssal``: the solution is available before the last stage (Solution Same As
+    Last) -- dopri5/tsit5's last stage is evaluated *at* the solution, which also
+    makes f1 for dense output free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ButcherTableau:
+    name: str
+    order: int  # order of the solution advance
+    error_order: int  # order of the embedded (lower-order) estimate + 1 == controller k
+    a: np.ndarray  # (s, s)
+    b_sol: np.ndarray  # (s,)
+    b_err: np.ndarray | None  # (s,)
+    c: np.ndarray  # (s,)
+    fsal: bool
+    ssal: bool
+
+    @property
+    def stages(self) -> int:
+        return len(self.c)
+
+
+def _tri(rows, s):
+    a = np.zeros((s, s), dtype=np.float64)
+    for i, row in enumerate(rows):
+        a[i + 1, : len(row)] = row
+    return a
+
+
+EULER = ButcherTableau(
+    name="euler",
+    order=1,
+    error_order=2,
+    a=np.zeros((1, 1)),
+    b_sol=np.array([1.0]),
+    b_err=None,
+    c=np.array([0.0]),
+    fsal=False,
+    ssal=False,
+)
+
+MIDPOINT = ButcherTableau(
+    name="midpoint",
+    order=2,
+    error_order=2,
+    a=_tri([[0.5]], 2),
+    b_sol=np.array([0.0, 1.0]),
+    b_err=None,
+    c=np.array([0.0, 0.5]),
+    fsal=False,
+    ssal=False,
+)
+
+# The classic fixed-step RK4.
+RK4 = ButcherTableau(
+    name="rk4",
+    order=4,
+    error_order=4,
+    a=_tri([[0.5], [0.0, 0.5], [0.0, 0.0, 1.0]], 4),
+    b_sol=np.array([1 / 6, 1 / 3, 1 / 3, 1 / 6]),
+    b_err=None,
+    c=np.array([0.0, 0.5, 0.5, 1.0]),
+    fsal=False,
+    ssal=False,
+)
+
+# Heun-Euler 2(1) embedded pair.
+HEUN = ButcherTableau(
+    name="heun",
+    order=2,
+    error_order=2,
+    a=_tri([[1.0]], 2),
+    b_sol=np.array([0.5, 0.5]),
+    b_err=np.array([0.5, 0.5]) - np.array([1.0, 0.0]),
+    c=np.array([0.0, 1.0]),
+    fsal=False,
+    ssal=False,
+)
+
+# Bogacki--Shampine 3(2).
+BOSH3 = ButcherTableau(
+    name="bosh3",
+    order=3,
+    error_order=3,
+    a=_tri([[1 / 2], [0.0, 3 / 4], [2 / 9, 1 / 3, 4 / 9]], 4),
+    b_sol=np.array([2 / 9, 1 / 3, 4 / 9, 0.0]),
+    b_err=np.array([2 / 9, 1 / 3, 4 / 9, 0.0]) - np.array([7 / 24, 1 / 4, 1 / 3, 1 / 8]),
+    c=np.array([0.0, 1 / 2, 3 / 4, 1.0]),
+    fsal=True,
+    ssal=True,
+)
+
+# Dormand--Prince 5(4), the paper's benchmark method ("dopri5").
+_DOPRI5_B = np.array([35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0])
+_DOPRI5_BHAT = np.array(
+    [5179 / 57600, 0.0, 7571 / 16695, 393 / 640, -92097 / 339200, 187 / 2100, 1 / 40]
+)
+DOPRI5 = ButcherTableau(
+    name="dopri5",
+    order=5,
+    error_order=5,
+    a=_tri(
+        [
+            [1 / 5],
+            [3 / 40, 9 / 40],
+            [44 / 45, -56 / 15, 32 / 9],
+            [19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729],
+            [9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656],
+            list(_DOPRI5_B[:6]),
+        ],
+        7,
+    ),
+    b_sol=_DOPRI5_B,
+    b_err=_DOPRI5_B - _DOPRI5_BHAT,
+    c=np.array([0.0, 1 / 5, 3 / 10, 4 / 5, 8 / 9, 1.0, 1.0]),
+    fsal=True,
+    ssal=True,
+)
+
+# Tsitouras 5(4) ("tsit5"), torchode's other recommended method.
+_TSIT5_B = np.array(
+    [
+        0.09646076681806523,
+        0.01,
+        0.4798896504144996,
+        1.379008574103742,
+        -3.290069515436081,
+        2.324710524099774,
+        0.0,
+    ]
+)
+_TSIT5_BERR = np.array(
+    [
+        -0.00178001105222577714,
+        -0.0008164344596567469,
+        0.007880878010261995,
+        -0.1447110071732629,
+        0.5823571654525552,
+        -0.45808210592918697,
+        1 / 66,
+    ]
+)
+TSIT5 = ButcherTableau(
+    name="tsit5",
+    order=5,
+    error_order=5,
+    a=_tri(
+        [
+            [0.161],
+            [-0.008480655492356989, 0.335480655492357],
+            [2.8971530571054935, -6.359448489975075, 4.3622954328695815],
+            [
+                5.325864828439257,
+                -11.748883564062828,
+                7.4955393428898365,
+                -0.09249506636175525,
+            ],
+            [
+                5.86145544294642,
+                -12.92096931784711,
+                8.159367898576159,
+                -0.071584973281401,
+                -0.028269050394068383,
+            ],
+            list(_TSIT5_B[:6]),
+        ],
+        7,
+    ),
+    b_sol=_TSIT5_B,
+    b_err=_TSIT5_BERR,
+    c=np.array([0.0, 0.161, 0.327, 0.9, 0.9800255409045097, 1.0, 1.0]),
+    fsal=True,
+    ssal=True,
+)
+
+TABLEAUS = {t.name: t for t in (EULER, MIDPOINT, RK4, HEUN, BOSH3, DOPRI5, TSIT5)}
+
+
+def get_tableau(name: str) -> ButcherTableau:
+    try:
+        return TABLEAUS[name]
+    except KeyError:
+        raise ValueError(f"unknown method {name!r}; available: {sorted(TABLEAUS)}") from None

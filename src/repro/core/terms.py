@@ -1,0 +1,46 @@
+"""ODE terms: the dynamics wrapper the solver integrates.
+
+The solver's calling convention is batched: ``f(t, y, args)`` with ``t`` of
+shape (batch,) and ``y`` of shape (batch, features).  ``ODETerm`` adapts
+common user signatures onto that convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ODETerm:
+    """Wraps a vector field ``f(t, y, args) -> dy/dt``.
+
+    ``batched=True`` (default): f already handles (b,) times and (b, f) states.
+    ``batched=False``: f is written for a single instance (scalar t, (f,) y)
+    and is vmapped over the batch.
+    """
+
+    f: Callable[..., Any]
+    batched: bool = True
+    with_args: bool = True
+
+    def vf(self, t: jax.Array, y: jax.Array, args: Any) -> jax.Array:
+        if self.batched:
+            out = self.f(t, y, args) if self.with_args else self.f(t, y)
+        else:
+            if self.with_args:
+                out = jax.vmap(lambda ti, yi: self.f(ti, yi, args))(t, y)
+            else:
+                out = jax.vmap(self.f)(t, y)
+        return jnp.asarray(out, dtype=y.dtype)
+
+
+def as_term(f: Callable | ODETerm, *, batched: bool = True, with_args: bool | None = None) -> ODETerm:
+    if isinstance(f, ODETerm):
+        return f
+    if with_args is None:
+        with_args = True
+    return ODETerm(f, batched=batched, with_args=with_args)

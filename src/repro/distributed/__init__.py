@@ -1,0 +1,8 @@
+from .sharding import (
+    batch_spec,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+
+__all__ = ["batch_spec", "cache_shardings", "param_shardings", "state_shardings"]

@@ -1,0 +1,72 @@
+"""Activation sharding constraints.
+
+FSDP shards weights over the data axes; without anchors, GSPMD happily
+propagates those weight shardings INTO the activations (batch becomes
+replicated, d_model becomes data-sharded -- a 16x per-device compute blowup we
+measured in the dry-run).  Anchoring the residual stream at period boundaries
+forces the all-gathers onto the (small) weights instead, which is the whole
+point of ZeRO-3.
+
+The model code calls ``constrain(x, *spec)`` with LOGICAL axis names
+("dp", "tp", None); launchers activate a mapping to mesh axes for the duration
+of a trace.  When inactive (CPU unit tests), constrain is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _mapping():
+    return getattr(_state, "mapping", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(dp=("data",), tp="model", tp_size=None, mesh=None):
+    """Enable logical->mesh axis mapping for constrain() inside jit traces.
+
+    ``tp_size`` (the model-axis extent) lets layers pick divisibility-dependent
+    strategies (e.g. head- vs sequence-sharded attention for GQA).  ``mesh``
+    enables shard_map-based layers (expert-parallel MoE dispatch)."""
+    prev = _mapping()
+    _state.mapping = {
+        "dp": tuple(dp), "tp": tp, None: None, "_tp_size": tp_size, "_mesh": mesh,
+    }
+    try:
+        yield
+    finally:
+        _state.mapping = prev
+
+
+def tp_size():
+    """Model-axis size under the active mapping, or None when inactive."""
+    m = _mapping()
+    return m.get("_tp_size") if m else None
+
+
+def current_mesh():
+    """Mesh under the active mapping (for shard_map layers), or None."""
+    m = _mapping()
+    return m.get("_mesh") if m else None
+
+
+def logical_axes():
+    m = _mapping()
+    if m is None:
+        return None, None
+    return m["dp"], m["tp"]
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint using logical axes; no-op outside launchers."""
+    m = _mapping()
+    if m is None:
+        return x
+    resolved = tuple(m.get(s, None) for s in spec)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,169 @@
+"""GSPMD sharding rules for parameters, optimizer state, activations, caches.
+
+Layout summary (mesh axes: optional "pod", "data", "model"):
+  - batch dims           -> ("pod", "data")   [dp]
+  - attention heads/ffn  -> "model"           [tensor parallelism]
+  - MoE expert dim       -> "model"           [expert parallelism]
+  - vocab (embed rows)   -> "model"
+  - FSDP: the non-model weight dim additionally shards over dp (ZeRO-3);
+    optimizer moments inherit their parameter's spec.
+  - KV caches: flat head dim (KV*hd) -> "model"; batch -> dp.
+
+Every rule is guarded by divisibility: a dim that does not divide evenly by
+the axis size falls back to replication (recorded in the dry-run report).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, axis):
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        s = 1
+        for a in axis:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[axis]
+
+
+def _guard(mesh, shape, spec):
+    """Replace any axis assignment whose shard count does not divide the dim."""
+    fixed = []
+    for dim, axis in zip(shape, spec):
+        fixed.append(axis if dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*fixed)
+
+
+def _leaf_name(path):
+    parts = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = parts[-1]
+    # quantized-optimizer leaves ("q" int8 payload / "s" blockwise scales)
+    # inherit their parameter's rule; see optim/quantized.py
+    if name in ("q", "s") and len(parts) >= 2:
+        name = parts[-2]
+    return name, parts
+
+
+# trailing-dim specs by leaf name (after stripping any leading period axis)
+def _weight_rule(name: str, parts: list[str], ndim: int, fsdp_ax):
+    moe = "moe" in parts
+    table = {
+        "embed": ("model", fsdp_ax),
+        "wq": (fsdp_ax, "model"),
+        "wk": (fsdp_ax, "model"),
+        "wv": (fsdp_ax, "model"),
+        "wo": ("model", fsdp_ax),
+        "bq": ("model",),
+        "bk": ("model",),
+        "bv": ("model",),
+        "router": (fsdp_ax, None),
+        "shared_in": (fsdp_ax, "model"),
+        "shared_gate": (fsdp_ax, "model"),
+        "shared_out": ("model", fsdp_ax),
+        # mamba
+        "in_proj": (fsdp_ax, "model"),
+        "conv_w": (None, "model"),
+        "conv_b": ("model",),
+        "x_proj": ("model", None),
+        "dt_proj": (None, "model"),
+        "dt_bias": ("model",),
+        "A_log": ("model", None),
+        "D": ("model",),
+        "out_proj": ("model", fsdp_ax),
+        # xlstm
+        "up": (fsdp_ax, "model"),
+        "down": ("model", fsdp_ax),
+        "wi": (None, None),
+        "wf": (None, None),
+        "out": (None, "model"),
+    }
+    if moe and name in ("w_in", "w_gate"):
+        return ("model", fsdp_ax, None)  # (E, d, h): expert parallel + fsdp
+    if moe and name == "w_out":
+        return ("model", None, fsdp_ax)
+    if name in ("w_in", "w_gate"):
+        return (fsdp_ax, "model")
+    if name == "w_out":
+        return ("model", fsdp_ax)
+    if name.startswith("r_") or name.startswith("w_"):  # slstm gates
+        return (None, "model")
+    if name.endswith("_scale") or name.endswith("_bias"):
+        return (None,) * ndim
+    if name in table:
+        return table[name]
+    return (None,) * ndim
+
+
+def param_shardings(mesh, abstract_params, *, fsdp: bool = True):
+    """PartitionSpec tree for a params (or adam moments) pytree."""
+    fs = dp_axes(mesh) if fsdp else None
+    if fs is not None and len(fs) == 1:
+        fs = fs[0]
+
+    def spec(path, leaf):
+        name, parts = _leaf_name(path)
+        in_blocks = any(p in ("blocks", "enc_blocks") for p in parts)
+        ndim = leaf.ndim - (1 if in_blocks else 0)
+        rule = _weight_rule(name, parts, ndim, fs)
+        rule = (tuple(rule) + (None,) * ndim)[:ndim]
+        full = ((None,) if in_blocks else ()) + tuple(rule)
+        return NamedSharding(mesh, _guard(mesh, leaf.shape, full))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def state_shardings(mesh, abstract_state, *, fsdp: bool = True):
+    """Shardings for {params, opt{m, v, step}} train state."""
+    return {
+        "params": param_shardings(mesh, abstract_state["params"], fsdp=fsdp),
+        "opt": {
+            "m": param_shardings(mesh, abstract_state["opt"]["m"], fsdp=fsdp),
+            "v": param_shardings(mesh, abstract_state["opt"]["v"], fsdp=fsdp),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def batch_spec(mesh, x):
+    """Batch-leading activation spec: batch -> dp, rest replicated.
+
+    ``x`` may be an int (ndim; unguarded) or an abstract array, in which case
+    the batch axis falls back to replication when not divisible (e.g. the
+    long_500k cell's global_batch=1)."""
+    dp = dp_axes(mesh)
+    if isinstance(x, int):
+        return NamedSharding(mesh, P(dp, *([None] * (x - 1))))
+    spec = (dp,) + (None,) * (x.ndim - 1)
+    return NamedSharding(mesh, _guard(mesh, x.shape, spec))
+
+
+def cache_shardings(mesh, abstract_cache):
+    """KV/SSM/xLSTM cache specs (leaves carry a leading period axis)."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        name, parts = _leaf_name(path)
+        nd = leaf.ndim
+        if name in ("k", "v", "xk", "xv"):  # (L, b, S, KV*hd)
+            s = (None, dp, None, "model")
+        elif name == "h" and nd == 4:  # mamba state (L, b, di, N)
+            s = (None, dp, "model", None)
+        elif name == "conv":  # (L, b, K-1, di)
+            s = (None, dp, None, "model")
+        elif name == "C":  # mlstm (L, b, H, hd, hd)
+            s = (None, dp, None, "model", None)
+        elif name == "n" and nd == 4:  # mlstm (L, b, H, hd)
+            s = (None, dp, None, "model")
+        else:  # slstm (L, b, d) / mlstm m (L, b, H)
+            s = (None, dp, "model") if nd == 3 else (None, dp) + (None,) * (nd - 2)
+        return NamedSharding(mesh, _guard(mesh, leaf.shape, s[:nd]))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)

@@ -1,0 +1,158 @@
+"""Pallas TPU flash-attention FORWARD kernel (GQA, causal block skipping).
+
+TPU-native rethinking of the substrate's attention hot spot: the grid
+enumerates only the valid (q-block, kv-block) pairs (the same static pair list
+as models/attention.py), streaming one q/kv tile pair per program.  TPU grids
+execute sequentially, so the online-softmax state (m, l) and the accumulator
+are carried ACROSS a q-block's pairs by revisiting the same output blocks --
+no scratch management, no recomputation.  MXU-friendly tiles: hd is the lane
+dim, kv_chunk the contraction dim.
+
+This is the TPU-target path for serving (prefill); the jnp formulation in
+models/attention.py remains the CPU/dry-run path.  Validated with
+interpret=True across shapes/dtypes against ref() in tests/test_flash_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pairs(nq, nk, qc, kc, causal):
+    out = []
+    for qi in range(nq):
+        for ki in range(nk):
+            if causal and ki * kc > (qi + 1) * qc - 1:
+                continue
+            out.append((qi, ki))
+    return out
+
+
+def _kernel(sched_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, qc, kc,
+            causal, scale):
+    # sched_ref: (4, n_pairs) int32 scalar-prefetch block schedule
+    p = pl.program_id(0)
+    qi = sched_ref[0, p]
+    ki = sched_ref[1, p]
+    first = sched_ref[2, p] == 1
+    last = sched_ref[3, p] == 1
+
+    @pl.when(first)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (qc, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (kc, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (qc, kc)
+    if causal:
+        q_pos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+        k_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+        s = jnp.where(k_pos > q_pos, NEG_INF, s)
+
+    m_prev = m_ref[0, :, 0, :]  # (qc, 1)
+    l_prev = l_ref[0, :, 0, :]
+    acc_prev = o_ref[0, :, 0, :].astype(jnp.float32)  # unnormalized accumulator
+
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p_ = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p_, axis=1, keepdims=True)
+    acc = acc_prev * corr + jax.lax.dot(p_, v)
+
+    m_ref[0, :, 0, :] = m_new
+    l_ref[0, :, 0, :] = l_new
+
+    # write back: normalized on the block's LAST pair, raw accumulator otherwise
+    o_ref[0, :, 0, :] = jnp.where(
+        last, acc / jnp.maximum(l_new, 1e-30), acc
+    ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, q_chunk=256, kv_chunk=128,
+                        interpret=False):
+    """q: (b, sq, H, hd); k, v: (b, sk, KV, hd).  Forward only, f32 state.
+
+    Grid: (pairs, b, H).  Returns (b, sq, H, hd) in q.dtype.
+
+    Note: the accumulator is carried in the (f32) output block between a
+    q-block's pairs, so internally o is materialized in f32 and cast at the
+    end; m/l live in small side outputs.
+    """
+    b, sq, H, hd = q.shape
+    sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    assert sq % qc == 0 and sk % kc == 0, (sq, qc, sk, kc)
+    nq, nk = sq // qc, sk // kc
+
+    pairs = _pairs(nq, nk, qc, kc, causal)
+    qi_list = tuple(int(p[0]) for p in pairs)
+    ki_list = tuple(int(p[1]) for p in pairs)
+    first_list = tuple(
+        bool(i == 0 or pairs[i][0] != pairs[i - 1][0]) for i in range(len(pairs)))
+    last_list = tuple(
+        bool(i == len(pairs) - 1 or pairs[i][0] != pairs[i + 1][0])
+        for i in range(len(pairs)))
+
+    scale = float(1.0 / np.sqrt(hd))
+    kernel = functools.partial(_kernel, qc=qc, kc=kc, causal=causal, scale=scale)
+    sched = jnp.asarray(
+        np.stack([qi_list, ki_list,
+                  np.asarray(first_list, np.int32),
+                  np.asarray(last_list, np.int32)]).astype(np.int32))
+
+    grid = (len(pairs), b, H)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qc, 1, hd), lambda p, bi, h, sc: (bi, sc[0, p], h, 0)),
+            pl.BlockSpec((1, kc, 1, hd), lambda p, bi, h, sc: (bi, sc[1, p], h // G, 0)),
+            pl.BlockSpec((1, kc, 1, hd), lambda p, bi, h, sc: (bi, sc[1, p], h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qc, 1, hd), lambda p, bi, h, sc: (bi, sc[0, p], h, 0)),
+            pl.BlockSpec((1, qc, 1, 1), lambda p, bi, h, sc: (bi, sc[0, p], h, 0)),
+            pl.BlockSpec((1, qc, 1, 1), lambda p, bi, h, sc: (bi, sc[0, p], h, 0)),
+        ],
+    )
+    o32, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sq, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, sq, H, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, sq, H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sched, q, k, v)
+    return o32.astype(q.dtype)
+
+
+def ref(q, k, v, *, causal=True):
+    """Pure-jnp oracle (quadratic)."""
+    b, sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(b, sq, KV, G, hd) / np.sqrt(hd)
+    s = jnp.einsum("bqKGh,bkKh->bKGqk", qf, k.astype(jnp.float32))
+    if causal:
+        qp = jnp.arange(sq)
+        kp = jnp.arange(k.shape[1])
+        s = jnp.where((kp[None, :] > qp[:, None])[None, None, None], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bKGqk,bkKh->bKGqh", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, H, hd).astype(q.dtype)

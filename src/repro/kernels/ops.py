@@ -1,0 +1,73 @@
+"""Jitted dispatch layer over the solver hot-spot ops.
+
+Backend selection (env var ``REPRO_KERNEL_BACKEND``):
+  - ``ref``       pure-jnp oracle (default on CPU -- XLA:CPU fuses these well)
+  - ``pallas``    compiled Pallas TPU kernels (default on TPU)
+  - ``interpret`` Pallas kernels in interpret mode (CPU correctness validation)
+
+The solver core only ever imports from this module, so swapping the backend
+never touches solver logic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import ref
+
+_BACKEND = None
+
+
+def backend() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        choice = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+        if choice == "auto":
+            choice = "pallas" if jax.default_backend() == "tpu" else "ref"
+        _BACKEND = choice
+    return _BACKEND
+
+
+def set_backend(name: str) -> None:
+    """Override backend (tests use this to exercise interpret mode)."""
+    global _BACKEND
+    assert name in ("ref", "pallas", "interpret")
+    _BACKEND = name
+
+
+def _impl():
+    b = backend()
+    if b == "ref":
+        return ref
+    from . import pallas_impl
+
+    return pallas_impl.interpret_impl() if b == "interpret" else pallas_impl.compiled_impl()
+
+
+def stage_accum(y, dt, K, coeffs):
+    if backend() == "ref":
+        return ref.stage_accum(y, dt, K, coeffs)
+    return _impl().stage_accum(y, dt, K, coeffs)
+
+
+def fused_update(y, K, dt, b_sol, b_err):
+    if backend() == "ref":
+        return ref.fused_update(y, K, dt, b_sol, b_err)
+    return _impl().fused_update(y, K, dt, b_sol, b_err)
+
+
+def error_norm(err, y0, y1, atol, rtol):
+    if backend() == "ref":
+        return ref.error_norm(err, y0, y1, atol, rtol)
+    return _impl().error_norm(err, y0, y1, atol, rtol)
+
+
+def interp_eval(coeffs, x, mask, out):
+    if backend() == "ref":
+        return ref.interp_eval(coeffs, x, mask, out)
+    return _impl().interp_eval(coeffs, x, mask, out)
+
+
+hermite_coeffs = ref.hermite_coeffs  # pure arithmetic; fused into callers by XLA

@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracles for the solver's fused hot-spot ops.
+
+These are the semantics the Pallas kernels must match (tests assert allclose
+against these).  They are also the execution path on CPU, where Pallas interpret
+mode would be much slower than XLA:CPU fusion.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stage_accum(y, dt, K, coeffs):
+    """y + dt * sum_j coeffs[j] * K[j].
+
+    y:      (b, f)
+    dt:     (b,)
+    K:      (j, b, f)  -- stacked stage derivatives
+    coeffs: (j,)       -- tableau row a[i, :j]
+    """
+    acc = jnp.tensordot(coeffs.astype(K.dtype), K, axes=1)
+    return y + dt[:, None] * acc
+
+
+def fused_update(y, K, dt, b_sol, b_err):
+    """One fused pass producing the solution update and the embedded error.
+
+    y1  = y + dt * (b_sol . K)
+    err =     dt * (b_err . K)
+
+    K: (s, b, f); b_sol, b_err: (s,).  Returns (y1, err), both (b, f).
+    """
+    y1 = y + dt[:, None] * jnp.tensordot(b_sol.astype(K.dtype), K, axes=1)
+    err = dt[:, None] * jnp.tensordot(b_err.astype(K.dtype), K, axes=1)
+    return y1, err
+
+
+def error_norm(err, y0, y1, atol, rtol):
+    """Weighted RMS norm, per instance.
+
+    ||err / (atol + rtol * max(|y0|, |y1|))||_rms  over the feature axis.
+
+    err, y0, y1: (b, f);  atol, rtol: scalar or (b,) or (b, f).
+    Returns (b,).
+    """
+    atol = jnp.asarray(atol, dtype=err.dtype)
+    rtol = jnp.asarray(rtol, dtype=err.dtype)
+    if atol.ndim == 1:
+        atol = atol[:, None]
+    if rtol.ndim == 1:
+        rtol = rtol[:, None]
+    scale = atol + rtol * jnp.maximum(jnp.abs(y0), jnp.abs(y1))
+    ratio = err / scale
+    return jnp.sqrt(jnp.mean(ratio * ratio, axis=-1))
+
+
+def hermite_coeffs(y0, y1, f0, f1, dt):
+    """Cubic-Hermite dense-output coefficients in Horner form.
+
+    p(x) = ((c3 * x + c2) * x + c1) * x + c0,  x = (t - t0)/dt in [0, 1].
+    Returns (c0, c1, c2, c3), each (b, f).
+    """
+    hdt = dt[:, None]
+    c0 = y0
+    c1 = hdt * f0
+    c2 = 3.0 * (y1 - y0) - hdt * (2.0 * f0 + f1)
+    c3 = 2.0 * (y0 - y1) + hdt * (f0 + f1)
+    return c0, c1, c2, c3
+
+
+def interp_eval(coeffs, x, mask, out):
+    """Masked Horner evaluation of the dense-output polynomial.
+
+    coeffs: tuple of (b, f) arrays, low -> high degree
+    x:      (b, n) normalized evaluation positions
+    mask:   (b, n) bool -- which (instance, point) cells to write this step
+    out:    (b, n, f) existing output buffer
+
+    Returns updated (b, n, f) buffer: where mask, p(x); elsewhere out.
+    """
+    xe = x[:, :, None]
+    acc = jnp.broadcast_to(coeffs[-1][:, None, :], xe.shape[:2] + coeffs[-1].shape[-1:])
+    for c in coeffs[-2::-1]:
+        acc = acc * xe + c[:, None, :]
+    return jnp.where(mask[:, :, None], acc, out)

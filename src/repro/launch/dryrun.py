@@ -1,0 +1,247 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this prints/records:
+  - compiled.memory_analysis()  (per-device bytes -- does it fit HBM?)
+  - compiled.cost_analysis()    (HLO FLOPs / bytes for the roofline)
+  - collective bytes parsed from the post-SPMD HLO text
+  - the three roofline terms (compute / memory / collective, seconds)
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k
+  python -m repro.launch.dryrun --all --out dryrun_results.json
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import numpy as np
+
+from ..configs import all_archs, get_config
+from ..distributed.sharding import (
+    batch_spec,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+from ..models.config import SHAPES
+from ..train.steps import make_decode_step, make_prefill_step, make_train_step
+from . import specs as S
+from .mesh import make_production_mesh
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import hlocost
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+
+def roofline(per_dev_flops, per_dev_bytes, per_dev_coll_bytes):
+    """Three roofline terms in seconds.  Inputs are PER-DEVICE quantities taken
+    from the post-SPMD (per-device) HLO module, so each term divides by one
+    chip's peak; this equals global/(chips*peak) for an even sharding."""
+    terms = {
+        "compute_s": per_dev_flops / PEAK_FLOPS,
+        "memory_s": per_dev_bytes / HBM_BW,
+        "collective_s": per_dev_coll_bytes / ICI_BW,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    return terms
+
+
+def model_flops(cfg, abstract_params, shape_name: str) -> float:
+    """6*N*D (train) / 2*N*D (inference), N_active for MoE -- the 'useful
+    compute' yardstick against which HLO FLOPs are compared."""
+    sh = SHAPES[shape_name]
+    d_tokens = sh["global_batch"] * (sh["seq_len"] if sh["kind"] != "decode" else 1)
+
+    def leaf_count(path, leaf):
+        parts = [getattr(k, "key", str(k)) for k in path]
+        n = float(np.prod(leaf.shape))
+        if "moe" in parts and any(
+            name in parts[-1] for name in ("w_in", "w_gate", "w_out")
+        ) and "shared" not in parts[-1]:
+            n *= cfg.moe.top_k / cfg.moe.n_experts  # routed experts: active fraction
+        return n
+
+    import jax.tree_util as jtu
+
+    n_active = sum(
+        leaf_count(p, l) for p, l in jtu.tree_leaves_with_path(abstract_params["params"] if "params" in abstract_params else abstract_params)
+    )
+    factor = 6.0 if sh["kind"] == "train" else 2.0
+    return factor * n_active * d_tokens
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, fsdp: bool = True,
+               remat: str = "auto", optimizer: str = "adamw"):
+    """Build + lower + compile one cell; returns (compiled, info dict)."""
+    cfg = get_config(arch)
+    ok, why = S.cell_runnable(cfg, shape_name)
+    if not ok:
+        return None, {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    from ..distributed.constraints import activation_sharding
+
+    with mesh, activation_sharding(dp=dp, tp="model", tp_size=mesh.shape["model"], mesh=mesh):
+        if kind == "train":
+            use_remat = (remat == "on") or (remat == "auto" and _needs_remat(cfg))
+            step = make_train_step(cfg, remat=use_remat, optimizer=optimizer)
+            state = S.abstract_train_state(cfg, optimizer=optimizer)
+            batch = S.batch_specs(cfg, shape_name, with_labels=True)
+            in_sh = (
+                state_shardings(mesh, state, fsdp=fsdp),
+                jax.tree.map(lambda l: batch_spec(mesh, l), batch),
+            )
+            out_sh = (in_sh[0], NamedSharding(mesh, P()))
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = fn.lower(state, batch)
+        elif kind == "prefill":
+            step = make_prefill_step(cfg)
+            params = S.abstract_params(cfg)
+            batch = S.batch_specs(cfg, shape_name, with_labels=False)
+            psh = param_shardings(mesh, params, fsdp=fsdp)
+            in_sh = (psh, jax.tree.map(lambda l: batch_spec(mesh, l), batch))
+            cache_abs = jax.eval_shape(lambda p, b: step(p, b)[1], params, batch)
+            out_sh = (batch_spec(mesh, 2), cache_shardings(mesh, cache_abs))
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = fn.lower(params, batch)
+        elif kind == "decode":
+            step = make_decode_step(cfg)
+            params = S.abstract_params(cfg)
+            token, pos, cache = S.decode_specs(cfg, shape_name)
+            psh = param_shardings(mesh, params, fsdp=fsdp)
+            csh = cache_shardings(mesh, cache)
+            logits_abs = jax.eval_shape(step, params, token, pos, cache)[0]
+            in_sh = (psh, batch_spec(mesh, token), batch_spec(mesh, pos), csh)
+            out_sh = (batch_spec(mesh, logits_abs), csh)
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = fn.lower(params, token, pos, cache)
+        else:
+            raise ValueError(kind)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    # scan-aware per-device cost from the post-SPMD HLO (see hlocost.py); the
+    # builtin cost_analysis under-counts while bodies and is kept for reference
+    hc = hlocost.analyze(compiled.as_text())
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    if kind == "train":
+        mf = model_flops(cfg, S.abstract_train_state(cfg, optimizer=optimizer), shape_name)
+    else:
+        mf = model_flops(cfg, S.abstract_params(cfg), shape_name)
+    hlo_flops_global = hc["flops"] * n_chips
+    info = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "n_chips": n_chips,
+        "compile_s": round(compile_s, 1),
+        "per_device": {
+            "hlo_gflops": hc["flops"] / 1e9,
+            "hbm_gbytes": hc["bytes"] / 1e9,
+            "collective_gbytes": hc["collectives"]["total"] / 1e9,
+            "collectives": {k: v / 1e9 for k, v in hc["collectives"].items()},
+        },
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "model_gflops_global": mf / 1e9,
+        "useful_flops_ratio": mf / max(hlo_flops_global, 1.0),
+        "per_device_bytes": {
+            "argument": getattr(mem, "argument_size_in_bytes", 0),
+            "output": getattr(mem, "output_size_in_bytes", 0),
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "peak": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "roofline": roofline(hc["flops"], hc["bytes"], hc["collectives"]["total"]),
+    }
+    return compiled, info
+
+
+def _needs_remat(cfg) -> bool:
+    # large dense/moe models at 4k x 256 need activation checkpointing to fit;
+    # enc-dec runs two stacks (encoder residuals + cross-attention), so always
+    return cfg.enc_dec or cfg.d_model * cfg.n_layers >= 2048 * 28
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = all_archs() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    compiled, info = lower_cell(
+                        arch, shape, multi_pod=mp, fsdp=not args.no_fsdp, remat=args.remat
+                    )
+                except Exception as e:  # noqa: BLE001 -- report, don't abort the sweep
+                    info = {"arch": arch, "shape": shape,
+                            "mesh": "2x16x16" if mp else "16x16", "error": repr(e)[:500]}
+                    print(f"[FAIL] {tag}: {info['error']}", flush=True)
+                    results.append(info)
+                    continue
+                if compiled is None:
+                    print(f"[SKIP] {tag}: {info['skipped']}", flush=True)
+                else:
+                    r = info["roofline"]
+                    print(
+                        f"[OK]   {tag}: compile={info['compile_s']}s "
+                        f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                        f"collective={r['collective_s']:.4f}s -> {r['bottleneck']} "
+                        f"peak/device={info['per_device_bytes']['peak']/2**30:.2f}GiB",
+                        flush=True,
+                    )
+                results.append(info)
+                del compiled
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+    failed = [r for r in results if "error" in r]
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,383 @@
+"""Scan-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every computation ONCE, so
+anything inside a ``while`` loop (every ``lax.scan`` -- our layer stacks, flash
+attention chunk loops) is under-counted by its trip count.  This module parses
+the scheduled HLO text, recovers static trip counts from loop conditions, and
+propagates execution counts through the call graph, yielding:
+
+  - flops:        2 * prod(result_dims) * prod(contracting_dims) per dot,
+                  weighted by execution count
+  - bytes:        operand+result bytes of top-level (fusion-boundary) ops,
+                  approximating HBM traffic, weighted by execution count
+  - collectives:  bytes moved per collective kind, weighted by execution count
+                  (convention: max array on the instruction line)
+
+Validated in tests/test_hlocost.py against analytically known programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred|c64|c128)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# op kinds whose operands/results cross the HBM boundary (roughly: anything
+# that is a scheduled thunk, i.e. not free metadata ops)
+_TRAFFIC_KINDS = {
+    "fusion", "dot", "convolution", "copy", "dynamic-slice", "dynamic-update-slice",
+    "scatter", "gather", "sort", "reduce", "transpose", "broadcast", "concatenate",
+    "convert", "custom-call", "reduce-window", "select-and-scatter", "pad", "reverse",
+    "slice", "iota", "rng", "rng-bit-generator", "exp", "add", "multiply", "tanh",
+    "cholesky", "triangular-solve", "reshape",
+}
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "while", "conditional", "call", "after-all", "add-dependency",
+               "partition-id", "replica-id", "domain", "opt-barrier"}
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for t, dims in _ARRAY_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[t]
+    return total
+
+
+def _array_dims(type_str: str):
+    """dims of the FIRST array in a type string, or None."""
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    operands: list
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    params: dict  # param name -> type str
+    fused: bool = False  # body of a fusion op (not a scheduling boundary)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\((.*)$")
+
+
+def parse_module(text: str):
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HDR.match(line.strip())
+        if m and (cur is None):
+            is_entry, name, params_str, _ret = m.groups()
+            params = {}
+            for p in re.split(r",\s*(?![^\[]*\])", params_str):
+                p = p.strip()
+                if not p:
+                    continue
+                pm = re.match(r"([\w.\-]+)\s*:\s*(.+)", p)
+                if pm:
+                    params[pm.group(1)] = pm.group(2)
+            cur = Computation(name=name, ops=[], params=params)
+            if is_entry:
+                entry = name
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            om = _OP_RE.match(line)
+            if om:
+                name, type_str, kind, rest = om.groups()
+                # operand names: %foo references before the closing paren
+                depth = 1
+                args = []
+                buf = ""
+                for ch in rest:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            args.append(buf)
+                            buf = ""
+                            break
+                    if depth >= 1 and not (ch == "(" and depth == 2 and False):
+                        buf += ch
+                operand_names = re.findall(r"%([\w.\-]+)", args[0] if args else "")
+                cur.ops.append(Op(name=name, type_str=type_str, kind=kind,
+                                  operands=operand_names, line=line.strip()))
+    return comps, entry
+
+
+def _mark_fused(comps):
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if m and m.group(1) in comps:
+                    comps[m.group(1)].fused = True
+        # wrapped_* computations are always fusion bodies on CPU
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Largest s32 constant in the condition computation (scan trip count)."""
+    best = None
+    c = comps.get(cond_name)
+    if c is None:
+        return 1
+    names = [cond_name]
+    # include computations the condition fuses into
+    for op in c.ops:
+        m = re.search(r"calls=%?([\w.\-]+)", op.line)
+        if m:
+            names.append(m.group(1))
+    for n in names:
+        cc = comps.get(n)
+        if cc is None:
+            continue
+        for op in cc.ops:
+            if op.kind == "constant" and op.type_str.startswith("s32"):
+                m = re.search(r"constant\((-?\d+)\)", op.line)
+                if m:
+                    v = int(m.group(1))
+                    if best is None or v > best:
+                        best = v
+    return best if best and best > 0 else 1
+
+
+def _call_edges(comps):
+    """caller -> [(callee, multiplier per caller execution)]."""
+    edges = defaultdict(list)
+    for name, c in comps.items():
+        for op in c.ops:
+            if op.kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if mb and mc:
+                    t = _trip_count(comps, mc.group(1))
+                    edges[name].append((mb.group(1), float(t)))
+                    edges[name].append((mc.group(1), float(t + 1)))
+            elif op.kind == "conditional":
+                for m in re.finditer(
+                    r"(?:true_computation|false_computation)=%?([\w.\-]+)", op.line
+                ):
+                    edges[name].append((m.group(1), 1.0))
+                m = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+                if m:
+                    for b in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                        edges[name].append((b, 1.0))
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line):
+                    edges[name].append((m.group(1), 1.0))
+    return edges
+
+
+def exec_counts(comps, entry: str):
+    """Execution count per computation: topological propagation over the
+    (acyclic) HLO call graph, with while bodies weighted by trip count."""
+    edges = _call_edges(comps)
+    order = []
+    seen = set()
+
+    def dfs(n):
+        if n in seen or n not in comps:
+            return
+        seen.add(n)
+        for callee, _ in edges.get(n, ()):
+            dfs(callee)
+        order.append(n)
+
+    dfs(entry)
+    counts = defaultdict(float)
+    counts[entry] = 1.0
+    for n in reversed(order):  # callers before callees
+        for callee, k in edges.get(n, ()):
+            counts[callee] += counts[n] * k
+    return counts
+
+
+def _dot_flops(comps, comp, op) -> float:
+    res_dims = _array_dims(op.type_str) or []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    lhs_c = [int(x) for x in m.group(1).split(",") if x] if m else []
+    lhs_type = _resolve_operand_type(comps, comp, op, 0)
+    lhs_dims = _array_dims(lhs_type or "") or []
+    contract = 1
+    for d in lhs_c:
+        if d < len(lhs_dims):
+            contract *= lhs_dims[d]
+    out = 1
+    for d in res_dims:
+        out *= d
+    return 2.0 * out * contract
+
+
+def _resolve_operand_type(comps, comp, op, idx) -> str | None:
+    if idx >= len(op.operands):
+        return None
+    target = op.operands[idx]
+    for o in comp.ops:
+        if o.name == target:
+            return o.type_str
+    if target in comp.params:
+        return comp.params[target]
+    return None
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_module(text)
+    _mark_fused(comps)
+    counts = exec_counts(comps, entry)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    for name, comp in comps.items():
+        mult = counts.get(name, 0.0)
+        if mult == 0:
+            continue
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += mult * _dot_flops(comps, comp, op)
+            base_kind = re.sub(r"-(start|done)$", "", op.kind)
+            if base_kind in COLLECTIVES and not op.kind.endswith("-done"):
+                coll[base_kind] += mult * max(
+                    (_array_bytes(t) for t in _operand_and_result_types(comps, comp, op)),
+                    default=0,
+                )
+            if not comp.fused and op.kind not in _NO_TRAFFIC:
+                bytes_hbm += mult * _op_traffic(comps, comp, op)
+    coll["total"] = sum(coll[k] for k in COLLECTIVES)
+    return {"flops": flops, "bytes": bytes_hbm, "collectives": coll}
+
+
+def _fusion_callee(comps, op):
+    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+    return comps.get(m.group(1)) if m else None
+
+
+def _fusion_root_bytes(callee) -> float | None:
+    """Output bytes of a fusion, honoring in-place dynamic-update-slice roots:
+    a scan accumulator fusion writes only its update slice, not the buffer."""
+    root = next((o for o in callee.ops if o.line.startswith("ROOT")), None)
+    if root is None:
+        return None
+
+    def op_out_bytes(o):
+        if o.kind == "dynamic-update-slice":
+            # bytes written = the update (operand 1)
+            for cand in callee.ops:
+                if cand.name == (o.operands[1] if len(o.operands) > 1 else ""):
+                    return _array_bytes(cand.type_str)
+            t = callee.params.get(o.operands[1]) if len(o.operands) > 1 else None
+            return _array_bytes(t) if t else _array_bytes(o.type_str)
+        return _array_bytes(o.type_str)
+
+    if root.kind == "tuple":
+        total = 0.0
+        for nm in root.operands:
+            defn = next((o for o in callee.ops if o.name == nm), None)
+            if defn is not None:
+                total += op_out_bytes(defn)
+            elif nm in callee.params:
+                total += 0.0  # pass-through of an input: no new write
+        return total
+    return op_out_bytes(root)
+
+
+def _fusion_operand_bytes(callee, param_idx, full_bytes) -> float:
+    """Input bytes of fusion operand ``param_idx``: if the parameter is only
+    consumed via dynamic-slice (scan reading one layer's weights) or is only
+    the destination of in-place dynamic-update-slice, charge the slice."""
+    pnames = list(callee.params)
+    if param_idx >= len(pnames):
+        return full_bytes
+    pname = pnames[param_idx]
+    uses = [o for o in callee.ops if pname in o.operands]
+    if not uses:
+        return 0.0
+    total = 0.0
+    for o in uses:
+        if o.kind == "dynamic-slice":
+            total += _array_bytes(o.type_str)
+        elif o.kind == "dynamic-update-slice" and o.operands and o.operands[0] == pname:
+            total += 0.0  # aliased in-place destination: no read of the buffer
+        elif o.kind in ("get-tuple-element", "bitcast", "tuple"):
+            total += 0.0
+        else:
+            return full_bytes  # generic use: charge the full operand once
+    return total
+
+
+def _op_traffic(comps, comp, op) -> float:
+    """Approximate HBM bytes moved by one execution of a scheduled op.
+
+    Slicing/updating ops only touch the slice, NOT the full operand -- charging
+    the whole operand would overcount scan parameter slicing by the trip count.
+    """
+    res = _array_bytes(op.type_str)
+    if op.kind in ("dynamic-slice", "slice", "gather", "broadcast", "iota", "rng",
+                   "rng-bit-generator"):
+        return 2.0 * res
+    if op.kind in ("dynamic-update-slice", "scatter"):
+        # read+write of the updated window (operand 1 is the update)
+        t = _resolve_operand_type(comps, comp, op, 1)
+        upd = _array_bytes(t) if t else res
+        return 2.0 * upd
+    if op.kind in ("transpose", "copy", "convert", "reshape", "pad", "reverse",
+                   "concatenate"):
+        return 2.0 * res
+    if op.kind == "fusion":
+        callee = _fusion_callee(comps, op)
+        if callee is not None:
+            out_b = _fusion_root_bytes(callee)
+            sz = float(out_b if out_b is not None else res)
+            for i in range(len(op.operands)):
+                t = _resolve_operand_type(comps, comp, op, i)
+                if t:
+                    sz += _fusion_operand_bytes(callee, i, _array_bytes(t))
+            return sz
+    sz = float(res)
+    for i in range(len(op.operands)):
+        t = _resolve_operand_type(comps, comp, op, i)
+        if t:
+            sz += _array_bytes(t)
+    return sz
+
+
+def _operand_and_result_types(comps, comp, op):
+    types = [op.type_str]
+    for i in range(len(op.operands)):
+        t = _resolve_operand_type(comps, comp, op, i)
+        if t:
+            types.append(t)
+    return types

@@ -1,0 +1,94 @@
+"""Batched serving launcher: continuous-batch decode loop on a sharded mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \
+        --batch 4 --prompt-len 16 --gen 32
+
+Implements the production decode loop shape: one jit'd prefill (builds the KV
+cache for a batch of prompts), then a jit'd per-token decode step with
+donated cache buffers; per-sequence positions support ragged prompt lengths.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..distributed.constraints import activation_sharding
+from ..distributed.sharding import batch_spec, cache_shardings, param_shardings
+from ..launch.mesh import make_local_mesh
+from ..models import init_params, pad_cache, prefill
+from ..models.frontends import fake_audio_embeds, fake_img_embeds
+from ..train.steps import make_decode_step
+
+
+def run(args):
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = make_local_mesh(model=args.model_parallel)
+    key = jax.random.PRNGKey(args.seed)
+
+    with mesh, activation_sharding(dp=("data",), tp="model", tp_size=mesh.shape["model"], mesh=mesh):
+        params = init_params(cfg, key)
+        psh = param_shardings(mesh, jax.eval_shape(lambda: params), fsdp=False)
+        params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, psh)
+
+        b, plen, gen = args.batch, args.prompt_len, args.gen
+        prompts = jax.random.randint(key, (b, plen), 0, cfg.vocab)
+        batch = {"tokens": prompts}
+        if cfg.n_img_tokens:
+            batch["img_embeds"] = fake_img_embeds(cfg, b)
+        if cfg.enc_dec:
+            batch["audio_embeds"] = fake_audio_embeds(cfg, b, plen)
+
+        t0 = time.time()
+        logits, cache = jax.jit(lambda p, bt: prefill(cfg, p, bt))(params, batch)
+        cache = pad_cache(cfg, cache, plen + gen)
+        csh = cache_shardings(mesh, jax.eval_shape(lambda: cache))
+        cache = jax.tree.map(lambda x, s: jax.device_put(x, s), cache, csh)
+        t_prefill = time.time() - t0
+
+        decode = jax.jit(
+            make_decode_step(cfg),
+            in_shardings=(psh, batch_spec(mesh, 1), batch_spec(mesh, 1), csh),
+            out_shardings=(batch_spec(mesh, 2), csh),
+            donate_argnums=(3,),
+        )
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens = [tok]
+        t0 = time.time()
+        for i in range(gen - 1):
+            pos = jnp.full((b,), plen + i, jnp.int32)
+            logits, cache = decode(params, tok, pos, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+
+    gen_tokens = np.stack([np.asarray(t) for t in out_tokens], 1)
+    print(f"[serve] prefill {plen} tokens x {b} seqs: {t_prefill*1e3:.1f} ms")
+    print(f"[serve] decode {gen-1} steps: {t_decode*1e3:.1f} ms "
+          f"({(gen-1)*b/max(t_decode,1e-9):.1f} tok/s)")
+    print(f"[serve] sample continuation: {gen_tokens[0, :16].tolist()}")
+    return {"prefill_s": t_prefill, "decode_s": t_decode, "tokens": gen_tokens}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+    return run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) for every (arch x shape)
+cell -- weak-type-correct, shardable, zero device allocation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_cache, init_params
+from ..models.config import SHAPES, ArchConfig
+from ..optim import adamw_init
+
+
+def abstract_train_state(cfg: ArchConfig, optimizer: str = "adamw"):
+    def build():
+        from ..train.steps import init_train_state
+
+        return init_train_state(cfg, jax.random.PRNGKey(0), optimizer=optimizer)
+
+    return jax.eval_shape(build)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str, *, with_labels: bool):
+    """Token/label/frontend-embedding specs for full-sequence steps."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = sds((b, s), jnp.int32)
+    if cfg.n_img_tokens > 0:
+        batch["img_embeds"] = sds((b, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.enc_dec:
+        # mechanical: encoder frame count mirrors the assigned seq length
+        batch["audio_embeds"] = sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape_name: str, *, enc_len: int = 1500):
+    """(token, pos, cache) specs for one-token decode with a seq_len cache."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, enc_len=enc_len if cfg.enc_dec else None)
+    )
+    return sds((b,), jnp.int32), sds((b,), jnp.int32), cache
+
+
+def cell_runnable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """Shape-cell applicability per the assignment rules."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention; skipped for full-attention arch"
+    return True, ""

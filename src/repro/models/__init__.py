@@ -1,0 +1,22 @@
+from .config import SHAPES, ArchConfig, MoECfg
+from .lm import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    pad_cache,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "MoECfg",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "param_count",
+    "prefill",
+]

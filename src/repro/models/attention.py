@@ -1,0 +1,164 @@
+"""GQA attention: chunked flash-style training/prefill path + cached decode path.
+
+The training path is a blocked online-softmax attention executed as ONE
+`lax.scan` over the STATIC list of valid (q-block, kv-block) pairs.  For causal
+attention, blocks entirely above the diagonal are never enumerated, so -- unlike
+the naive "scan everything and mask" formulation -- no FLOPs or score traffic
+are spent on masked-out blocks (~2x attention compute saved at 32k; measured in
+EXPERIMENTS.md SSPerf iteration 1).  Per-device live memory is
+O(q_chunk * kv_chunk), which is what fits the prefill_32k cells into v5e HBM.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.constraints import constrain, tp_size
+
+NEG_INF = -1e30
+
+
+def _block_pairs(nq, nk, qc, kc, sk0, causal, q_offset):
+    """Static list of (qi, ki) whose score block is not fully masked."""
+    pairs = []
+    for qi in range(nq):
+        q_hi = q_offset + (qi + 1) * qc - 1  # highest query position in block
+        for ki in range(nk):
+            k_lo = ki * kc
+            if k_lo >= sk0:
+                continue  # fully-padded kv block
+            if causal and k_lo > q_hi:
+                continue  # fully above the diagonal
+            pairs.append((qi, ki))
+    return pairs
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, q_chunk=512, kv_chunk=1024):
+    """q: (b, sq, H, hd); k, v: (b, sk, KV, hd) with H % KV == 0.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (for chunked
+    prefill continuation).  Returns (b, sq, H, hd) in q.dtype.
+    """
+    b, sq0, H, hd = q.shape
+    sk0, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qc = min(q_chunk, sq0)
+    kc = min(kv_chunk, sk0)
+    # pad ragged sequence lengths up to chunk multiples; padded keys are masked
+    pq, pk = (-sq0) % qc, (-sk0) % kc
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    sq, sk = sq0 + pq, sk0 + pk
+    nq, nk = sq // qc, sk // kc
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qr = q.reshape(b, nq, qc, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)  # (nq,b,qc,KV,G,hd)
+    kr = k.reshape(b, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)  # (nk,b,kc,KV,hd)
+    vr = v.reshape(b, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+    # GQA sharding strategy (see EXPERIMENTS.md SSPerf iteration 2):
+    #   * KV divisible by the model axis (MHA-ish): shard HEADS -- scores local.
+    #   * KV smaller (GQA, e.g. 4 kv heads on a 16-way axis): unconstrained
+    #     GSPMD shards the score CONTRACTION (hd) and all-reduces a full score
+    #     block per (q,k) pair (measured: 1.3 TB/device on starcoder2-7b
+    #     prefill_32k).  Instead shard q's within-block rows (qc) on the model
+    #     axis and replicate the small kv blocks -- scores entirely local.
+    tp = tp_size()
+    head_sharded = tp is not None and KV % tp == 0
+    seq_sharded = tp is not None and not head_sharded and qc % tp == 0
+    if head_sharded:
+        qr = constrain(qr, None, "dp", None, "tp", None, None)
+        kr = constrain(kr, None, "dp", None, "tp", None)
+        vr = constrain(vr, None, "dp", None, "tp", None)
+    elif seq_sharded:
+        qr = constrain(qr, None, "dp", "tp", None, None, None)
+        kr = constrain(kr, None, "dp", None, None, None)
+        vr = constrain(vr, None, "dp", None, None, None)
+
+    pairs = _block_pairs(nq, nk, qc, kc, sk0, causal, q_offset)
+    qi_arr = jnp.asarray(np.array([p[0] for p in pairs], np.int32))
+    ki_arr = jnp.asarray(np.array([p[1] for p in pairs], np.int32))
+    # a pair starts a new q-block iff its qi differs from the previous pair's
+    first_arr = jnp.asarray(
+        np.array([i == 0 or pairs[i][0] != pairs[i - 1][0] for i in range(len(pairs))]))
+
+    q_pos0 = jnp.arange(qc, dtype=jnp.int32)
+    k_pos0 = jnp.arange(kc, dtype=jnp.int32)
+
+    m0 = jnp.full((b, KV, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, KV, G, qc), jnp.float32)
+    a0 = jnp.zeros((b, KV, G, qc, hd), jnp.float32)
+    out0 = jnp.zeros((nq, b, qc, H, hd), q.dtype)
+
+    def pair_step(carry, xs):
+        m, l, acc, out = carry
+        qi, ki, first = xs
+        # reset the online-softmax state at the start of each q-block
+        m = jnp.where(first, m0, m)
+        l = jnp.where(first, l0, l)
+        acc = jnp.where(first, a0, acc)
+
+        qb = jax.lax.dynamic_index_in_dim(qr, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kr, ki, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vr, ki, 0, keepdims=False)
+        qb32 = qb.astype(jnp.float32) * scale
+
+        s = jnp.einsum("bqKGh,bkKh->bKGqk", qb32, kb.astype(jnp.float32))
+        if head_sharded:
+            s = constrain(s, "dp", "tp", None, None, None)
+        elif seq_sharded:
+            s = constrain(s, "dp", None, None, "tp", None)
+        q_pos = q_offset + qi * qc + q_pos0  # (qc,)
+        k_pos = ki * kc + k_pos0
+        if causal:
+            mask = k_pos[None, :] > q_pos[:, None]
+        else:
+            mask = jnp.zeros((qc, kc), bool)
+        mask = mask | (k_pos >= sk0)[None, :]  # padded keys
+        s = jnp.where(mask[None, None, None], NEG_INF, s)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bKGqk,bkKh->bKGqh", p, vb.astype(jnp.float32))
+        m = m_new
+
+        # normalize and write this q-block's running output; the LAST pair of
+        # the block performs the final (correct) write
+        o = acc / jnp.maximum(l[..., None], 1e-30)  # (b,KV,G,qc,hd)
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, qc, H, hd).astype(q.dtype)
+        out = jax.lax.dynamic_update_index_in_dim(out, o, qi, 0)
+        return (m, l, acc, out), None
+
+    (_, _, _, out), _ = jax.lax.scan(pair_step, (m0, l0, a0, out0),
+                                     (qi_arr, ki_arr, first_arr))
+    if head_sharded:
+        out = constrain(out, None, "dp", None, "tp", None)
+    elif seq_sharded:
+        out = constrain(out, None, "dp", "tp", None, None)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, H, hd)[:, :sq0]
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention against a (possibly padded) KV cache.
+
+    q: (b, H, hd); k_cache, v_cache: (b, S, KV, hd); pos: (b,) number of valid
+    cache entries (the new token's position).  Returns (b, H, hd).
+    """
+    b, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(b, KV, G, hd).astype(jnp.float32) / jnp.sqrt(float(hd))
+    s = jnp.einsum("bKGh,bsKh->bKGs", qr, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] <= pos[:, None]  # (b, S)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKGs,bsKh->bKGh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, H, hd).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Shared building blocks: norms, RoPE, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg, x, p, prefix):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p[f"{prefix}_scale"])
+    return layernorm(x, p[f"{prefix}_scale"], p[f"{prefix}_bias"])
+
+
+def norm_params(cfg, d):
+    if cfg.norm == "rmsnorm":
+        return {"_scale": jnp.ones((d,), jnp.float32)}
+    return {"_scale": jnp.ones((d,), jnp.float32), "_bias": jnp.zeros((d,), jnp.float32)}
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., s, n_heads, hd); positions: (..., s) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    sin = jnp.sin(angles)[..., None, :]  # (..., s, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = float(1.0 / np.sqrt(fan_in))  # python float: weak type, preserves dtype
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,26 @@
+"""Modality frontend STUBS (per the assignment: [vlm]/[audio] entries specify
+the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers produce deterministic fake embeddings for smoke tests and the
+shape/dtype stand-ins used by the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_img_embeds(cfg, batch_size: int, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.normal(
+        key, (batch_size, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+    ) * 0.02
+
+
+def fake_audio_embeds(cfg, batch_size: int, n_frames: int, key=None):
+    key = key if key is not None else jax.random.PRNGKey(1)
+    return jax.random.normal(
+        key, (batch_size, n_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+    ) * 0.02

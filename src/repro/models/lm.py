@@ -1,0 +1,249 @@
+"""Top-level LM: embedding, scan-over-periods stack, tied unembedding.
+
+Public entry points (all pure functions of (cfg, params, ...)):
+
+  init_params(cfg, key)                 -> params pytree
+  forward(cfg, params, batch)           -> (logits, aux)      [train]
+  prefill(cfg, params, batch)           -> (last_logits, cache)
+  decode_step(cfg, params, token, pos, cache [, batch]) -> (logits, cache)
+
+``batch`` is a dict: tokens (b, s) int32, plus modality stubs --
+img_embeds (b, n_img, d) for vlm, audio_embeds (b, s_enc, d) for audio.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm as ssm_lib
+from . import xlstm as xlstm_lib
+from ..distributed.constraints import constrain
+from .common import dense_init, norm_params, apply_norm
+from .config import ArchConfig
+from .transformer import block_apply_decode, block_apply_seq, block_params
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------- params
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    kE, kB, kEnc, kF = jax.random.split(key, 4)
+    params = {
+        "embed": dense_init(kE, (cfg.vocab, cfg.d_model), in_axis=-1, dtype=dtype),
+        "final_norm": norm_params(cfg, cfg.d_model),
+    }
+
+    def stack_blocks(key):
+        keys = jax.random.split(key, cfg.n_periods)
+
+        def one_period(k):
+            pk = jax.random.split(k, len(cfg.pattern))
+            return {
+                f"b{i}": block_params(kind, pk[i], cfg, dtype)
+                for i, kind in enumerate(cfg.pattern)
+            }
+
+        return jax.vmap(one_period)(jnp.stack(keys))
+
+    params["blocks"] = stack_blocks(kB)
+    if cfg.enc_dec:
+        # encoder stack is bidirectional attention with the same geometry
+        enc_cfg = cfg
+        keys = jax.random.split(kEnc, cfg.n_periods)
+
+        def one_enc(k):
+            return {"b0": block_params("attn_bidir_mlp", k, enc_cfg, dtype)}
+
+        params["enc_blocks"] = jax.vmap(one_enc)(jnp.stack(keys))
+        params["enc_final_norm"] = norm_params(cfg, cfg.d_model)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ------------------------------------------------------------------- helpers
+
+
+def _embed_tokens(cfg, params, batch):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if cfg.n_img_tokens > 0 and "img_embeds" in batch:
+        n = cfg.n_img_tokens
+        img = batch["img_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x[:, n:, :]], axis=1)
+    return x
+
+
+def _run_stack(cfg, params_blocks, x, positions, *, mode, enc_out=None, remat=False):
+    """scan over periods; returns (x, caches, aux_sum).
+
+    ``remat=True`` checkpoints each PERIOD: only period-boundary residuals are
+    saved; everything inside a period is recomputed in the backward pass.  This
+    is the per-layer policy (whole-forward checkpointing would materialize all
+    layers' recomputed intermediates at once -- measured at ~3 TB/device for
+    stablelm train_4k)."""
+    aux0 = {"moe_balance": jnp.zeros((), jnp.float32)} if cfg.moe is not None else {}
+
+    def period_fn(carry, pparams):
+        x, aux_acc = carry
+        # anchor the residual stream: batch on dp, d_model replicated (see
+        # distributed/constraints.py -- keeps FSDP weight shardings out of
+        # the activations)
+        x = constrain(x, "dp", None, None)
+        caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, cache, aux = block_apply_seq(
+                cfg, kind, pparams[f"b{i}"], x, positions, mode=mode, enc_out=enc_out
+            )
+            if cache is not None:
+                caches[f"b{i}"] = cache
+            for k, v in aux.items():
+                aux_acc = {**aux_acc, k: aux_acc[k] + v}
+        return (x, aux_acc), caches
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+    (x, aux), caches = jax.lax.scan(period_fn, (x, aux0), params_blocks)
+    return x, caches, aux
+
+
+def _run_enc_stack(cfg, params, audio_embeds):
+    x = audio_embeds.astype(_dtype(cfg))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+
+    def period_fn(x, pparams):
+        x, _, _ = block_apply_seq(cfg, "attn_bidir_mlp", pparams["b0"], x, positions, mode="train")
+        return x, None
+
+    x, _ = jax.lax.scan(period_fn, x, params["enc_blocks"])
+    return apply_norm(cfg, x, params["enc_final_norm"], "")
+
+
+# ------------------------------------------------------------------- train
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat: bool = False):
+    """Training forward: returns (logits (b, s, vocab), aux losses dict)."""
+    if cfg.ode_depth:
+        from .node import forward_ode
+
+        return forward_ode(cfg, params, batch)
+    x = _embed_tokens(cfg, params, batch)
+    x = constrain(x, "dp", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _run_enc_stack(cfg, params, batch["audio_embeds"])
+    x, _, aux = _run_stack(
+        cfg, params["blocks"], x, positions, mode="train", enc_out=enc_out, remat=remat
+    )
+    x = apply_norm(cfg, x, params["final_norm"], "")
+    logits = x @ params["embed"].T
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, aux
+
+
+# ------------------------------------------------------------------- serving
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Full-sequence forward that materializes caches; returns (last_logits, cache)."""
+    x = _embed_tokens(cfg, params, batch)
+    x = constrain(x, "dp", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _run_enc_stack(cfg, params, batch["audio_embeds"])
+    x, caches, _ = _run_stack(cfg, params["blocks"], x, positions, mode="prefill", enc_out=enc_out)
+    x = apply_norm(cfg, x[:, -1:, :], params["final_norm"], "")[:, 0]
+    logits = x @ params["embed"].T
+    logits = constrain(logits, "dp", "tp")
+    return logits, caches
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int, enc_len: int | None = None):
+    """Zero caches for decode-from-scratch (and for dry-run input specs)."""
+    dtype = _dtype(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    caches = {}
+    Dkv = KV * hd  # flat head dim: evenly shardable on the model axis
+    for i, kind in enumerate(cfg.pattern):
+        if kind in ("attn_mlp", "attn_moe"):
+            c = {
+                "k": jnp.zeros((cfg.n_periods, batch_size, cache_len, Dkv), dtype),
+                "v": jnp.zeros((cfg.n_periods, batch_size, cache_len, Dkv), dtype),
+            }
+        elif kind == "attn_cross_mlp":
+            el = enc_len or cache_len
+            c = {
+                "k": jnp.zeros((cfg.n_periods, batch_size, cache_len, Dkv), dtype),
+                "v": jnp.zeros((cfg.n_periods, batch_size, cache_len, Dkv), dtype),
+                "xk": jnp.zeros((cfg.n_periods, batch_size, el, Dkv), dtype),
+                "xv": jnp.zeros((cfg.n_periods, batch_size, el, Dkv), dtype),
+            }
+        elif kind in ("mamba_mlp", "mamba_moe"):
+            st = ssm_lib.mamba_init_state(cfg, batch_size, dtype)
+            c = jax.tree.map(lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), st)
+        elif kind == "mlstm":
+            st = xlstm_lib.mlstm_init_state(cfg, batch_size)
+            c = jax.tree.map(lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), st)
+        elif kind == "slstm":
+            st = xlstm_lib.slstm_init_state(cfg, batch_size, dtype)
+            c = jax.tree.map(lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), st)
+        else:
+            raise ValueError(kind)
+        caches[f"b{i}"] = c
+    return caches
+
+
+def pad_cache(cfg: ArchConfig, cache, cache_len: int):
+    """Grow attention KV caches (from prefill, length s) to ``cache_len`` so
+    decode can continue past the prefill length.  SSM/xLSTM states are O(1)
+    and pass through unchanged."""
+
+    def pad(path_key, c):
+        out = dict(c)
+        for name in ("k", "v"):
+            if name in c:
+                arr = c[name]
+                extra = cache_len - arr.shape[2]
+                if extra > 0:
+                    pad_widths = [(0, 0)] * arr.ndim
+                    pad_widths[2] = (0, extra)
+                    out[name] = jnp.pad(arr, pad_widths)
+        return out
+
+    return {k: pad(k, v) if isinstance(v, dict) and ("k" in v or "v" in v) else v for k, v in cache.items()}
+
+
+def decode_step(cfg: ArchConfig, params, token, pos, cache):
+    """One decode step.  token: (b,) int32; pos: (b,) positions; cache: stacked
+    per-period states.  Returns (logits (b, vocab), new cache)."""
+    x = params["embed"][token]  # (b, d)
+    x = constrain(x, "dp", None)
+
+    def period_fn(x, scanned):
+        pparams, pcache = scanned
+        x = constrain(x, "dp", None)
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            x, st = block_apply_decode(cfg, kind, pparams[key], x, pos, pcache[key])
+            new_cache[key] = st
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(period_fn, x, (params["blocks"], cache))
+    x = apply_norm(cfg, x[:, None, :], params["final_norm"], "")[:, 0]
+    logits = x @ params["embed"].T
+    logits = constrain(logits, "dp", "tp")
+    return logits, new_cache

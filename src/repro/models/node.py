@@ -1,0 +1,56 @@
+"""Continuous-depth ("neural ODE") execution of a transformer block stack,
+driven by the repro.core batch-parallel solver -- the integration point between
+the paper's technique and the LM substrate.
+
+dx/dt = block(x, t), t in [0, 1], weight-tied across depth (n_periods must be
+1).  The ODE "batch" is the set of token vectors, so every token adapts its own
+step size -- the per-instance independence of torchode at token granularity.
+Used on reduced configs (smoke tests, examples); see DESIGN.md
+SS5 Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import solve_ivp_scan
+from .common import apply_norm
+from .transformer import block_apply_seq
+
+
+def forward_ode(cfg, params, batch):
+    from .lm import _embed_tokens  # local import to avoid cycle
+
+    assert cfg.n_periods == 1, "ode_depth requires a weight-tied (single-period) stack"
+    x = _embed_tokens(cfg, params, batch)
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    pparams = jax.tree.map(lambda a: a[0], params["blocks"])  # drop period axis
+
+    def dyn(t, y, _args):
+        # y: (b, s*d) -- each sequence is one ODE instance
+        h = y.reshape(b, s, d).astype(jnp.dtype(cfg.dtype))
+        out = h
+        for i, kind in enumerate(cfg.pattern):
+            out, _, _ = block_apply_seq(
+                cfg, kind, pparams[f"b{i}"], out, positions, mode="train"
+            )
+        return (out - h).reshape(b, s * d).astype(y.dtype)
+
+    y0 = x.reshape(b, s * d).astype(jnp.float32)
+    sol = solve_ivp_scan(
+        dyn,
+        y0,
+        None,
+        t_start=0.0,
+        t_end=1.0,
+        method="bosh3",
+        rtol=1e-2,
+        atol=1e-3,
+        max_steps=cfg.ode_steps,
+    )
+    x = sol.ys.reshape(b, s, d).astype(jnp.dtype(cfg.dtype))
+    x = apply_norm(cfg, x, params["final_norm"], "")
+    logits = x @ params["embed"].T
+    return logits, {"ode_steps": sol.stats["n_steps"].mean()}

@@ -1,0 +1,122 @@
+"""Mamba selective-SSM block (jamba's sequence mixer).
+
+Training/prefill uses a parallel associative scan over time (the TPU-native
+replacement for the CUDA selective-scan kernel): the recurrence
+h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t  is a first-order linear
+recurrence with diagonal transition, which `lax.associative_scan` evaluates in
+O(log s) depth.  d_inner shards on the model axis, so the (b, s, d_inner, N)
+scan elements stay within per-device HBM.
+
+Decode carries (h, conv window) state and costs O(1) per token -- this is what
+makes jamba a `subquadratic` arch for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+
+def mamba_params(key, cfg, dtype):
+    d, di, N, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_, cfg.ssm_conv
+    ks = split_keys(key, 7)
+    import numpy as np
+
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (K, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (R, di), dtype=dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _ssm_inputs(cfg, p, x):
+    """Shared front half: projections, conv, dt/B/C. x: (b, s, d)."""
+    N, R = cfg.ssm_state, cfg.dt_rank_
+    xz = x @ p["in_proj"]  # (b, s, 2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    return xi, z
+
+
+def _dt_b_c(cfg, p, u):
+    N, R = cfg.ssm_state, cfg.dt_rank_
+    dbc = u @ p["x_proj"]  # (b, s, R+2N)
+    dt = jax.nn.softplus(
+        dbc[..., :R] @ p["dt_proj"] + p["dt_bias"].astype(dbc.dtype)
+    ).astype(jnp.float32)  # (b, s, di)
+    B = dbc[..., R : R + N].astype(jnp.float32)  # (b, s, N)
+    C = dbc[..., R + N :].astype(jnp.float32)
+    return dt, B, C
+
+
+def _causal_conv(p, u, K):
+    """u: (b, s, di); depthwise causal conv, width K."""
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1], :] * p["conv_w"][i] for i in range(K))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_forward(cfg, p, x):
+    """Parallel (training/prefill) path. x: (b, s, d) -> (b, s, d)."""
+    N = cfg.ssm_state
+    A = -jnp.exp(p["A_log"])  # (di, N)
+    xi, z = _ssm_inputs(cfg, p, x)
+    u = _causal_conv(p, xi, cfg.ssm_conv)  # (b, s, di)
+    dt, B, C = _dt_b_c(cfg, p, u)
+
+    uf = u.astype(jnp.float32)
+    # discretize: a_t = exp(dt*A) (b,s,di,N); b_t = dt*B*u
+    dA = jnp.exp(dt[..., None] * A)  # (b, s, di, N)
+    dBu = (dt * uf)[..., None] * B[..., None, :]  # (b, s, di, N)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBu), axis=1)  # (b, s, di, N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C) + uf * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_init_state(cfg, batch, dtype):
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+    }
+
+
+def mamba_decode(cfg, p, x, state):
+    """One-token step. x: (b, d) -> (b, d); state carries (h, conv window)."""
+    K, N = cfg.ssm_conv, cfg.ssm_state
+    A = -jnp.exp(p["A_log"])
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (b, di)
+
+    win = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)  # (b, K, di)
+    u = jax.nn.silu(jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"])
+
+    dbc = u @ p["x_proj"]
+    R = cfg.dt_rank_
+    dt = jax.nn.softplus(dbc[..., :R] @ p["dt_proj"] + p["dt_bias"].astype(dbc.dtype)).astype(
+        jnp.float32
+    )
+    B = dbc[..., R : R + N].astype(jnp.float32)
+    C = dbc[..., R + N :].astype(jnp.float32)
+
+    uf = u.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A)  # (b, di, N)
+    h = state["h"] * dA + (dt * uf)[..., None] * B[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C) + uf * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    new_state = {"h": h, "conv": win[:, 1:, :]}
+    return y @ p["out_proj"], new_state

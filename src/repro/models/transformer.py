@@ -1,0 +1,305 @@
+"""Model assembly: scan-over-periods layer stacks for all 10 assigned archs.
+
+A config's ``pattern`` lists the block kinds of one period; parameters are
+stacked on a leading period axis and the stack executes as ``lax.scan`` over
+periods, so HLO size is depth-independent.  Three execution modes share the
+same block code:
+
+  - train:   full-sequence forward, logits for next-token loss
+  - prefill: full-sequence forward that also materializes per-layer caches
+  - decode:  one-token step against the caches (KV / SSM / xLSTM states)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from . import xlstm as xlstm_lib
+from .attention import decode_attention, flash_attention
+from .common import apply_norm, apply_rope, dense_init, norm_params, split_keys
+from .config import ArchConfig
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------- block params
+
+
+def _attn_params(key, cfg, dtype, cross=False):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, KV * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, KV * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _mlp_params(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d, ff), dtype=dtype),
+        "w_out": dense_init(ks[1], (ff, d), dtype=dtype),
+    }
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, ff), dtype=dtype)
+    return p
+
+
+def block_params(kind: str, key, cfg: ArchConfig, dtype):
+    ks = split_keys(key, 4)
+    p = {}
+    if kind in ("attn_mlp", "attn_moe", "attn_bidir_mlp", "attn_cross_mlp"):
+        p["attn"] = _attn_params(ks[0], cfg, dtype)
+        p["ln1"] = norm_params(cfg, cfg.d_model)
+        if kind == "attn_cross_mlp":
+            p["xattn"] = _attn_params(ks[3], cfg, dtype, cross=True)
+            p["lnx"] = norm_params(cfg, cfg.d_model)
+    elif kind in ("mamba_mlp", "mamba_moe"):
+        p["mamba"] = ssm_lib.mamba_params(ks[0], cfg, dtype)
+        p["ln1"] = norm_params(cfg, cfg.d_model)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm_lib.mlstm_params(ks[0], cfg, dtype)
+        p["ln1"] = norm_params(cfg, cfg.d_model)
+        return p
+    elif kind == "slstm":
+        p["slstm"] = xlstm_lib.slstm_params(ks[0], cfg, dtype)
+        p["ln1"] = norm_params(cfg, cfg.d_model)
+        return p
+    else:
+        raise ValueError(kind)
+
+    if kind.endswith("_moe"):
+        p["moe"] = moe_lib.moe_params(ks[1], cfg, dtype)
+        p["ln2"] = norm_params(cfg, cfg.d_model)
+    elif kind.endswith("_mlp"):
+        p["mlp"] = _mlp_params(ks[1], cfg, dtype)
+        p["ln2"] = norm_params(cfg, cfg.d_model)
+    return p
+
+
+# --------------------------------------------------------------- block apply
+
+
+def _qkv(cfg, p, x):
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*x.shape[:-1], H, hd)
+    k = k.reshape(*x.shape[:-1], KV, hd)
+    v = v.reshape(*x.shape[:-1], KV, hd)
+    return q, k, v
+
+
+def _mlp(cfg, p, x):
+    if cfg.mlp == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+
+
+def _channel_mix(cfg, kind, p, x):
+    """Second half of a block: MLP or MoE over the residual stream."""
+    aux = {}
+    if kind.endswith("_moe"):
+        b, s, d = x.shape
+        h = apply_norm(cfg, x, p["ln2"], "")
+        y, aux = moe_lib.moe_apply(cfg, p["moe"], h.reshape(b * s, d))
+        x = x + y.reshape(b, s, d)
+    elif kind.endswith("_mlp"):
+        x = x + _mlp(cfg, p["mlp"], apply_norm(cfg, x, p["ln2"], ""))
+    return x, aux
+
+
+def block_apply_seq(cfg, kind, p, x, positions, *, mode, enc_out=None):
+    """Full-sequence path (train/prefill). Returns (x, cache_or_None, aux)."""
+    cache = None
+    aux = {}
+    if kind in ("attn_mlp", "attn_moe", "attn_bidir_mlp", "attn_cross_mlp"):
+        h = apply_norm(cfg, x, p["ln1"], "")
+        q, k, v = _qkv(cfg, p["attn"], h)
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        causal = kind != "attn_bidir_mlp"
+        o = flash_attention(
+            q, k, v, causal=causal, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+        )
+        x = x + o.reshape(*x.shape[:-1], -1) @ p["attn"]["wo"]
+        if mode == "prefill":
+            # caches are stored with a FLAT head dim (KV*hd): it divides evenly
+            # by the 16-way model axis for every assigned arch, while raw KV
+            # head counts (e.g. starcoder2's 4) do not.
+            b_, s_ = x.shape[0], x.shape[1]
+            cache = {"k": k.reshape(b_, s_, -1), "v": v.reshape(b_, s_, -1)}
+        if kind == "attn_cross_mlp":
+            hx = apply_norm(cfg, x, p["lnx"], "")
+            qx = hx @ p["xattn"]["wq"]
+            kx = enc_out @ p["xattn"]["wk"]
+            vx = enc_out @ p["xattn"]["wv"]
+            H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            qx = qx.reshape(*hx.shape[:-1], H, hd)
+            kx = kx.reshape(*enc_out.shape[:-1], KV, hd)
+            vx = vx.reshape(*enc_out.shape[:-1], KV, hd)
+            ox = flash_attention(
+                qx, kx, vx, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+            )
+            x = x + ox.reshape(*x.shape[:-1], -1) @ p["xattn"]["wo"]
+            if mode == "prefill":
+                b_, s_ = x.shape[0], x.shape[1]
+                se = enc_out.shape[1]
+                cache = {
+                    "k": k.reshape(b_, s_, -1),
+                    "v": v.reshape(b_, s_, -1),
+                    "xk": kx.reshape(b_, se, -1),
+                    "xv": vx.reshape(b_, se, -1),
+                }
+    elif kind in ("mamba_mlp", "mamba_moe"):
+        h = apply_norm(cfg, x, p["ln1"], "")
+        y = ssm_lib.mamba_forward(cfg, p["mamba"], h)
+        x = x + y
+        if mode == "prefill":
+            # re-derive final state cheaply: decode path will recompute; here we
+            # carry the last conv window and rebuild h via a short suffix scan.
+            cache = _mamba_state_from_seq(cfg, p["mamba"], h)
+    elif kind == "mlstm":
+        h = apply_norm(cfg, x, p["ln1"], "")
+        x = x + xlstm_lib.mlstm_forward(cfg, p["mlstm"], h)
+        if mode == "prefill":
+            cache = _mlstm_state_from_seq(cfg, p["mlstm"], h)
+    elif kind == "slstm":
+        h = apply_norm(cfg, x, p["ln1"], "")
+        x = x + xlstm_lib.slstm_forward(cfg, p["slstm"], h)
+        if mode == "prefill":
+            cache = _slstm_state_from_seq(cfg, p["slstm"], h)
+    else:
+        raise ValueError(kind)
+
+    x, aux = _channel_mix(cfg, kind, p, x)
+    return x, cache, aux
+
+
+def block_apply_decode(cfg, kind, p, x, pos, state, *, enc_out=None):
+    """One-token path. x: (b, d); state: block cache. Returns (x, new_state)."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    if kind in ("attn_mlp", "attn_moe", "attn_cross_mlp"):
+        h = apply_norm(cfg, x[:, None, :], p["ln1"], "")[:, 0]
+        q, k, v = _qkv(cfg, p["attn"], h)  # (b, H/KV, hd)
+        if cfg.rope:
+            q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+            k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        b = x.shape[0]
+        # caches are flat (b, S, KV*hd); write the new row at pos
+        k_cache = jax.vmap(lambda c, kk, pp: jax.lax.dynamic_update_slice(c, kk[None], (pp, 0)))(
+            state["k"], k.reshape(b, -1), pos
+        )
+        v_cache = jax.vmap(lambda c, vv, pp: jax.lax.dynamic_update_slice(c, vv[None], (pp, 0)))(
+            state["v"], v.reshape(b, -1), pos
+        )
+        S = k_cache.shape[1]
+        o = decode_attention(
+            q, k_cache.reshape(b, S, KV, hd), v_cache.reshape(b, S, KV, hd), pos
+        )
+        x = x + o.reshape(b, -1) @ p["attn"]["wo"]
+        new_state = {"k": k_cache, "v": v_cache}
+        if kind == "attn_cross_mlp":
+            hx = apply_norm(cfg, x[:, None, :], p["lnx"], "")[:, 0]
+            H = cfg.n_heads
+            qx = (hx @ p["xattn"]["wq"]).reshape(b, H, hd)
+            s_enc = state["xk"].shape[1]
+            ox = decode_attention(
+                qx,
+                state["xk"].reshape(b, s_enc, KV, hd),
+                state["xv"].reshape(b, s_enc, KV, hd),
+                jnp.full((b,), s_enc - 1, jnp.int32),
+            )
+            x = x + ox.reshape(b, -1) @ p["xattn"]["wo"]
+            new_state = {**new_state, "xk": state["xk"], "xv": state["xv"]}
+    elif kind in ("mamba_mlp", "mamba_moe"):
+        h = apply_norm(cfg, x[:, None, :], p["ln1"], "")[:, 0]
+        y, new_state = ssm_lib.mamba_decode(cfg, p["mamba"], h, state)
+        x = x + y
+    elif kind == "mlstm":
+        h = apply_norm(cfg, x[:, None, :], p["ln1"], "")[:, 0]
+        y, new_state = xlstm_lib.mlstm_decode(cfg, p["mlstm"], h, state)
+        x = x + y
+    elif kind == "slstm":
+        h = apply_norm(cfg, x[:, None, :], p["ln1"], "")[:, 0]
+        y, new_state = xlstm_lib.slstm_decode(cfg, p["slstm"], h, state)
+        x = x + y
+    else:
+        raise ValueError(kind)
+
+    if kind.endswith("_moe"):
+        h = apply_norm(cfg, x[:, None, :], p["ln2"], "")[:, 0]
+        y, _ = moe_lib.moe_apply(cfg, p["moe"], h, capacity=h.shape[0])
+        x = x + y
+    elif kind.endswith("_mlp"):
+        x = x + _mlp(cfg, p["mlp"], apply_norm(cfg, x[:, None, :], p["ln2"], "")[:, 0])
+    return x, new_state
+
+
+# ------------------------------------------------- prefill state reconstruction
+
+
+def _mamba_state_from_seq(cfg, p, h_seq):
+    b, s, _ = h_seq.shape
+    K = cfg.ssm_conv
+    xz = h_seq @ p["in_proj"]
+    xi, _ = jnp.split(xz, 2, axis=-1)
+    conv_win = xi[:, -(K - 1) :, :]
+    # final SSM state: rerun the parallel scan and take the last element
+    u = ssm_lib._causal_conv(p, xi, K)
+    dt, B, C = ssm_lib._dt_b_c(cfg, p, u)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    dBu = (dt * u.astype(jnp.float32))[..., None] * B[..., None, :]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, hh = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    return {"h": hh[:, -1], "conv": conv_win}
+
+
+def _mlstm_state_from_seq(cfg, p, h_seq):
+    # run the chunkwise forward's state recurrence; reuse forward then a final
+    # fold would recompute -- instead scan decode over the last chunk only is
+    # still O(s); for simplicity run the chunk recurrence directly.
+    b, s, _ = h_seq.shape
+    st = xlstm_lib.mlstm_init_state(cfg, b)
+
+    def step(st, xt):
+        _, st = xlstm_lib.mlstm_decode(cfg, p, xt, st)
+        return st, None
+
+    st, _ = jax.lax.scan(step, st, h_seq.transpose(1, 0, 2))
+    return st
+
+
+def _slstm_state_from_seq(cfg, p, h_seq):
+    b = h_seq.shape[0]
+    st = xlstm_lib.slstm_init_state(cfg, b, h_seq.dtype)
+
+    def step(st, xt):
+        st = xlstm_lib._slstm_cell(p, xt.astype(jnp.float32), st)
+        return st, None
+
+    st, _ = jax.lax.scan(step, st, h_seq.transpose(1, 0, 2))
+    return st

@@ -1,0 +1,207 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, sequential recurrence).
+
+mLSTM training runs in chunkwise-recurrent form (the TPU-native version of the
+TFLA/kernel formulation): within a chunk the contribution is a decay-weighted
+quadratic form (MXU matmuls); across chunks a small (hd x hd) matrix state is
+carried by a `lax.scan`.  All exponentials are stabilized with the running
+log-magnitude m, as in the xLSTM paper.
+
+sLSTM is an inherently sequential recurrence (gates depend on h_{t-1}); it runs
+as a `lax.scan` over time.  Both support O(1)-state decode, which is what makes
+xlstm-350m a `subquadratic` arch eligible for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+NEG = -1e30
+
+
+# ----------------------------------------------------------------- mLSTM
+
+
+def mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dp = cfg.xlstm_proj * d  # projected width
+    ks = split_keys(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, dp), dtype=dtype),
+        "wq": dense_init(ks[1], (dp, dp), dtype=dtype),
+        "wk": dense_init(ks[2], (dp, dp), dtype=dtype),
+        "wv": dense_init(ks[3], (dp, dp), dtype=dtype),
+        "wi": dense_init(ks[4], (dp, H), dtype=jnp.float32),
+        "wf": dense_init(ks[5], (dp, H), dtype=jnp.float32),
+        "wo": dense_init(ks[6], (dp, dp), dtype=dtype),
+        "down": dense_init(ks[7], (dp, d), dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(cfg, p, x):
+    H = cfg.n_heads
+    up = x @ p["up"]  # (..., dp)
+    dp = up.shape[-1]
+    hd = dp // H
+    q = (up @ p["wq"]).reshape(*up.shape[:-1], H, hd)
+    k = (up @ p["wk"]).reshape(*up.shape[:-1], H, hd) / jnp.sqrt(float(hd))
+    v = (up @ p["wv"]).reshape(*up.shape[:-1], H, hd)
+    li = (up.astype(jnp.float32) @ p["wi"])  # log input gate preact (..., H)
+    lf = jax.nn.log_sigmoid(up.astype(jnp.float32) @ p["wf"])  # log forget (..., H)
+    return up, q, k, v, li, lf
+
+
+def mlstm_forward(cfg, p, x, chunk=256):
+    """x: (b, s, d) -> (b, s, d), chunkwise-parallel."""
+    b, s, d = x.shape
+    H = cfg.n_heads
+    L = min(chunk, s)
+    assert s % L == 0
+    nC = s // L
+
+    up, q, k, v, li, lf = _mlstm_qkvif(cfg, p, x)
+    hd = q.shape[-1]
+
+    # reshape into chunks: (nC, b, H, L, ...)
+    def chunked(t, feat):
+        return t.reshape(b, nC, L, H, *feat).transpose(1, 0, 3, 2, *range(4, 4 + len(feat)))
+
+    qc = chunked(q, (hd,)).astype(jnp.float32)
+    kc = chunked(k, (hd,)).astype(jnp.float32)
+    vc = chunked(v, (hd,)).astype(jnp.float32)
+    lic = li.reshape(b, nC, L, H).transpose(1, 0, 3, 2)  # (nC, b, H, L)
+    lfc = lf.reshape(b, nC, L, H).transpose(1, 0, 3, 2)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    C0 = jnp.zeros((b, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, H, hd), jnp.float32)
+    m0 = jnp.full((b, H), NEG, jnp.float32)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # C: (b,H,hd,hd); n: (b,H,hd); m: (b,H)
+        qj, kj, vj, lij, lfj = xs
+        cum = jnp.cumsum(lfj, axis=-1)  # (b,H,L) inclusive decay from chunk start
+        # g[t, j] = cum_t - cum_j + li_j   (decay of contribution j at time t)
+        g = cum[..., :, None] - cum[..., None, :] + lij[..., None, :]
+        g = jnp.where(tri, g, NEG)
+        m_inter = cum + m[..., None]  # (b,H,L): log-magnitude of inter-chunk path
+        m_t = jnp.maximum(jnp.max(g, axis=-1), m_inter)  # (b,H,L)
+
+        S = jnp.exp(g - m_t[..., None])  # (b,H,L,L)
+        qk = jnp.einsum("bhte,bhje->bhtj", qj, kj)
+        num = jnp.einsum("bhtj,bhjv->bhtv", S * qk, vj)
+        num = num + jnp.exp(m_inter - m_t)[..., None] * jnp.einsum(
+            "bhte,bhev->bhtv", qj, C
+        )
+        den_vec = jnp.einsum("bhtj,bhje->bhte", S, kj) + jnp.exp(m_inter - m_t)[
+            ..., None
+        ] * n[..., None, :]
+        den = jnp.abs(jnp.einsum("bhte,bhte->bht", qj, den_vec))
+        den = jnp.maximum(den, jnp.exp(-m_t))
+        h = num / den[..., None]  # (b,H,L,hd)
+
+        # ---- state update to chunk end ----
+        cum_L = cum[..., -1]  # (b,H)
+        gk = cum_L[..., None] - cum + lij  # (b,H,L) decay of j to chunk end
+        m_new = jnp.maximum(cum_L + m, jnp.max(gk, axis=-1))
+        w = jnp.exp(gk - m_new[..., None])  # (b,H,L)
+        C_new = jnp.exp(cum_L + m - m_new)[..., None, None] * C + jnp.einsum(
+            "bhj,bhje,bhjv->bhev", w, kj, vj
+        )
+        n_new = jnp.exp(cum_L + m - m_new)[..., None] * n + jnp.einsum(
+            "bhj,bhje->bhe", w, kj
+        )
+        return (C_new, n_new, m_new), h
+
+    (_, _, _), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    # hs: (nC, b, H, L, hd) -> (b, s, dp)
+    dp = H * hd
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, dp).astype(x.dtype)
+    out = h * jax.nn.silu(up @ p["wo"])
+    return out @ p["down"]
+
+
+def mlstm_init_state(cfg, batch):
+    H = cfg.n_heads
+    hd = cfg.xlstm_proj * cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), NEG, jnp.float32),
+    }
+
+
+def mlstm_decode(cfg, p, x, state):
+    """x: (b, d) one token; O(1) state update."""
+    up, q, k, v, li, lf = _mlstm_qkvif(cfg, p, x)  # leaves (b, H, hd) / (b, H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)[..., None]
+    iw = jnp.exp(li - m_new)[..., None]
+    qf, kf, vf = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    C_new = fw[..., None] * C + iw[..., None] * jnp.einsum("bhe,bhv->bhev", kf, vf)
+    n_new = fw * n + iw * kf
+    num = jnp.einsum("bhe,bhev->bhv", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", qf, n_new)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(x.shape[0], -1).astype(x.dtype)
+    out = h * jax.nn.silu(up @ p["wo"])
+    return out @ p["down"], {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ----------------------------------------------------------------- sLSTM
+
+
+def slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    ks = split_keys(key, 9)
+    p = {"r_" + g: dense_init(ks[i], (d, d), dtype=dtype) for i, g in enumerate("zifo")}
+    p.update({"w_" + g: dense_init(ks[4 + i], (d, d), dtype=dtype) for i, g in enumerate("zifo")})
+    p["out"] = dense_init(ks[8], (d, d), dtype=dtype)
+    return p
+
+
+def slstm_init_state(cfg, batch, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), NEG, jnp.float32)}
+
+
+def _slstm_cell(p, xt, st):
+    """xt: (b, d) f32 pre-projected gate inputs; st: state dict."""
+    h = st["h"]
+    zt = jnp.tanh(xt @ p["w_z"].astype(jnp.float32) + h @ p["r_z"].astype(jnp.float32))
+    it = xt @ p["w_i"].astype(jnp.float32) + h @ p["r_i"].astype(jnp.float32)
+    ft = xt @ p["w_f"].astype(jnp.float32) + h @ p["r_f"].astype(jnp.float32)
+    ot = jax.nn.sigmoid(xt @ p["w_o"].astype(jnp.float32) + h @ p["r_o"].astype(jnp.float32))
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + st["m"], it)
+    iw = jnp.exp(it - m_new)
+    fw = jnp.exp(lf + st["m"] - m_new)
+    c = fw * st["c"] + iw * zt
+    n = jnp.maximum(fw * st["n"] + iw, jnp.exp(-m_new))
+    h_new = ot * c / n
+    return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def slstm_forward(cfg, p, x):
+    """x: (b, s, d) -> (b, s, d); sequential scan over time."""
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+    st0 = slstm_init_state(cfg, b, x.dtype)
+
+    def step(st, xt):
+        st = _slstm_cell(p, xt, st)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, st0, xf.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return h @ p["out"]
+
+
+def slstm_decode(cfg, p, x, state):
+    st = _slstm_cell(p, x.astype(jnp.float32), state)
+    return st["h"].astype(x.dtype) @ p["out"], st

@@ -1,0 +1,84 @@
+"""8-bit AdamW moments (Dettmers-style blockwise dynamic quantization).
+
+At kimi-k2 scale the f32 Adam moments are 8 TB -- the single largest term in
+the training-memory budget (measured 76 GiB/device on the 16x16 mesh).  Storing
+m and v as int8 with per-256-block f32 scales cuts moment memory 3.6x; the
+update dequantizes, applies f32 Adam math, and requantizes.  Convergence
+tolerance of 8-bit moments is established in the literature (8-bit Adam);
+tests/test_optim.py checks parity against f32 AdamW on a quadratic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import AdamWConfig, cosine_lr
+
+BLOCK = 256
+
+
+def quantize_blockwise(x):
+    """Blockwise-symmetric int8 along the LAST dim (padded to BLOCK).
+
+    Blocking the last dim (not a global flatten) keeps the quantized buffers'
+    leading dims identical to the parameter's, so the FSDP/TP sharding rules
+    apply unchanged and the elementwise Adam update never reshards.
+    Returns q int8 (*lead, ceil(n/B)*B) and scales f32 (*lead, ceil(n/B))."""
+    pad = (-x.shape[-1]) % BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(*xp.shape[:-1], -1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1) / 127.0, 1e-20)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(xp.shape), scale
+
+
+def dequantize_blockwise(q, scale, shape):
+    blocks = q.reshape(*q.shape[:-1], -1, BLOCK).astype(jnp.float32) * scale[..., None]
+    return blocks.reshape(*q.shape[:-1], -1)[..., : shape[-1]]
+
+
+def qadamw_init(params):
+    def one(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        q, s = quantize_blockwise(z)
+        return {"q": q, "s": s}
+
+    return {
+        "m": jax.tree.map(one, params),
+        "v": jax.tree.map(one, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def qadamw_update(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mq, vq):
+        gf = g.astype(jnp.float32)
+        m = dequantize_blockwise(mq["q"], mq["s"], p.shape)
+        v = dequantize_blockwise(vq["q"], vq["s"], p.shape)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        mq2, ms2 = quantize_blockwise(m)
+        vq2, vs2 = quantize_blockwise(v)
+        return p_new, {"q": mq2, "s": ms2}, {"q": vq2, "s": vs2}
+
+    # flatten against the PARAM treedef: each moment entry is a {"q","s"} dict
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    p_new = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    m_new = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    v_new = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    return p_new, {"m": m_new, "v": v_new, "step": step}, {"lr": lr}

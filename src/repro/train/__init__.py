@@ -1,0 +1,15 @@
+from .steps import (
+    cross_entropy_loss,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "cross_entropy_loss",
+    "init_train_state",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+]

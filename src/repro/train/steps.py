@@ -1,0 +1,76 @@
+"""Jit-level step functions: train (fwd + bwd + AdamW) and serve (prefill/decode).
+
+These are the exact programs the multi-pod dry-run lowers and compiles; they
+are also what examples/train_lm.py executes on reduced configs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step as model_decode
+from ..models import forward, init_cache, init_params, prefill
+from ..optim import adamw_init, adamw_update, clip_by_global_norm
+from ..optim.adamw import AdamWConfig
+from ..optim.quantized import qadamw_init, qadamw_update
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Stable CE over a (possibly vocab-sharded) logits tensor; f32 math."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def init_train_state(cfg, key, *, optimizer: str = "adamw"):
+    params = init_params(cfg, key)
+    init = qadamw_init if optimizer == "adamw8bit" else adamw_init
+    return {"params": params, "opt": init(params)}
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig | None = None, *, moe_aux_weight=0.01,
+                    remat: bool = False, optimizer: str = "adamw"):
+    opt_cfg = opt_cfg or AdamWConfig()
+    opt_update = qadamw_update if optimizer == "adamw8bit" else adamw_update
+
+    def loss_fn(params, batch):
+        # remat is applied PER PERIOD inside the layer scan (see models/lm.py)
+        logits, aux = forward(cfg, params, batch, remat=remat)
+        mask = batch.get("loss_mask")
+        loss = cross_entropy_loss(logits, batch["labels"], mask)
+        metrics = {"ce_loss": loss}
+        if "moe_balance" in aux:
+            loss = loss + moe_aux_weight * aux["moe_balance"]
+            metrics["moe_balance"] = aux["moe_balance"]
+        return loss, metrics
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+        grads, gn = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt, extra = opt_update(opt_cfg, state["params"], grads, state["opt"])
+        metrics = {**metrics, **extra, "loss": loss, "grad_norm": gn}
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_fn(params, token, pos, cache):
+        return model_decode(cfg, params, token, pos, cache)
+
+    return decode_fn

@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU, output shapes, finiteness, decode/prefill consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    pad_cache,
+    param_count,
+    prefill,
+)
+from repro.models.frontends import fake_audio_embeds, fake_img_embeds
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def make_batch(cfg, b=B, s=S, labels=False):
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+    if labels:
+        batch["labels"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    if cfg.n_img_tokens:
+        batch["img_embeds"] = fake_img_embeds(cfg, b)
+    if cfg.enc_dec:
+        batch["audio_embeds"] = fake_audio_embeds(cfg, b, s)
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+class TestForward:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_config(arch, reduced=True)
+        params = init_params(cfg, KEY)
+        logits, _ = jax.jit(lambda p, bt: forward(cfg, p, bt))(params, make_batch(cfg))
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_one_train_step(self, arch):
+        cfg = get_config(arch, reduced=True)
+        state = init_train_state(cfg, KEY)
+        step = make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+        batch = make_batch(cfg, labels=True)
+        new_state, metrics = jax.jit(step)(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["loss"]) > 0
+        # params actually changed
+        delta = jax.tree.map(
+            lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b_.astype(jnp.float32)))),
+            state["params"], new_state["params"])
+        assert max(jax.tree_util.tree_leaves(delta)) > 0
+
+    def test_remat_matches_no_remat(self, arch):
+        cfg = get_config(arch, reduced=True)
+        params = init_params(cfg, KEY)
+        batch = make_batch(cfg)
+        l1, _ = forward(cfg, params, batch, remat=False)
+        l2, _ = forward(cfg, params, batch, remat=True)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+
+
+DECODE_ARCHS = [a for a in all_archs() if a not in ("whisper_large_v3", "llava_next_34b")]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(cfg, KEY)
+    s = 12
+    tokens = jax.random.randint(KEY, (B, s), 0, cfg.vocab)
+    logits_full, _ = forward(cfg, params, {"tokens": tokens})
+    cache = init_cache(cfg, B, s + 2)
+    step = jax.jit(lambda tok, pos, c: decode_step(cfg, params, tok, pos, c))
+    errs = []
+    for i in range(s):
+        lg, cache = step(tokens[:, i], jnp.full((B,), i, jnp.int32), cache)
+        errs.append(float(jnp.max(jnp.abs(lg - logits_full[:, i]))))
+    assert max(errs) < 2e-2, errs
+
+
+def test_whisper_prefill_decode_consistency():
+    cfg = get_config("whisper_large_v3", reduced=True)
+    params = init_params(cfg, KEY)
+    s = 16
+    tokens = jax.random.randint(KEY, (B, s + 1), 0, cfg.vocab)
+    audio = fake_audio_embeds(cfg, B, s)
+    lg_full, _ = forward(cfg, params, {"tokens": tokens, "audio_embeds": audio})
+    lg_pre, cache = prefill(cfg, params, {"tokens": tokens[:, :s], "audio_embeds": audio})
+    assert float(jnp.max(jnp.abs(lg_pre - lg_full[:, s - 1]))) < 2e-4
+    cache = pad_cache(cfg, cache, s + 4)
+    lg_dec, _ = decode_step(cfg, params, tokens[:, s], jnp.full((B,), s, jnp.int32), cache)
+    assert float(jnp.max(jnp.abs(lg_dec - lg_full[:, s]))) < 2e-4
+
+
+def test_llava_prefill_matches_forward():
+    cfg = get_config("llava_next_34b", reduced=True)
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    logits_full, _ = forward(cfg, params, batch)
+    lg_pre, _ = prefill(cfg, params, batch)
+    assert float(jnp.max(jnp.abs(lg_pre - logits_full[:, -1]))) < 2e-4
+
+
+def test_vlm_image_tokens_change_output():
+    cfg = get_config("llava_next_34b", reduced=True)
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    l1, _ = forward(cfg, params, batch)
+    batch2 = dict(batch, img_embeds=batch["img_embeds"] + 1.0)
+    l2, _ = forward(cfg, params, batch2)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-4
+
+
+def test_ode_depth_mode_runs():
+    """Continuous-depth execution via the parallel ODE solver (paper tie-in)."""
+    cfg = get_config("stablelm_3b", reduced=True)
+    cfg = dataclasses.replace(cfg, ode_depth=True, n_layers=len(cfg.pattern))
+    params = init_params(cfg, KEY)
+    logits, aux = forward(cfg, params, make_batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert "ode_steps" in aux
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs build abstractly with plausible param counts."""
+    expected = {
+        "starcoder2_15b": (13e9, 18e9),
+        "starcoder2_7b": (6e9, 9e9),
+        "qwen2_5_14b": (12e9, 17e9),
+        "stablelm_3b": (2.2e9, 4e9),
+        "deepseek_moe_16b": (14e9, 20e9),
+        "kimi_k2_1t_a32b": (0.9e12, 1.3e12),
+        "jamba_v0_1_52b": (40e9, 60e9),
+        "llava_next_34b": (30e9, 40e9),
+        "xlstm_350m": (0.25e9, 0.55e9),
+        "whisper_large_v3": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        abstract = jax.eval_shape(lambda c=cfg: init_params(c, KEY))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract))
+        assert lo <= n <= hi, f"{arch}: {n:,} params outside [{lo:.1e}, {hi:.1e}]"

@@ -1,0 +1,160 @@
+"""Per-kernel allclose validation: Pallas (interpret mode) vs the pure-jnp
+oracles in kernels/ref.py, with shape/dtype sweeps and hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, pallas_impl as pi, ref
+
+
+def rng_arrays(seed, *shapes, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(s), dtype) for s in shapes]
+
+
+SHAPES = [(1, 1), (3, 5), (8, 128), (17, 300), (2, 1025), (9, 64)]
+STAGES = [2, 4, 7]
+
+
+class TestFusedUpdate:
+    @pytest.mark.parametrize("b,f", SHAPES)
+    @pytest.mark.parametrize("s", STAGES)
+    def test_matches_ref(self, b, f, s):
+        y, K = rng_arrays(b * f + s, (b, f), (s, b, f))
+        dt = jnp.abs(rng_arrays(1, (b,))[0]) + 0.01
+        b_sol = np.random.default_rng(s).standard_normal(s)
+        b_err = np.random.default_rng(s + 1).standard_normal(s)
+        r_y, r_e = ref.fused_update(y, K, dt, jnp.asarray(b_sol, jnp.float32),
+                                    jnp.asarray(b_err, jnp.float32))
+        p_y, p_e = pi.fused_update(y, K, dt, b_sol, b_err, interpret=True)
+        np.testing.assert_allclose(r_y, p_y, rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(r_e, p_e, rtol=3e-5, atol=3e-5)
+
+    def test_zero_coefficients_skipped(self):
+        y, K = rng_arrays(0, (4, 16), (7, 4, 16))
+        dt = jnp.ones((4,))
+        b_sol = np.array([1.0, 0, 0, 0, 0, 0, 0])
+        b_err = np.zeros(7)
+        p_y, p_e = pi.fused_update(y, K, dt, b_sol, b_err, interpret=True)
+        np.testing.assert_allclose(p_y, y + K[0], rtol=1e-6)
+        np.testing.assert_allclose(p_e, 0.0, atol=1e-7)
+
+
+class TestStageAccum:
+    @pytest.mark.parametrize("b,f", SHAPES)
+    def test_matches_ref(self, b, f):
+        s = 4
+        y, K = rng_arrays(b + f, (b, f), (s, b, f))
+        dt = jnp.abs(rng_arrays(2, (b,))[0]) + 0.01
+        coeffs = np.random.default_rng(7).standard_normal(s)
+        r = ref.stage_accum(y, dt, K, jnp.asarray(coeffs, jnp.float32))
+        p = pi.stage_accum(y, dt, K, coeffs, interpret=True)
+        np.testing.assert_allclose(r, p, rtol=3e-5, atol=3e-5)
+
+
+class TestErrorNorm:
+    @pytest.mark.parametrize("b,f", SHAPES)
+    def test_matches_ref(self, b, f):
+        err, y0, y1 = rng_arrays(b * 31 + f, (b, f), (b, f), (b, f))
+        r = ref.error_norm(err, y0, y1, 1e-6, 1e-3)
+        p = pi.error_norm(err, y0, y1, 1e-6, 1e-3, interpret=True)
+        np.testing.assert_allclose(r, p, rtol=1e-4, atol=1e-6)
+
+    def test_per_instance_tolerances(self):
+        err, y0, y1 = rng_arrays(3, (4, 37), (4, 37), (4, 37))
+        atol = jnp.asarray([1e-8, 1e-6, 1e-4, 1e-2])
+        rtol = jnp.asarray([1e-6, 1e-5, 1e-3, 1e-2])
+        r = ref.error_norm(err, y0, y1, atol, rtol)
+        p = pi.error_norm(err, y0, y1, atol, rtol, interpret=True)
+        np.testing.assert_allclose(r, p, rtol=1e-4)
+
+    def test_zero_atol_feature_padding(self):
+        """padding must stay exact even with atol == 0 (regression)."""
+        err, y0, y1 = rng_arrays(5, (2, 130), (2, 130), (2, 130))
+        r = ref.error_norm(err, y0, y1, 0.0, 1e-3)
+        p = pi.error_norm(err, y0, y1, 0.0, 1e-3, interpret=True)
+        np.testing.assert_allclose(r, p, rtol=1e-4)
+
+
+class TestInterp:
+    @pytest.mark.parametrize("b,n,f", [(1, 1, 1), (3, 7, 5), (8, 128, 128), (5, 200, 2)])
+    def test_matches_ref(self, b, n, f):
+        rng = np.random.default_rng(b * n + f)
+        coeffs = tuple(jnp.asarray(rng.standard_normal((b, f)), jnp.float32) for _ in range(4))
+        x = jnp.asarray(rng.uniform(0, 1, (b, n)), jnp.float32)
+        mask = jnp.asarray(rng.uniform(size=(b, n)) > 0.5)
+        out = jnp.asarray(rng.standard_normal((b, n, f)), jnp.float32)
+        r = ref.interp_eval(coeffs, x, mask, out)
+        p = pi.interp_eval(coeffs, x, mask, out, interpret=True)
+        np.testing.assert_allclose(r, p, rtol=3e-5, atol=3e-5)
+
+    def test_horner_is_a_polynomial(self):
+        """ref oracle itself: interp at x equals direct polynomial eval."""
+        b, n, f = 2, 9, 3
+        rng = np.random.default_rng(0)
+        cs = [rng.standard_normal((b, f)).astype(np.float32) for _ in range(4)]
+        x = rng.uniform(0, 1, (b, n)).astype(np.float32)
+        mask = np.ones((b, n), bool)
+        out = np.zeros((b, n, f), np.float32)
+        r = np.asarray(ref.interp_eval(tuple(map(jnp.asarray, cs)), jnp.asarray(x),
+                                       jnp.asarray(mask), jnp.asarray(out)))
+        direct = sum(c[:, None, :] * (x[:, :, None] ** k) for k, c in enumerate(cs))
+        np.testing.assert_allclose(r, direct, rtol=1e-4, atol=1e-5)
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 12), f=st.integers(1, 200), s=st.integers(1, 7),
+           seed=st.integers(0, 2**30))
+    def test_fused_update_property(self, b, f, s, seed):
+        rng = np.random.default_rng(seed)
+        y = jnp.asarray(rng.standard_normal((b, f)), jnp.float32)
+        K = jnp.asarray(rng.standard_normal((s, b, f)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 2, (b,)), jnp.float32)
+        b_sol = rng.standard_normal(s)
+        b_err = rng.standard_normal(s)
+        r = ref.fused_update(y, K, dt, jnp.asarray(b_sol, jnp.float32),
+                             jnp.asarray(b_err, jnp.float32))
+        p = pi.fused_update(y, K, dt, b_sol, b_err, interpret=True)
+        np.testing.assert_allclose(r[0], p[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(r[1], p[1], rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 8), f=st.integers(1, 300), seed=st.integers(0, 2**30))
+    def test_error_norm_property(self, b, f, seed):
+        rng = np.random.default_rng(seed)
+        err = jnp.asarray(rng.standard_normal((b, f)), jnp.float32)
+        y0 = jnp.asarray(rng.standard_normal((b, f)), jnp.float32)
+        y1 = jnp.asarray(rng.standard_normal((b, f)), jnp.float32)
+        r = ref.error_norm(err, y0, y1, 1e-6, 1e-3)
+        p = pi.error_norm(err, y0, y1, 1e-6, 1e-3, interpret=True)
+        np.testing.assert_allclose(r, p, rtol=2e-4, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**30))
+    def test_error_norm_scale_invariance(self, seed):
+        """rtol-only norm is invariant to rescaling (err, y) jointly."""
+        rng = np.random.default_rng(seed)
+        err = jnp.asarray(rng.standard_normal((3, 40)), jnp.float32)
+        y0 = jnp.asarray(rng.standard_normal((3, 40)) + 2.0, jnp.float32)
+        r1 = ref.error_norm(err, y0, y0, 0.0, 1e-3)
+        r2 = ref.error_norm(err * 10, y0 * 10, y0 * 10, 0.0, 1e-3)
+        np.testing.assert_allclose(r1, r2, rtol=1e-4)
+
+
+class TestBackendDispatch:
+    def test_solver_runs_on_interpret_backend(self):
+        from repro.core import solve_ivp
+
+        old = ops.backend()
+        ops.set_backend("interpret")
+        try:
+            sol = solve_ivp(lambda t, y, a: -y, jnp.ones((2, 3)),
+                            jnp.linspace(0, 1, 5), atol=1e-6, rtol=1e-6)
+            exp = np.broadcast_to(np.exp(-np.asarray(sol.ts))[..., None], sol.ys.shape)
+            np.testing.assert_allclose(np.asarray(sol.ys), exp, rtol=1e-4, atol=1e-5)
+        finally:
+            ops.set_backend(old)

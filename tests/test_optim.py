@@ -1,0 +1,69 @@
+"""Optimizer tests: AdamW math, schedule, and 8-bit moment parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.optim.quantized import (
+    dequantize_blockwise,
+    qadamw_init,
+    qadamw_update,
+    quantize_blockwise,
+)
+
+
+def quad_loss(params):
+    return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum((params["b"] + 1.0) ** 2)
+
+
+def make_params():
+    return {"w": jnp.zeros((4, 300)), "b": jnp.zeros((7,))}
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0, total_steps=10_000)
+        params = make_params()
+        state = adamw_init(params)
+        for _ in range(300):
+            g = jax.grad(quad_loss)(params)
+            params, state, _ = adamw_update(cfg, params, g, state)
+        assert float(quad_loss(params)) < 0.05
+
+    def test_cosine_schedule_endpoints(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(cosine_lr(cfg, jnp.asarray(0))) < 0.11
+        assert abs(float(cosine_lr(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(cosine_lr(cfg, jnp.asarray(100))) < 1e-6
+
+
+class TestQuantized:
+    def test_blockwise_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 1000))
+        q, s = quantize_blockwise(x)
+        assert q.dtype == jnp.int8
+        y = dequantize_blockwise(q, s, x.shape)
+        assert float(jnp.max(jnp.abs(x - y))) < float(jnp.max(jnp.abs(x))) / 100
+
+    def test_8bit_tracks_f32_adamw(self):
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0, total_steps=10_000)
+        p32, p8 = make_params(), make_params()
+        s32, s8 = adamw_init(p32), qadamw_init(p8)
+        for _ in range(150):
+            g32 = jax.grad(quad_loss)(p32)
+            g8 = jax.grad(quad_loss)(p8)
+            p32, s32, _ = adamw_update(cfg, p32, g32, s32)
+            p8, s8, _ = qadamw_update(cfg, p8, g8, s8)
+        l32, l8 = float(quad_loss(p32)), float(quad_loss(p8))
+        assert l8 < 0.05, f"8-bit AdamW failed to converge: {l8}"
+        assert abs(l8 - l32) < 0.05
+
+    def test_moment_memory_ratio(self):
+        p = {"w": jnp.zeros((1024, 1024))}
+        f32_bytes = sum(l.size * 4 for l in jax.tree_util.tree_leaves(adamw_init(p)["m"]))
+        q = qadamw_init(p)["m"]
+        q_bytes = sum(
+            l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(q)
+        )
+        assert q_bytes < f32_bytes / 3.0

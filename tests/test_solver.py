@@ -1,0 +1,206 @@
+"""Behavioural tests of the batch-parallel ODE solver (the paper's core)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Status,
+    integral_controller,
+    pid_controller,
+    solve_ivp,
+    solve_ivp_scan,
+)
+
+
+def exp_decay(t, y, args):
+    return -y
+
+
+def vdp(t, y, mu):
+    x, xd = y[..., 0], y[..., 1]
+    return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
+
+
+class TestAccuracy:
+    @pytest.mark.parametrize("method,tol,err", [
+        ("heun", 1e-6, 1e-3), ("bosh3", 1e-8, 1e-4),
+        ("dopri5", 1e-8, 1e-4), ("tsit5", 1e-8, 1e-4),
+    ])
+    def test_exponential_decay(self, method, tol, err):
+        y0 = jnp.array([[1.0], [2.0], [0.5]])
+        t_eval = jnp.linspace(0.0, 2.0, 21)
+        sol = solve_ivp(exp_decay, y0, t_eval, method=method, atol=tol, rtol=tol,
+                        max_steps=50_000)
+        expected = np.asarray(y0)[:, None, :] * np.exp(-np.asarray(t_eval))[None, :, None]
+        assert np.abs(np.asarray(sol.ys) - expected).max() < err
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
+
+    @pytest.mark.parametrize("method,dt,err", [
+        ("euler", 1e-3, 1e-3), ("midpoint", 1e-2, 1e-4), ("rk4", 5e-2, 1e-6),
+    ])
+    def test_fixed_step_methods(self, method, dt, err):
+        y0 = jnp.ones((2, 1))
+        sol = solve_ivp(exp_decay, y0, None, t_start=0.0, t_end=1.0, method=method,
+                        dt0=dt, max_steps=1100)
+        assert np.abs(np.asarray(sol.ys)[:, 0] - np.exp(-1)).max() < err
+
+    def test_harmonic_oscillator_energy(self):
+        def f(t, y, args):
+            return jnp.stack((y[..., 1], -y[..., 0]), axis=-1)
+
+        y0 = jnp.array([[1.0, 0.0]])
+        sol = solve_ivp(f, y0, jnp.linspace(0, 2 * np.pi, 10), atol=1e-9, rtol=1e-9)
+        energy = np.asarray(sol.ys[..., 0]) ** 2 + np.asarray(sol.ys[..., 1]) ** 2
+        np.testing.assert_allclose(energy, 1.0, atol=1e-5)
+
+
+class TestParallelIndependence:
+    """The paper's central claim: per-instance state, no cross-talk."""
+
+    def test_step_counts_differ_across_batch(self):
+        y0 = jnp.stack([jnp.array([2.0, 0.0]) + 0.3 * i for i in range(5)])
+        sol = solve_ivp(vdp, y0, jnp.linspace(0, 10, 20), args=10.0)
+        steps = np.asarray(sol.stats["n_steps"])
+        assert len(set(steps.tolist())) > 1, "instances should step independently"
+
+    def test_batching_does_not_change_solution(self):
+        """Solving alone == solving batched with a stiff companion (torchode's
+        guarantee; joint solvers violate this)."""
+        y_easy = jnp.array([[1.0, 0.0]])
+        t_eval = jnp.linspace(0, 5, 10)
+        alone = solve_ivp(vdp, y_easy, t_eval, args=1.0)
+        stiff_pair = jnp.concatenate([y_easy, jnp.array([[2.0, 0.0]])])
+
+        def mixed(t, y, _):
+            mu = jnp.array([1.0, 25.0])[:, None] * jnp.ones_like(y[..., :1])
+            x, xd = y[..., 0], y[..., 1]
+            return jnp.stack((xd, mu[..., 0] * (1 - x**2) * xd - x), axis=-1)
+
+        together = solve_ivp(mixed, stiff_pair, t_eval)
+        np.testing.assert_allclose(
+            np.asarray(alone.ys[0]), np.asarray(together.ys[0]), rtol=1e-3, atol=1e-4
+        )
+        assert np.asarray(alone.stats["n_steps"])[0] == np.asarray(together.stats["n_steps"])[0]
+
+    def test_per_instance_ranges_and_direction(self):
+        y0 = jnp.ones((3, 1))
+        t_start = jnp.array([0.0, 0.0, 1.0])
+        t_end = jnp.array([1.0, 2.0, -1.0])
+        sol = solve_ivp(exp_decay, y0, None, t_start=t_start, t_end=t_end,
+                        atol=1e-9, rtol=1e-9)
+        exp = np.exp(-(np.asarray(t_end) - np.asarray(t_start)))
+        np.testing.assert_allclose(np.asarray(sol.ys)[:, 0], exp, rtol=1e-5)
+
+    def test_windowed_dense_output_matches_full(self):
+        """dense_window (beyond-paper optimization) is bit-compatible with the
+        evaluate-all-masked path."""
+        y0 = jnp.stack([jnp.array([2.0, 0.0]) + 0.2 * i for i in range(4)])
+        t_eval = jnp.linspace(0.0, 8.0, 100)
+        full = solve_ivp(vdp, y0, t_eval, args=5.0, atol=1e-7, rtol=1e-7)
+        for w in (4, 16):
+            win = solve_ivp(vdp, y0, t_eval, args=5.0, atol=1e-7, rtol=1e-7,
+                            dense_window=w)
+            np.testing.assert_allclose(np.asarray(win.ys), np.asarray(full.ys),
+                                       rtol=1e-4, atol=1e-5)
+            assert np.all(np.asarray(win.stats["n_initialized"]) == 100)
+
+    def test_per_instance_t_eval(self):
+        y0 = jnp.ones((2, 1))
+        t_eval = jnp.stack([jnp.linspace(0, 1, 5), jnp.linspace(0, 3, 5)])
+        sol = solve_ivp(exp_decay, y0, t_eval, atol=1e-9, rtol=1e-9)
+        np.testing.assert_allclose(
+            np.asarray(sol.ys)[..., 0], np.exp(-np.asarray(t_eval)), rtol=1e-4
+        )
+
+    def test_per_instance_tolerances(self):
+        y0 = jnp.ones((2, 1))
+        atol = jnp.array([1e-3, 1e-9])
+        rtol = jnp.array([1e-3, 1e-9])
+        sol = solve_ivp(exp_decay, y0, None, t_start=0.0, t_end=1.0, atol=atol, rtol=rtol)
+        steps = np.asarray(sol.stats["n_steps"])
+        assert steps[1] > steps[0], "tighter tolerance must take more steps"
+
+
+class TestStats:
+    def test_listing1_semantics(self):
+        """n_f_evals equal across batch; n_steps/accepted per-instance."""
+        y0 = jax.random.normal(jax.random.PRNGKey(0), (5, 2))
+        sol = solve_ivp(vdp, y0, jnp.linspace(0.0, 10.0, 50), method="tsit5", args=10.0)
+        stats = {k: np.asarray(v) for k, v in sol.stats.items()}
+        assert np.all(stats["n_f_evals"] == stats["n_f_evals"][0])
+        assert np.all(stats["n_accepted"] <= stats["n_steps"])
+        assert np.all(stats["n_initialized"] == 50)
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
+
+    def test_max_steps_status(self):
+        sol = solve_ivp(vdp, jnp.array([[2.0, 0.0]]), None, t_start=0.0, t_end=100.0,
+                        args=50.0, max_steps=10)
+        assert np.asarray(sol.status)[0] == Status.REACHED_MAX_STEPS.value
+
+    def test_infinite_dynamics_stops(self):
+        def bad(t, y, args):
+            return y * jnp.inf
+
+        sol = solve_ivp(bad, jnp.ones((1, 1)), None, t_start=0.0, t_end=1.0, max_steps=200)
+        assert np.asarray(sol.status)[0] in (
+            Status.INFINITE.value,
+            Status.REACHED_DT_MIN.value,
+            Status.REACHED_MAX_STEPS.value,
+        )
+
+
+class TestControllers:
+    def test_pid_vs_integral_steps_on_stiff_vdp(self):
+        """Appendix C: PID saves steps at high mu."""
+        y0 = jnp.array([[2.0, 0.0]])
+        kw = dict(t_start=0.0, t_end=20.0, args=40.0, max_steps=20000, atol=1e-6, rtol=1e-6)
+        s_i = solve_ivp(vdp, y0, None, controller=integral_controller(), **kw)
+        s_pid = solve_ivp(vdp, y0, None, controller=pid_controller(), **kw)
+        n_i = int(np.asarray(s_i.stats["n_steps"])[0])
+        n_pid = int(np.asarray(s_pid.stats["n_steps"])[0])
+        # PID should not be drastically worse; at high stiffness usually better
+        assert n_pid < 1.2 * n_i
+
+    def test_controller_grows_step_on_smooth_problem(self):
+        sol = solve_ivp(exp_decay, jnp.ones((1, 1)), None, t_start=0.0, t_end=10.0,
+                        atol=1e-6, rtol=1e-3)
+        assert int(np.asarray(sol.stats["n_steps"])[0]) < 60
+
+
+class TestDifferentiability:
+    def test_scan_gradient_matches_analytic(self):
+        def loss(a):
+            s = solve_ivp_scan(lambda t, y, a_: -a_ * y, jnp.ones((2, 1)), None,
+                               t_start=0.0, t_end=1.0, args=a, max_steps=64,
+                               rtol=1e-6, atol=1e-8)
+            return jnp.sum(s.ys)
+
+        g = jax.grad(loss)(1.5)
+        assert abs(float(g) - (-2 * np.exp(-1.5))) < 1e-4
+
+    def test_scan_checkpointing(self):
+        def loss(a):
+            s = solve_ivp_scan(lambda t, y, a_: -a_ * y, jnp.ones((1, 1)), None,
+                               t_start=0.0, t_end=1.0, args=a, max_steps=64,
+                               checkpoint_every=16)
+            return jnp.sum(s.ys)
+
+        g1 = jax.grad(loss)(1.5)
+        def loss2(a):
+            s = solve_ivp_scan(lambda t, y, a_: -a_ * y, jnp.ones((1, 1)), None,
+                               t_start=0.0, t_end=1.0, args=a, max_steps=64)
+            return jnp.sum(s.ys)
+        g2 = jax.grad(loss2)(1.5)
+        np.testing.assert_allclose(float(g1), float(g2), rtol=1e-5)
+
+
+class TestJit:
+    def test_whole_solver_jits_without_host_sync(self):
+        f = jax.jit(lambda y0: solve_ivp(vdp, y0, jnp.linspace(0, 5, 10), args=5.0).ys)
+        out = f(jnp.array([[2.0, 0.0]] * 4))
+        assert out.shape == (4, 10, 2)
+        # second call hits the cache
+        out2 = f(jnp.array([[1.0, 0.5]] * 4))
+        assert np.all(np.isfinite(np.asarray(out2)))

@@ -1,0 +1,81 @@
+"""Hypothesis property tests on solver invariants (system-level)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Status, solve_ivp
+
+
+def decay(t, y, a):
+    return -a * y
+
+
+class TestLinearInvariants:
+    @settings(max_examples=15, deadline=None)
+    @given(a=st.floats(0.1, 3.0), t_end=st.floats(0.3, 3.0), seed=st.integers(0, 2**30))
+    def test_matches_analytic_solution(self, a, t_end, seed):
+        rng = np.random.default_rng(seed)
+        y0 = jnp.asarray(rng.uniform(-2, 2, (3, 2)), jnp.float32)
+        sol = solve_ivp(decay, y0, None, t_start=0.0, t_end=t_end, args=a,
+                        atol=1e-8, rtol=1e-8, max_steps=20_000)
+        exp = np.asarray(y0) * np.exp(-a * t_end)
+        np.testing.assert_allclose(np.asarray(sol.ys), exp, rtol=1e-4, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(scale=st.floats(0.1, 10.0), seed=st.integers(0, 2**30))
+    def test_linearity_of_linear_ode(self, scale, seed):
+        """For linear dynamics, solve(c*y0) == c*solve(y0) (same step pattern:
+        rtol-driven controller is scale-invariant for atol=0)."""
+        rng = np.random.default_rng(seed)
+        y0 = jnp.asarray(rng.uniform(0.5, 2, (2, 3)), jnp.float32)
+        kw = dict(t_start=0.0, t_end=1.0, args=0.7, atol=0.0, rtol=1e-6)
+        s1 = solve_ivp(decay, y0, None, **kw)
+        s2 = solve_ivp(decay, y0 * scale, None, **kw)
+        np.testing.assert_allclose(np.asarray(s2.ys), np.asarray(s1.ys) * scale,
+                                   rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(s1.stats["n_steps"]),
+                                      np.asarray(s2.stats["n_steps"]))
+
+
+class TestBatchInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(perm_seed=st.integers(0, 2**30))
+    def test_permutation_equivariance(self, perm_seed):
+        """Solving a permuted batch returns permuted solutions & stats --
+        instances truly do not interact."""
+        rng = np.random.default_rng(0)
+        y0 = jnp.asarray(rng.uniform(-1, 1, (6, 2)), jnp.float32)
+
+        def vdp(t, y, mu):
+            x, xd = y[..., 0], y[..., 1]
+            return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
+
+        perm = np.random.default_rng(perm_seed).permutation(6)
+        s1 = solve_ivp(vdp, y0, None, t_start=0.0, t_end=3.0, args=4.0)
+        s2 = solve_ivp(vdp, y0[perm], None, t_start=0.0, t_end=3.0, args=4.0)
+        np.testing.assert_allclose(np.asarray(s2.ys), np.asarray(s1.ys)[perm],
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_array_equal(np.asarray(s2.stats["n_steps"]),
+                                      np.asarray(s1.stats["n_steps"])[perm])
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(2, 40), seed=st.integers(0, 2**30))
+    def test_dense_output_count_and_monotone_time(self, n, seed):
+        rng = np.random.default_rng(seed)
+        t_eval = jnp.asarray(np.sort(rng.uniform(0, 2, n)), jnp.float32)
+        y0 = jnp.ones((2, 1))
+        sol = solve_ivp(decay, y0, t_eval, args=1.0, t_start=0.0, t_end=2.0)
+        assert np.all(np.asarray(sol.stats["n_initialized"]) == n)
+        # solution along a decay is monotone decreasing in eval time
+        ys = np.asarray(sol.ys)[:, :, 0]
+        assert np.all(np.diff(ys, axis=1) <= 1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**30))
+    def test_status_success_iff_reached_end(self, seed):
+        rng = np.random.default_rng(seed)
+        y0 = jnp.asarray(rng.uniform(-1, 1, (3, 2)), jnp.float32)
+        sol = solve_ivp(decay, y0, None, t_start=0.0, t_end=1.0, args=1.0)
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
