@@ -1,18 +1,28 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [table3|table4|table5|fig1|fig2|all]
+  python -m benchmarks.run [table3|table4|table5|fig1|fig2|all] [--json [PATH]]
 
-Prints ``name,value,derived`` CSV rows (value is microseconds for *_time rows).
+Prints ``name,value,derived`` CSV rows (value is microseconds for *_time
+rows).  ``--json`` additionally writes the rows to a JSON file (default
+``BENCH_solver.json``) so CI can track the perf trajectory across commits.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 
 
 def main() -> None:
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("suite", nargs="?", default="all",
+                        choices=["all", "table3", "table4", "table5", "fig1", "fig2"])
+    parser.add_argument("--json", nargs="?", const="BENCH_solver.json", default=None,
+                        metavar="PATH", help="also write rows to a JSON file")
+    opts = parser.parse_args()
+    which = opts.suite
+
     suites = []
     if which in ("all", "table3"):
         from . import vdp_bench
@@ -35,12 +45,23 @@ def main() -> None:
 
         suites.append(("fig2_pid", pid_bench.rows))
 
+    records = []
     print("name,value,derived")
     for tag, fn in suites:
         t0 = time.time()
         for name, v, extra in fn():
             print(f"{tag}/{name},{v},{extra}", flush=True)
-        print(f"# {tag} took {time.time()-t0:.1f}s", flush=True)
+            records.append({"suite": tag, "name": name, "value": v, "derived": extra})
+        elapsed = time.time() - t0
+        print(f"# {tag} took {elapsed:.1f}s", flush=True)
+        records.append({"suite": tag, "name": "_suite_wall_s", "value": elapsed,
+                        "derived": ""})
+
+    if opts.json:
+        payload = {"bench": "solver", "unit": "us for *_time rows", "rows": records}
+        with open(opts.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(records)} rows to {opts.json}", flush=True)
 
 
 if __name__ == "__main__":

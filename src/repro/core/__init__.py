@@ -1,4 +1,14 @@
-"""repro.core -- batch-parallel adaptive ODE solving (the torchode technique in JAX)."""
+"""repro.core -- batch-parallel adaptive ODE solving (the torchode technique in JAX).
+
+Two API levels:
+
+  - one-call wrappers: ``solve_ivp`` / ``solve_ivp_scan`` (flat arrays or
+    PyTree states)
+  - composable components: ``AutoDiffAdjoint(Stepper("tsit5"),
+    pid_controller()).solve(f, y0, t_eval)`` -- term, stepper, controller and
+    driver are each independently swappable, and every component can
+    contribute per-instance accumulators to the solver's statistics registry.
+"""
 
 from .controller import (
     FixedController,
@@ -7,10 +17,13 @@ from .controller import (
     pi_controller,
     pid_controller,
 )
+from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint
 from .loop import make_solver, solve_ivp, solve_ivp_scan
 from .solution import Solution, Status
+from .step import LoopState, StepContext, StepFunction
+from .stepper import Stepper, StepResult, initial_step_size, rk_step
 from .tableau import TABLEAUS, ButcherTableau, get_tableau
-from .terms import ODETerm, as_term
+from .terms import ODETerm, RaveledState, as_term, ravel_state, ravel_term
 
 __all__ = [
     "FixedController",
@@ -18,14 +31,27 @@ __all__ = [
     "integral_controller",
     "pi_controller",
     "pid_controller",
+    "AutoDiffAdjoint",
+    "BacksolveAdjoint",
+    "ScanAdjoint",
     "make_solver",
     "solve_ivp",
     "solve_ivp_scan",
     "Solution",
     "Status",
+    "LoopState",
+    "StepContext",
+    "StepFunction",
+    "Stepper",
+    "StepResult",
+    "initial_step_size",
+    "rk_step",
     "TABLEAUS",
     "ButcherTableau",
     "get_tableau",
     "ODETerm",
+    "RaveledState",
     "as_term",
+    "ravel_state",
+    "ravel_term",
 ]

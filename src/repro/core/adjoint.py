@@ -26,12 +26,13 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from .loop import solve_ivp
+from .stepper import Stepper
 
 
 def make_adjoint_solve(
     f: Callable,
     *,
-    method: str = "dopri5",
+    method: str | Stepper = "dopri5",
     rtol=1e-3,
     atol=1e-6,
     max_steps: int = 10_000,
@@ -42,10 +43,15 @@ def make_adjoint_solve(
     solves the adjoint ODE backwards in time (O(1) memory in solver steps).
 
     ``f(t, y, params)`` is the batched dynamics; ``params`` any pytree.
-    ``mode`` is "joint" (single fused adjoint problem, paper's recommended
-    default) or "per_instance" (fully independent adjoint solves).
+    ``method`` is a tableau name or a ``Stepper``.  ``mode`` is "joint"
+    (single fused adjoint problem, paper's recommended default) or
+    "per_instance" (fully independent adjoint solves).
     """
     assert mode in ("joint", "per_instance")
+    if isinstance(method, Stepper):
+        # Pass the tableau object itself so custom (unregistered) tableaus
+        # keep their coefficients in the backward solve.
+        method = method.tableau
 
     @jax.custom_vjp
     def _solve(y0, t_start, t_end, params):

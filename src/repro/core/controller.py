@@ -29,8 +29,19 @@ class ControllerState(NamedTuple):
     prev2_inv_ratio: jax.Array  # (b,)
 
 
+class _ControllerStats:
+    """Statistics-registry contribution shared by all controllers: the
+    controller owns the accept/reject decision, so it records ``n_accepted``."""
+
+    def init_stats(self, batch: int) -> dict[str, jax.Array]:
+        return {"n_accepted": jnp.zeros((batch,), dtype=jnp.int32)}
+
+    def update_stats(self, stats: dict, ctx) -> dict:
+        return {**stats, "n_accepted": stats["n_accepted"] + ctx.accept.astype(jnp.int32)}
+
+
 @dataclasses.dataclass(frozen=True)
-class PIDController:
+class PIDController(_ControllerStats):
     """General PID step controller; I/PI controllers are coefficient choices.
 
     Coefficients follow the convention of torchode / diffrax docs: they are
@@ -113,7 +124,7 @@ def pid_controller(**kw) -> PIDController:
     return PIDController(pcoeff=0.2, icoeff=0.3, dcoeff=0.1, **kw)
 
 
-class FixedController:
+class FixedController(_ControllerStats):
     """Fixed-step 'controller': always accept, keep dt (euler/rk4 style)."""
 
     dt_min = 0.0

@@ -1,0 +1,213 @@
+"""Solve drivers: how the step function is iterated and how gradients flow.
+
+The three drivers share the ``StepFunction`` ``init/step/finish`` interface
+and differ only in the loop construct + gradient strategy (the paper's
+Sec. 2.2 / Table 5 axis):
+
+``AutoDiffAdjoint``
+    ``jax.lax.while_loop`` -- the fastest forward pass (no wasted masked
+    iterations); differentiable in forward mode only, since JAX's while_loop
+    has no reverse rule.
+``ScanAdjoint``
+    bounded ``jax.lax.scan`` with masked no-op steps after termination
+    (discretize-then-optimize); fully reverse-mode differentiable, with
+    optional ``jax.checkpoint``-ed blocks trading recompute for memory.
+``BacksolveAdjoint``
+    optimize-then-discretize: the O(1)-memory adjoint-ODE backward pass,
+    wrapping ``core/adjoint.py``'s ``jax.custom_vjp`` machinery.
+
+All drivers accept arbitrary PyTree initial states.  Ravel/unravel happens at
+the term boundary (``terms.ravel_state`` / ``terms.ravel_term``), so the hot
+loop and the Pallas kernels keep operating on flat (b, f) buffers; the
+returned ``Solution.ys`` is unravelled back to the caller's PyTree structure.
+For PyTree states the vector field is interpreted *per instance*:
+``f(t, y_tree, args)`` with scalar ``t`` and unbatched leaves, vmapped over
+the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .solution import Solution
+from .step import StepFunction
+from .stepper import Stepper
+from .terms import ODETerm, as_term, ravel_state, ravel_term
+
+
+class _Driver:
+    """Shared construction + PyTree plumbing for the loop-based drivers."""
+
+    def __init__(
+        self,
+        stepper: Stepper | str | None = None,
+        controller=None,
+        *,
+        rtol=1e-3,
+        atol=1e-6,
+        max_steps: int = 10_000,
+        dense: bool = True,
+        dense_window: int = 0,
+        batched_term: bool = True,
+        extra_stats: tuple = (),
+    ):
+        self.stepper = Stepper.coerce(stepper)
+        self.controller = controller
+        self.rtol = rtol
+        self.atol = atol
+        self.max_steps = max_steps
+        self.dense = dense
+        self.dense_window = dense_window
+        self.batched_term = batched_term
+        self.extra_stats = tuple(extra_stats)
+
+    def _prepare(self, f, y0):
+        """Normalize (f, y0) onto the flat convention.  Returns
+        ``(step_fn, y0_flat, raveled)``; ``raveled`` is None for flat input."""
+        y0_flat, raveled = ravel_state(y0)
+        if raveled is None:
+            term = as_term(f, batched=self.batched_term)
+        else:
+            term = ravel_term(f, raveled)
+        step_fn = StepFunction(
+            term,
+            self.stepper,
+            self.controller,
+            rtol=self.rtol,
+            atol=self.atol,
+            dense=self.dense,
+            dense_window=self.dense_window,
+            extra_stats=self.extra_stats,
+        )
+        return step_fn, y0_flat, raveled
+
+    @staticmethod
+    def _finalize(sol: Solution, raveled) -> Solution:
+        if raveled is None:
+            return sol
+        return dataclasses.replace(sol, ys=raveled.unravel(sol.ys))
+
+
+class AutoDiffAdjoint(_Driver):
+    """``while_loop`` driver -- the paper's default forward solver.
+
+    Example::
+
+        solver = AutoDiffAdjoint(Stepper("tsit5"), pid_controller())
+        sol = solver.solve(f, y0, t_eval, args=args)
+    """
+
+    def solve(
+        self,
+        f,
+        y0,
+        t_eval=None,
+        *,
+        t_start=None,
+        t_end=None,
+        dt0=None,
+        args: Any = None,
+    ) -> Solution:
+        step_fn, y0_flat, raveled = self._prepare(f, y0)
+        state, consts = step_fn.init(y0_flat, t_eval, t_start, t_end, dt0, args)
+        state = jax.lax.while_loop(
+            lambda s: jnp.any(s.running) & (s.it < self.max_steps),
+            lambda s: step_fn.step(s, consts, args),
+            state,
+        )
+        return self._finalize(step_fn.finish(state, consts), raveled)
+
+
+class ScanAdjoint(_Driver):
+    """Bounded-``scan`` driver: reverse-mode differentiable
+    (discretize-then-optimize), with optional checkpointed blocks."""
+
+    def __init__(self, stepper=None, controller=None, *, max_steps: int = 256,
+                 checkpoint_every: int = 0, **kw):
+        super().__init__(stepper, controller, max_steps=max_steps, **kw)
+        self.checkpoint_every = checkpoint_every
+
+    def solve(
+        self,
+        f,
+        y0,
+        t_eval=None,
+        *,
+        t_start=None,
+        t_end=None,
+        dt0=None,
+        args: Any = None,
+    ) -> Solution:
+        step_fn, y0_flat, raveled = self._prepare(f, y0)
+        state, consts = step_fn.init(y0_flat, t_eval, t_start, t_end, dt0, args)
+
+        def scan_body(s, _):
+            return step_fn.step(s, consts, args), None
+
+        if self.checkpoint_every and self.checkpoint_every > 0:
+            blocks, rem = divmod(self.max_steps, self.checkpoint_every)
+
+            def block_body(s, _):
+                s, _ = jax.lax.scan(scan_body, s, None, length=self.checkpoint_every)
+                return s, None
+
+            state, _ = jax.lax.scan(jax.checkpoint(block_body), state, None, length=blocks)
+            if rem:
+                state, _ = jax.lax.scan(scan_body, state, None, length=rem)
+        else:
+            state, _ = jax.lax.scan(scan_body, state, None, length=self.max_steps)
+        return self._finalize(step_fn.finish(state, consts), raveled)
+
+
+class BacksolveAdjoint:
+    """Adjoint-equation driver (optimize-then-discretize, O(1) memory).
+
+    Tracks only the final state; its VJP solves the augmented adjoint ODE
+    backwards in time via ``core/adjoint.py``.  Returns the final state (an
+    array for flat input, the caller's PyTree structure otherwise) rather than
+    a ``Solution``: the custom-VJP forward can only expose the differentiable
+    output, so per-instance status/stats are unavailable here -- use
+    ``adjoint_backsolve_problem`` to instrument the backward pass.
+    """
+
+    def __init__(
+        self,
+        stepper: Stepper | str | None = None,
+        controller=None,
+        *,
+        rtol=1e-3,
+        atol=1e-6,
+        max_steps: int = 10_000,
+        mode: str = "joint",
+    ):
+        self.stepper = Stepper.coerce(stepper)
+        self.controller = controller
+        self.rtol = rtol
+        self.atol = atol
+        self.max_steps = max_steps
+        self.mode = mode
+
+    def solve(self, f, y0, *, t_start, t_end, args: Any = None):
+        from .adjoint import make_adjoint_solve  # deferred: adjoint imports loop
+
+        y0_flat, raveled = ravel_state(y0)
+        if raveled is None:
+            flat_f = f.vf if isinstance(f, ODETerm) else f
+        else:
+            term = ravel_term(f, raveled)
+            flat_f = term.vf
+        solve_fn = make_adjoint_solve(
+            flat_f,
+            method=self.stepper,
+            rtol=self.rtol,
+            atol=self.atol,
+            max_steps=self.max_steps,
+            mode=self.mode,
+            controller=self.controller,
+        )
+        ys = solve_fn(y0_flat, t_start, t_end, args)
+        return raveled.unravel(ys) if raveled is not None else ys

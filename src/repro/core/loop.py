@@ -1,62 +1,28 @@
-"""The batch-parallel adaptive solver loop (the paper's core contribution).
+"""Compatibility wrappers over the componentized solver core.
 
-Every instance in the batch carries its own time, step size, controller
-history, accept/reject decision and termination status.  The loop body is a
-single fused XLA program driven by ``jax.lax.while_loop`` -- termination is an
-on-device reduction, so there is never a host<->device synchronization inside
-the loop (the GPU-sync avoidance torchode implements by hand in PyTorch).
+The monolithic while/scan solver that used to live here is decomposed into
+``step.py`` (``StepFunction``: the shared ``init/step/finish`` triple,
+``LoopState`` with the statistics registry) and ``drivers.py``
+(``AutoDiffAdjoint`` / ``ScanAdjoint`` / ``BacksolveAdjoint``).  The
+functions below preserve the original one-call API with unchanged signatures;
+new code should compose the components directly::
 
-Instances that finish early keep being *evaluated* (the dynamics run on the
-full batch -- torchode's "overhanging evaluations") but their state is frozen
-by masking, so results are unaffected.
+    solver = AutoDiffAdjoint(Stepper("tsit5"), pid_controller())
+    sol = solver.solve(f, y0, t_eval, args=args)
 """
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any
 
-import jax
-import jax.numpy as jnp
+from .drivers import AutoDiffAdjoint, ScanAdjoint
+from .solution import Solution
 
-from ..kernels import ops
-from .controller import ControllerState, FixedController, PIDController, integral_controller
-from .solution import Solution, Status
-from .stepper import initial_step_size, rk_step
-from .tableau import get_tableau
+# LoopState keeps its historical import path, but note its counter fields
+# (n_steps/n_accepted/...) moved into the ``stats`` registry dict.
+from .step import LoopState, StepFunction  # noqa: F401
+from .stepper import Stepper
 from .terms import as_term
-
-
-class LoopState(NamedTuple):
-    t: jax.Array  # (b,) current time
-    dt: jax.Array  # (b,) signed step proposal for the next attempt
-    y: jax.Array  # (b, f)
-    f0: jax.Array  # (b, f) FSAL derivative cache at (t, y)
-    cstate: ControllerState
-    running: jax.Array  # (b,) bool
-    status: jax.Array  # (b,) int32
-    n_steps: jax.Array  # (b,) int32
-    n_accepted: jax.Array  # (b,) int32
-    n_f_evals: jax.Array  # (b,) int32
-    n_initialized: jax.Array  # (b,) int32
-    ys: jax.Array  # (b, n, f) dense output buffer (or (b, 0, f) when unused)
-    it: jax.Array  # () int32 global iteration counter
-
-
-def _normalize_times(y0, t_eval, t_start, t_end, dtype):
-    b = y0.shape[0]
-    if t_eval is not None:
-        t_eval = jnp.asarray(t_eval, dtype=dtype)
-        if t_eval.ndim == 1:
-            t_eval = jnp.broadcast_to(t_eval[None, :], (b, t_eval.shape[0]))
-        if t_start is None:
-            t_start = t_eval[:, 0]
-        if t_end is None:
-            t_end = t_eval[:, -1]
-    if t_start is None or t_end is None:
-        raise ValueError("need t_eval or (t_start, t_end)")
-    t_start = jnp.broadcast_to(jnp.asarray(t_start, dtype=dtype), (b,))
-    t_end = jnp.broadcast_to(jnp.asarray(t_end, dtype=dtype), (b,))
-    return t_eval, t_start, t_end
 
 
 def make_solver(
@@ -65,196 +31,27 @@ def make_solver(
     method: str = "dopri5",
     rtol=1e-3,
     atol=1e-6,
-    controller: PIDController | FixedController | None = None,
+    controller=None,
     max_steps: int = 10_000,
     batched_term: bool = True,
     dense: bool = True,
     dense_window: int = 0,
 ):
-    """Build (init_fn, body_fn, finish_fn) shared by the while_loop and scan drivers."""
-    term = as_term(f, batched=batched_term)
-    tab = get_tableau(method)
-    if controller is None:
-        controller = FixedController() if tab.b_err is None else integral_controller()
-    k = tab.error_order
-
-    def init(y0, t_eval, t_start, t_end, dt0, args):
-        y0 = jnp.asarray(y0)
-        dtype = y0.dtype
-        b, feat = y0.shape
-        t_eval, t_start, t_end = _normalize_times(y0, t_eval, t_start, t_end, dtype)
-        direction = jnp.sign(t_end - t_start)
-        direction = jnp.where(direction == 0, jnp.ones_like(direction), direction)
-
-        f0 = term.vf(t_start, y0, args)
-        if dt0 is None:
-            dt = initial_step_size(term, t_start, y0, f0, direction, tab.order, atol, rtol, args)
-            n_init_evals = 2
-        else:
-            dt = jnp.broadcast_to(jnp.asarray(dt0, dtype=dtype), (b,)) * direction
-            n_init_evals = 1
-
-        if dense and t_eval is not None:
-            n = t_eval.shape[1]
-            ys = jnp.zeros((b, n, feat), dtype=dtype)
-            # Pre-write all evaluation points at/before t_start (usually just the
-            # first one) with the initial condition.
-            pre = direction[:, None] * (t_eval - t_start[:, None]) <= 0.0
-            ys = jnp.where(pre[:, :, None], y0[:, None, :], ys)
-            n_initialized = pre.sum(axis=1).astype(jnp.int32)
-        else:
-            ys = jnp.zeros((b, 0, feat), dtype=dtype)
-            n_initialized = jnp.zeros((b,), dtype=jnp.int32)
-
-        state = LoopState(
-            t=t_start,
-            dt=dt,
-            y=y0,
-            f0=f0,
-            cstate=controller.init(b, dtype),
-            running=jnp.ones((b,), dtype=bool),
-            status=jnp.zeros((b,), dtype=jnp.int32),
-            n_steps=jnp.zeros((b,), dtype=jnp.int32),
-            n_accepted=jnp.zeros((b,), dtype=jnp.int32),
-            n_f_evals=jnp.full((b,), n_init_evals, dtype=jnp.int32),
-            n_initialized=n_initialized,
-            ys=ys,
-            it=jnp.zeros((), dtype=jnp.int32),
-        )
-        return state, (t_eval, t_start, t_end, direction)
-
-    def body(state: LoopState, consts, args) -> LoopState:
-        t_eval, t_start, t_end, direction = consts
-        tiny = jnp.asarray(jnp.finfo(state.y.dtype).tiny, state.y.dtype)
-        eps = jnp.asarray(jnp.finfo(state.y.dtype).eps, state.y.dtype)
-
-        any_running = jnp.any(state.running)
-
-        windowed = dense and t_eval is not None and dense_window > 0
-        if windowed:
-            # --- windowed dense output (beyond-torchode optimization): only a
-            # static window of W eval points at the per-instance cursor is
-            # touched per step, instead of masking over ALL n points.  The
-            # attempt is clamped so a step never crosses beyond the window's
-            # last point (costs extra steps only when the solver could cross
-            # >W points at once).  See EXPERIMENTS.md SSPerf (solver).
-            n_pts = t_eval.shape[1]
-            W = min(dense_window, n_pts)
-            cursor = jnp.minimum(state.n_initialized, n_pts - W)  # (b,)
-            t_win = jax.vmap(
-                lambda te, c: jax.lax.dynamic_slice(te, (c,), (W,))
-            )(t_eval, cursor)
-            has_beyond = (state.n_initialized + W) < n_pts
-            lim = jnp.where(has_beyond, t_win[:, -1] - state.t, t_end - state.t)
-            clamp = has_beyond & (direction * lim > 0) & (jnp.abs(lim) < jnp.abs(state.dt))
-            dt_prop = jnp.where(clamp, lim, state.dt)
-        else:
-            dt_prop = state.dt
-
-        # --- clamp the attempt so the final step lands exactly on t_end ---
-        rem = t_end - state.t
-        will_finish = jnp.abs(dt_prop) >= jnp.abs(rem)
-        dt_used = jnp.where(will_finish, rem, dt_prop)
-        safe_dt = jnp.where(jnp.abs(dt_used) > tiny, dt_used, jnp.ones_like(dt_used))
-
-        # --- one RK step for the whole batch ---
-        res = rk_step(term, tab, state.t, safe_dt, state.y, state.f0, args)
-        err_ratio = ops.error_norm(res.err, state.y, res.y1, atol, rtol)
-
-        # --- per-instance accept/reject + next step proposal ---
-        accept, dt_next, cstate_new = controller(err_ratio, state.dt, state.cstate, k)
-        accept = accept & state.running
-
-        t_new = jnp.where(will_finish, t_end, state.t + dt_used)
-        done_now = accept & will_finish
-
-        # step-size floor: instances whose step collapses are stopped
-        dt_floor = 8.0 * eps * jnp.maximum(jnp.abs(state.t), jnp.abs(t_end))
-        nonfinite_y = ~jnp.all(jnp.isfinite(res.y1), axis=-1)
-        stopped = state.running & ~accept & (jnp.abs(dt_next) <= dt_floor)
-
-        # --- dense output: write every eval point passed by this step ---
-        ys = state.ys
-        n_initialized = state.n_initialized
-        if windowed:
-            coeffs = ops.hermite_coeffs(state.y, res.y1, state.f0, res.f1, safe_dt)
-            xw = jnp.clip((t_win - state.t[:, None]) / safe_dt[:, None], 0.0, 1.0)
-            after_t = direction[:, None] * (t_win - state.t[:, None]) > 0.0
-            upto_new = direction[:, None] * (t_win - t_new[:, None]) <= 0.0
-            maskw = accept[:, None] & after_t & upto_new
-            feat = ys.shape[-1]
-            cur = jax.vmap(
-                lambda row, c: jax.lax.dynamic_slice(row, (c, 0), (W, feat))
-            )(ys, cursor)
-            merged = ops.interp_eval(coeffs, xw, maskw, cur)
-            ys = jax.vmap(
-                lambda row, m, c: jax.lax.dynamic_update_slice(row, m, (c, 0))
-            )(ys, merged, cursor)
-            n_initialized = n_initialized + maskw.sum(axis=1).astype(jnp.int32)
-        elif dense and t_eval is not None:
-            coeffs = ops.hermite_coeffs(state.y, res.y1, state.f0, res.f1, safe_dt)
-            x = (t_eval - state.t[:, None]) / safe_dt[:, None]
-            x = jnp.clip(x, 0.0, 1.0)  # masked points stay finite (grad-safe)
-            after_t = direction[:, None] * (t_eval - state.t[:, None]) > 0.0
-            upto_new = direction[:, None] * (t_eval - t_new[:, None]) <= 0.0
-            mask = accept[:, None] & after_t & upto_new
-            ys = ops.interp_eval(coeffs, x, mask, ys)
-            n_initialized = n_initialized + mask.sum(axis=1).astype(jnp.int32)
-
-        # --- masked commit ---
-        acc_f = accept[:, None]
-        y = jnp.where(acc_f, res.y1, state.y)
-        f0 = jnp.where(acc_f, res.f1, state.f0)
-        t = jnp.where(accept, t_new, state.t)
-        dt = jnp.where(state.running, dt_next, state.dt)
-
-        running = state.running & ~done_now & ~stopped
-        status = jnp.where(
-            done_now,
-            Status.SUCCESS.value,
-            jnp.where(
-                stopped,
-                jnp.where(nonfinite_y, Status.INFINITE.value, Status.REACHED_DT_MIN.value),
-                state.status,
-            ),
-        ).astype(jnp.int32)
-
-        inc = jnp.where(any_running, 1, 0).astype(jnp.int32)
-        return LoopState(
-            t=t,
-            dt=dt,
-            y=y,
-            f0=f0,
-            cstate=cstate_new if not isinstance(controller, FixedController) else state.cstate,
-            running=running,
-            status=status,
-            n_steps=state.n_steps + inc * state.running.astype(jnp.int32),
-            n_accepted=state.n_accepted + accept.astype(jnp.int32),
-            # torchode semantics: dynamics are evaluated on the full batch while
-            # any instance is running ("overhanging evaluations"), so the count
-            # is shared across the batch.
-            n_f_evals=state.n_f_evals + inc * (res.n_f_evals),
-            n_initialized=n_initialized,
-            ys=ys,
-            it=state.it + inc,
-        )
-
-    def finish(state: LoopState, consts) -> Solution:
-        t_eval, t_start, t_end, direction = consts
-        status = jnp.where(
-            state.running, Status.REACHED_MAX_STEPS.value, state.status
-        ).astype(jnp.int32)
-        stats = {
-            "n_steps": state.n_steps,
-            "n_accepted": state.n_accepted,
-            "n_f_evals": state.n_f_evals,
-            "n_initialized": state.n_initialized,
-        }
-        if dense and t_eval is not None:
-            return Solution(ts=t_eval, ys=state.ys, status=status, stats=stats)
-        return Solution(ts=t_end, ys=state.y, status=status, stats=stats)
-
-    return init, body, finish
+    """Build (init_fn, body_fn, finish_fn) shared by the while_loop and scan
+    drivers.  Compatibility shim over ``StepFunction``; ``max_steps`` is
+    accepted for signature stability but the iteration bound belongs to the
+    caller's loop."""
+    del max_steps
+    step_fn = StepFunction(
+        as_term(f, batched=batched_term),
+        Stepper(method),
+        controller,
+        rtol=rtol,
+        atol=atol,
+        dense=dense,
+        dense_window=dense_window,
+    )
+    return step_fn.init, step_fn.step, step_fn.finish
 
 
 def solve_ivp(
@@ -277,7 +74,9 @@ def solve_ivp(
 ) -> Solution:
     """Solve a batch of IVPs in parallel with independent per-instance state.
 
-    y0:     (batch, features) initial conditions
+    y0:     (batch, features) initial conditions, or any PyTree whose leaves
+            carry the batch as their leading axis (ravelled at the term
+            boundary; the vector field then receives per-instance PyTrees)
     t_eval: (n,) shared or (batch, n) per-instance evaluation points, or None to
             track only the final state (fastest; the CNF case in the paper)
     t_start/t_end: scalars or (batch,) vectors; default to t_eval boundaries.
@@ -285,25 +84,17 @@ def solve_ivp(
 
     Returns a ``Solution`` with per-instance status and statistics.
     """
-    init, body, finish = make_solver(
-        f,
-        method=method,
+    driver = AutoDiffAdjoint(
+        Stepper(method),
+        controller,
         rtol=rtol,
         atol=atol,
-        controller=controller,
         max_steps=max_steps,
-        batched_term=batched_term,
         dense=dense,
         dense_window=dense_window,
+        batched_term=batched_term,
     )
-    state, consts = init(jnp.asarray(y0), t_eval, t_start, t_end, dt0, args)
-
-    state = jax.lax.while_loop(
-        lambda s: jnp.any(s.running) & (s.it < max_steps),
-        lambda s: body(s, consts, args),
-        state,
-    )
-    return finish(state, consts)
+    return driver.solve(f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args)
 
 
 def solve_ivp_scan(
@@ -330,32 +121,15 @@ def solve_ivp_scan(
     (discretize-then-optimize).  ``checkpoint_every`` > 0 wraps blocks of steps
     in ``jax.checkpoint`` to trade recompute for memory on long solves.
     """
-    init, body, finish = make_solver(
-        f,
-        method=method,
+    driver = ScanAdjoint(
+        Stepper(method),
+        controller,
         rtol=rtol,
         atol=atol,
-        controller=controller,
         max_steps=max_steps,
-        batched_term=batched_term,
         dense=dense,
         dense_window=dense_window,
+        batched_term=batched_term,
+        checkpoint_every=checkpoint_every,
     )
-    state, consts = init(jnp.asarray(y0), t_eval, t_start, t_end, dt0, args)
-
-    def scan_body(s, _):
-        return body(s, consts, args), None
-
-    if checkpoint_every and checkpoint_every > 0:
-        blocks, rem = divmod(max_steps, checkpoint_every)
-
-        def block_body(s, _):
-            s, _ = jax.lax.scan(scan_body, s, None, length=checkpoint_every)
-            return s, None
-
-        state, _ = jax.lax.scan(jax.checkpoint(block_body), state, None, length=blocks)
-        if rem:
-            state, _ = jax.lax.scan(scan_body, state, None, length=rem)
-    else:
-        state, _ = jax.lax.scan(scan_body, state, None, length=max_steps)
-    return finish(state, consts)
+    return driver.solve(f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args)

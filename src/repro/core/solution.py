@@ -24,10 +24,14 @@ class Solution:
     """Result of a batched IVP solve.
 
     ts:     (b, n) evaluation times (== the t_eval passed in), or (b,) final times
-    ys:     (b, n, f) solution values, or (b, f) final states when t_eval is None
+    ys:     (b, n, f) solution values, or (b, f) final states when t_eval is None.
+            For a PyTree initial state, ``ys`` is the same PyTree structure with
+            (b, n, ...) / (b, ...) leaves (unravelled at the driver boundary).
     status: (b,) int32, one of ``Status``
-    stats:  dict of per-instance statistics, each (b,) int32:
-            n_steps, n_accepted, n_f_evals, n_initialized
+    stats:  the solver's statistics registry: a dict of named per-instance (b,)
+            accumulators contributed by each component (stepper: n_f_evals,
+            controller: n_accepted, step function: n_steps, n_initialized,
+            plus any user-registered contributors)
     """
 
     ts: jax.Array

@@ -1,0 +1,344 @@
+"""The shared ``init/step/finish`` step function of the batch-parallel solver.
+
+``StepFunction`` composes the three swappable components -- ``ODETerm``
+(dynamics), ``Stepper`` (tableau + RK step + interpolant) and a controller --
+into one adaptive solver step for the whole batch.  The drivers in
+``drivers.py`` iterate it with ``lax.while_loop`` / bounded ``lax.scan``;
+``make_solver`` in ``loop.py`` exposes the bare function triple for callers
+that build their own loop.
+
+Every instance in the batch carries its own time, step size, controller
+history, accept/reject decision and termination status.  The body is a single
+fused XLA program -- termination is an on-device reduction, so there is never
+a host<->device synchronization inside the loop (the GPU-sync avoidance
+torchode implements by hand in PyTorch).  Instances that finish early keep
+being *evaluated* (the dynamics run on the full batch -- torchode's
+"overhanging evaluations") but their state is frozen by masking, so results
+are unaffected.
+
+Statistics registry
+-------------------
+``LoopState.stats`` is a dict of named per-instance ``(b,)`` accumulators
+instead of hard-coded counter fields.  Each component contributes entries via
+an ``init_stats(batch) -> dict`` hook and advances them in
+``update_stats(stats, ctx) -> dict``, where ``ctx`` is a ``StepContext``
+describing the step just taken.  The stepper records ``n_f_evals``, the
+controller ``n_accepted``, the step function itself ``n_steps`` and
+``n_initialized``; user code can register additional contributors through
+``extra_stats`` to record any solver-internal metric (paper Sec. 3's
+per-instance stats, generalized).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .controller import (
+    ControllerState,
+    FixedController,
+    _ControllerStats,
+    integral_controller,
+)
+from .solution import Solution, Status
+from .stepper import Stepper
+from .terms import ODETerm, as_term
+
+
+class LoopState(NamedTuple):
+    t: jax.Array  # (b,) current time
+    dt: jax.Array  # (b,) signed step proposal for the next attempt
+    y: jax.Array  # (b, f)
+    f0: jax.Array  # (b, f) FSAL derivative cache at (t, y)
+    cstate: ControllerState
+    running: jax.Array  # (b,) bool
+    status: jax.Array  # (b,) int32
+    stats: dict[str, jax.Array]  # named (b,) accumulators (statistics registry)
+    ys: jax.Array  # (b, n, f) dense output buffer (or (b, 0, f) when unused)
+    it: jax.Array  # () int32 global iteration counter
+
+
+class StepContext(NamedTuple):
+    """What a statistics contributor may observe about the step just taken."""
+
+    running: jax.Array  # (b,) bool: running mask *before* this step
+    accept: jax.Array  # (b,) bool: accepted this step (masked by running)
+    step_active: jax.Array  # () int32: 1 while any instance runs (overhanging evals)
+    n_f_evals: int  # static dynamics-evaluation count of this step
+    n_written: jax.Array  # (b,) int32: dense-output points written this step
+    err_ratio: jax.Array  # (b,) weighted RMS error ratio of this step
+
+
+def _normalize_times(y0, t_eval, t_start, t_end, dtype):
+    b = y0.shape[0]
+    if t_eval is not None:
+        t_eval = jnp.asarray(t_eval, dtype=dtype)
+        if t_eval.ndim == 1:
+            t_eval = jnp.broadcast_to(t_eval[None, :], (b, t_eval.shape[0]))
+        if t_start is None:
+            t_start = t_eval[:, 0]
+        if t_end is None:
+            t_end = t_eval[:, -1]
+    if t_start is None or t_end is None:
+        raise ValueError("need t_eval or (t_start, t_end)")
+    t_start = jnp.broadcast_to(jnp.asarray(t_start, dtype=dtype), (b,))
+    t_end = jnp.broadcast_to(jnp.asarray(t_end, dtype=dtype), (b,))
+    return t_eval, t_start, t_end
+
+
+class StepFunction:
+    """One adaptive solver step for the whole batch, on flat (b, f) buffers.
+
+    PyTree states are ravelled *before* they reach this class (see
+    ``terms.ravel_state`` / the drivers); the hot loop and the Pallas kernels
+    only ever see flat arrays.
+    """
+
+    def __init__(
+        self,
+        term: ODETerm,
+        stepper: Stepper | str | None = None,
+        controller=None,
+        *,
+        rtol=1e-3,
+        atol=1e-6,
+        dense: bool = True,
+        dense_window: int = 0,
+        extra_stats: tuple = (),
+    ):
+        self.term = as_term(term)
+        stepper = self.stepper = Stepper.coerce(stepper)
+        if controller is None:
+            controller = integral_controller() if stepper.is_adaptive else FixedController()
+        self.controller = controller
+        self.rtol = rtol
+        self.atol = atol
+        self.dense = dense
+        self.dense_window = dense_window
+        # Registry order: component contributions first, loop bookkeeping last.
+        # Duck-typed controllers predating the registry (init/__call__ only)
+        # still get n_accepted recorded -- it was unconditional before and the
+        # Solution.stats contract promises it.
+        controller_stats = (
+            self.controller if hasattr(self.controller, "init_stats") else _ControllerStats()
+        )
+        self.stat_contributors = (self.stepper, controller_stats, self, *extra_stats)
+
+    # --- the step function's own statistics contribution ---
+    def init_stats(self, batch: int) -> dict[str, jax.Array]:
+        zeros = jnp.zeros((batch,), dtype=jnp.int32)
+        return {"n_steps": zeros, "n_initialized": zeros}
+
+    def update_stats(self, stats: dict, ctx: StepContext) -> dict:
+        return {
+            **stats,
+            "n_steps": stats["n_steps"] + ctx.step_active * ctx.running.astype(jnp.int32),
+            "n_initialized": stats["n_initialized"] + ctx.n_written,
+        }
+
+    def _collect_init_stats(self, batch: int) -> dict[str, jax.Array]:
+        stats: dict[str, jax.Array] = {}
+        for c in self.stat_contributors:
+            hook = getattr(c, "init_stats", None)
+            if hook is not None:
+                for name, acc in hook(batch).items():
+                    if name in stats:
+                        raise ValueError(f"duplicate statistic {name!r} in registry")
+                    stats[name] = acc
+        return stats
+
+    def _apply_stat_updates(self, stats: dict, ctx: StepContext) -> dict:
+        for c in self.stat_contributors:
+            hook = getattr(c, "update_stats", None)
+            if hook is not None:
+                stats = hook(stats, ctx)
+        return stats
+
+    def init(self, y0, t_eval=None, t_start=None, t_end=None, dt0=None, args=None):
+        """Build the initial LoopState.  Returns ``(state, consts)`` where
+        ``consts = (t_eval, t_start, t_end, direction)`` is loop-invariant."""
+        y0 = jnp.asarray(y0)
+        dtype = y0.dtype
+        b, feat = y0.shape
+        t_eval, t_start, t_end = _normalize_times(y0, t_eval, t_start, t_end, dtype)
+        direction = jnp.sign(t_end - t_start)
+        direction = jnp.where(direction == 0, jnp.ones_like(direction), direction)
+
+        f0 = self.stepper.init(self.term, t_start, y0, args)
+        if dt0 is None:
+            # The proposal is clamped to the controller's step bounds so an
+            # over-eager heuristic can never violate dt_min/dt_max.
+            dt = self.stepper.initial_step_size(
+                self.term, t_start, y0, f0, direction, self.atol, self.rtol, args,
+                dt_min=getattr(self.controller, "dt_min", 0.0),
+                dt_max=getattr(self.controller, "dt_max", float("inf")),
+            )
+            n_init_evals = 2
+        else:
+            dt = jnp.broadcast_to(jnp.asarray(dt0, dtype=dtype), (b,)) * direction
+            n_init_evals = 1
+
+        if self.dense and t_eval is not None:
+            n = t_eval.shape[1]
+            ys = jnp.zeros((b, n, feat), dtype=dtype)
+            # Pre-write all evaluation points at/before t_start (usually just the
+            # first one) with the initial condition.
+            pre = direction[:, None] * (t_eval - t_start[:, None]) <= 0.0
+            ys = jnp.where(pre[:, :, None], y0[:, None, :], ys)
+            n_initialized = pre.sum(axis=1).astype(jnp.int32)
+        else:
+            ys = jnp.zeros((b, 0, feat), dtype=dtype)
+            n_initialized = jnp.zeros((b,), dtype=jnp.int32)
+
+        stats = self._collect_init_stats(b)
+        stats["n_f_evals"] = stats["n_f_evals"] + n_init_evals
+        stats["n_initialized"] = stats["n_initialized"] + n_initialized
+
+        state = LoopState(
+            t=t_start,
+            dt=dt,
+            y=y0,
+            f0=f0,
+            cstate=self.controller.init(b, dtype),
+            running=jnp.ones((b,), dtype=bool),
+            status=jnp.zeros((b,), dtype=jnp.int32),
+            stats=stats,
+            ys=ys,
+            it=jnp.zeros((), dtype=jnp.int32),
+        )
+        return state, (t_eval, t_start, t_end, direction)
+
+    def step(self, state: LoopState, consts, args) -> LoopState:
+        term, stepper, controller = self.term, self.stepper, self.controller
+        k = stepper.error_order
+        t_eval, t_start, t_end, direction = consts
+        tiny = jnp.asarray(jnp.finfo(state.y.dtype).tiny, state.y.dtype)
+        eps = jnp.asarray(jnp.finfo(state.y.dtype).eps, state.y.dtype)
+
+        any_running = jnp.any(state.running)
+
+        windowed = self.dense and t_eval is not None and self.dense_window > 0
+        if windowed:
+            # --- windowed dense output (beyond-torchode optimization): only a
+            # static window of W eval points at the per-instance cursor is
+            # touched per step, instead of masking over ALL n points.  The
+            # attempt is clamped so a step never crosses beyond the window's
+            # last point (costs extra steps only when the solver could cross
+            # >W points at once).  See EXPERIMENTS.md SSPerf (solver).
+            n_pts = t_eval.shape[1]
+            W = min(self.dense_window, n_pts)
+            cursor = jnp.minimum(state.stats["n_initialized"], n_pts - W)  # (b,)
+            t_win = jax.vmap(
+                lambda te, c: jax.lax.dynamic_slice(te, (c,), (W,))
+            )(t_eval, cursor)
+            has_beyond = (state.stats["n_initialized"] + W) < n_pts
+            lim = jnp.where(has_beyond, t_win[:, -1] - state.t, t_end - state.t)
+            clamp = has_beyond & (direction * lim > 0) & (jnp.abs(lim) < jnp.abs(state.dt))
+            dt_prop = jnp.where(clamp, lim, state.dt)
+        else:
+            dt_prop = state.dt
+
+        # --- clamp the attempt so the final step lands exactly on t_end ---
+        rem = t_end - state.t
+        will_finish = jnp.abs(dt_prop) >= jnp.abs(rem)
+        dt_used = jnp.where(will_finish, rem, dt_prop)
+        safe_dt = jnp.where(jnp.abs(dt_used) > tiny, dt_used, jnp.ones_like(dt_used))
+
+        # --- one RK step for the whole batch ---
+        res = stepper.step(term, state.t, safe_dt, state.y, state.f0, args)
+        err_ratio = ops.error_norm(res.err, state.y, res.y1, self.atol, self.rtol)
+
+        # --- per-instance accept/reject + next step proposal ---
+        accept, dt_next, cstate_new = controller(err_ratio, state.dt, state.cstate, k)
+        accept = accept & state.running
+
+        t_new = jnp.where(will_finish, t_end, state.t + dt_used)
+        done_now = accept & will_finish
+
+        # step-size floor: instances whose step collapses are stopped
+        dt_floor = 8.0 * eps * jnp.maximum(jnp.abs(state.t), jnp.abs(t_end))
+        nonfinite_y = ~jnp.all(jnp.isfinite(res.y1), axis=-1)
+        stopped = state.running & ~accept & (jnp.abs(dt_next) <= dt_floor)
+
+        # --- dense output: write every eval point passed by this step ---
+        ys = state.ys
+        n_written = jnp.zeros_like(state.running, dtype=jnp.int32)
+        if windowed:
+            coeffs = stepper.interp_coeffs(state.y, res.y1, state.f0, res.f1, safe_dt)
+            xw = jnp.clip((t_win - state.t[:, None]) / safe_dt[:, None], 0.0, 1.0)
+            after_t = direction[:, None] * (t_win - state.t[:, None]) > 0.0
+            upto_new = direction[:, None] * (t_win - t_new[:, None]) <= 0.0
+            maskw = accept[:, None] & after_t & upto_new
+            feat = ys.shape[-1]
+            cur = jax.vmap(
+                lambda row, c: jax.lax.dynamic_slice(row, (c, 0), (W, feat))
+            )(ys, cursor)
+            merged = ops.interp_eval(coeffs, xw, maskw, cur)
+            ys = jax.vmap(
+                lambda row, m, c: jax.lax.dynamic_update_slice(row, m, (c, 0))
+            )(ys, merged, cursor)
+            n_written = maskw.sum(axis=1).astype(jnp.int32)
+        elif self.dense and t_eval is not None:
+            coeffs = stepper.interp_coeffs(state.y, res.y1, state.f0, res.f1, safe_dt)
+            x = (t_eval - state.t[:, None]) / safe_dt[:, None]
+            x = jnp.clip(x, 0.0, 1.0)  # masked points stay finite (grad-safe)
+            after_t = direction[:, None] * (t_eval - state.t[:, None]) > 0.0
+            upto_new = direction[:, None] * (t_eval - t_new[:, None]) <= 0.0
+            mask = accept[:, None] & after_t & upto_new
+            ys = ops.interp_eval(coeffs, x, mask, ys)
+            n_written = mask.sum(axis=1).astype(jnp.int32)
+
+        # --- masked commit ---
+        acc_f = accept[:, None]
+        y = jnp.where(acc_f, res.y1, state.y)
+        f0 = jnp.where(acc_f, res.f1, state.f0)
+        t = jnp.where(accept, t_new, state.t)
+        dt = jnp.where(state.running, dt_next, state.dt)
+
+        running = state.running & ~done_now & ~stopped
+        status = jnp.where(
+            done_now,
+            Status.SUCCESS.value,
+            jnp.where(
+                stopped,
+                jnp.where(nonfinite_y, Status.INFINITE.value, Status.REACHED_DT_MIN.value),
+                state.status,
+            ),
+        ).astype(jnp.int32)
+
+        inc = jnp.where(any_running, 1, 0).astype(jnp.int32)
+        ctx = StepContext(
+            running=state.running,
+            accept=accept,
+            step_active=inc,
+            n_f_evals=res.n_f_evals,
+            n_written=n_written,
+            err_ratio=err_ratio,
+        )
+        stats = self._apply_stat_updates(dict(state.stats), ctx)
+
+        return LoopState(
+            t=t,
+            dt=dt,
+            y=y,
+            f0=f0,
+            cstate=cstate_new if not isinstance(controller, FixedController) else state.cstate,
+            running=running,
+            status=status,
+            stats=stats,
+            ys=ys,
+            it=state.it + inc,
+        )
+
+    def finish(self, state: LoopState, consts) -> Solution:
+        t_eval, t_start, t_end, direction = consts
+        status = jnp.where(
+            state.running, Status.REACHED_MAX_STEPS.value, state.status
+        ).astype(jnp.int32)
+        stats = dict(state.stats)
+        if self.dense and t_eval is not None:
+            return Solution(ts=t_eval, ys=state.ys, status=status, stats=stats)
+        return Solution(ts=t_end, ys=state.y, status=status, stats=stats)

@@ -1,9 +1,15 @@
-"""Explicit Runge-Kutta stepper with FSAL/SSAL reuse and fused stage math.
+"""Explicit Runge-Kutta stepping: the swappable "step method" component.
 
-One ``step`` computes all stage derivatives, the 5th/embedded-order update and
-the error estimate.  The per-stage accumulation and the final (update, error)
-pair go through ``repro.kernels.ops`` so the hot loops run as single fused
-kernels (Pallas on TPU, XLA-fused jnp on CPU).
+``Stepper`` owns the Butcher tableau, the fused RK step (FSAL/SSAL reuse) and
+the dense-output interpolant.  One ``step`` computes all stage derivatives,
+the 5th/embedded-order update and the error estimate.  The per-stage
+accumulation and the final (update, error) pair go through
+``repro.kernels.ops`` so the hot loops run as single fused kernels (Pallas on
+TPU, XLA-fused jnp on CPU).
+
+The module-level ``rk_step`` / ``initial_step_size`` functions remain the
+underlying primitives; ``Stepper`` is the object the drivers compose with a
+term and a controller (``AutoDiffAdjoint(Stepper("tsit5"), pid_controller())``).
 """
 
 from __future__ import annotations
@@ -14,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
-from .tableau import ButcherTableau
+from .tableau import ButcherTableau, get_tableau
 from .terms import ODETerm
 
 
@@ -80,8 +86,16 @@ def initial_step_size(
     atol,
     rtol,
     args: Any = None,
+    *,
+    dt_min: float = 0.0,
+    dt_max: float = float("inf"),
 ) -> jax.Array:
-    """Hairer/Noersett/Wanner automatic initial step selection, vectorized."""
+    """Hairer/Noersett/Wanner automatic initial step selection, vectorized.
+
+    The proposal magnitude is clamped to ``[dt_min, dt_max]`` so an over-eager
+    first step can never exceed the controller's step bounds (on smooth
+    problems the heuristic happily proposes steps 100x larger than ``h0``).
+    """
     dtype = y0.dtype
     atol = jnp.asarray(atol, dtype=dtype)
     rtol = jnp.asarray(rtol, dtype=dtype)
@@ -92,7 +106,7 @@ def initial_step_size(
     scale = atol + jnp.abs(y0) * rtol
 
     def rms(x):
-        return jnp.sqrt(jnp.mean(jnp.square(x / scale), axis=-1))
+        return ops.rms_norm(x, scale)
 
     d0 = rms(y0)
     d1 = rms(f0)
@@ -108,4 +122,95 @@ def initial_step_size(
         jnp.maximum(1e-6, h0 * 1e-3),
         (0.01 / jnp.maximum(dmax, 1e-30)) ** (1.0 / order),
     )
-    return jnp.minimum(100.0 * h0, h1) * direction
+    h = jnp.clip(jnp.minimum(100.0 * h0, h1), dt_min, dt_max)
+    return h * direction
+
+
+class Stepper:
+    """Owns tableau + RK step + interpolant; stateless across steps.
+
+    Construct from a method name or an explicit tableau::
+
+        Stepper("tsit5")
+        Stepper(my_tableau)
+
+    Contributes ``n_f_evals`` to the solver's statistics registry (the static
+    per-step evaluation count, shared across the batch because the dynamics
+    run on the full batch while any instance is running -- torchode's
+    "overhanging evaluations").
+    """
+
+    def __init__(self, method: str | ButcherTableau = "dopri5"):
+        self.tableau = get_tableau(method) if isinstance(method, str) else method
+
+    @classmethod
+    def coerce(cls, value: "Stepper | str | ButcherTableau | None") -> "Stepper":
+        """Normalize the stepper argument accepted by drivers/StepFunction."""
+        if value is None:
+            return cls()
+        if isinstance(value, Stepper):
+            return value
+        return cls(value)
+
+    @property
+    def order(self) -> int:
+        return self.tableau.order
+
+    @property
+    def error_order(self) -> int:
+        return self.tableau.error_order
+
+    @property
+    def is_adaptive(self) -> bool:
+        return self.tableau.b_err is not None
+
+    def init(self, term: ODETerm, t0: jax.Array, y0: jax.Array, args: Any) -> jax.Array:
+        """Seed the FSAL derivative cache: f(t0, y0)."""
+        return term.vf(t0, y0, args)
+
+    def step(
+        self,
+        term: ODETerm,
+        t: jax.Array,
+        dt: jax.Array,
+        y: jax.Array,
+        f0: jax.Array,
+        args: Any,
+    ) -> StepResult:
+        return rk_step(term, self.tableau, t, dt, y, f0, args)
+
+    def interp_coeffs(self, y0, y1, f0, f1, dt):
+        """Dense-output interpolant coefficients (cubic Hermite, Horner form)."""
+        return ops.hermite_coeffs(y0, y1, f0, f1, dt)
+
+    def initial_step_size(
+        self,
+        term: ODETerm,
+        t0,
+        y0,
+        f0,
+        direction,
+        atol,
+        rtol,
+        args: Any = None,
+        *,
+        dt_min: float = 0.0,
+        dt_max: float = float("inf"),
+    ) -> jax.Array:
+        return initial_step_size(
+            term, t0, y0, f0, direction, self.tableau.order, atol, rtol, args,
+            dt_min=dt_min, dt_max=dt_max,
+        )
+
+    # --- statistics registry contribution ---
+    def init_stats(self, batch: int) -> dict[str, jax.Array]:
+        return {"n_f_evals": jnp.zeros((batch,), dtype=jnp.int32)}
+
+    def update_stats(self, stats: dict, ctx) -> dict:
+        return {
+            **stats,
+            "n_f_evals": stats["n_f_evals"] + ctx.step_active * ctx.n_f_evals,
+        }
+
+    def __repr__(self) -> str:
+        return f"Stepper({self.tableau.name!r})"

@@ -1,17 +1,27 @@
 """ODE terms: the dynamics wrapper the solver integrates.
 
-The solver's calling convention is batched: ``f(t, y, args)`` with ``t`` of
-shape (batch,) and ``y`` of shape (batch, features).  ``ODETerm`` adapts
+The solver's hot loop is strictly batched-flat: ``f(t, y, args)`` with ``t``
+of shape (batch,) and ``y`` of shape (batch, features).  ``ODETerm`` adapts
 common user signatures onto that convention.
+
+Arbitrary PyTree-structured states (nested dicts/tuples of arrays, the latent
+states of latent ODEs and CNFs) are supported by ravelling at the *term
+boundary* via ``jax.flatten_util``: the loop, the controllers and the Pallas
+kernels only ever see flat ``(b, f)`` buffers, and the user's vector field
+only ever sees its own PyTree.  ``ravel_state`` builds the round-trip,
+``ravel_term`` adapts the per-instance PyTree dynamics onto the flat batched
+convention.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,3 +54,80 @@ def as_term(f: Callable | ODETerm, *, batched: bool = True, with_args: bool | No
     if with_args is None:
         with_args = True
     return ODETerm(f, batched=batched, with_args=with_args)
+
+
+class RaveledState(NamedTuple):
+    """Round-trip between a batched PyTree state and the flat (b, f) buffer
+    the solver loop operates on.
+
+    ``unravel_one`` maps a single (f,) vector back to one instance's PyTree
+    (the closure produced by ``jax.flatten_util.ravel_pytree``).
+    """
+
+    unravel_one: Callable[[jax.Array], Any]
+    num_features: int
+
+    def ravel(self, y: Any) -> jax.Array:
+        """Batched PyTree (leaves (b, ...)) -> flat (b, f)."""
+        return jax.vmap(lambda inst: ravel_pytree(inst)[0])(y)
+
+    def unravel(self, ys: jax.Array) -> Any:
+        """(b, f) -> batched PyTree; (b, n, f) -> PyTree with (b, n, ...) leaves."""
+        if ys.ndim == 3:
+            return jax.vmap(jax.vmap(self.unravel_one))(ys)
+        return jax.vmap(self.unravel_one)(ys)
+
+
+def ravel_state(y0: Any) -> tuple[jax.Array, RaveledState | None]:
+    """Normalize a user initial state onto the flat (b, f) convention.
+
+    Returns ``(y0_flat, raveled)``.  ``raveled`` is ``None`` when ``y0`` is
+    already a flat (b, f) array (or nested numeric lists, the historical
+    convenience), otherwise a ``RaveledState`` describing the round-trip.
+    Every leaf of a PyTree state must carry the batch as its leading axis.
+    """
+    if isinstance(y0, (jax.Array, np.ndarray)):
+        return jnp.asarray(y0), None
+    if isinstance(y0, (list, tuple)):
+        # Nested *numeric* lists are the historical flat-array convenience.  A
+        # list/tuple with array leaves is a genuine PyTree (e.g. a pair of
+        # (b,)-shaped states) and must NOT be stacked into a (b, f) buffer.
+        leaves = jax.tree_util.tree_leaves(y0)
+        all_scalars = all(
+            isinstance(leaf, (int, float, complex, bool))
+            or getattr(leaf, "ndim", None) == 0
+            for leaf in leaves
+        )
+        if all_scalars:
+            arr = jnp.asarray(y0)
+            if arr.ndim == 2:
+                return arr, None
+    y0 = jax.tree_util.tree_map(jnp.asarray, y0)
+    one = jax.tree_util.tree_map(lambda x: x[0], y0)
+    flat0, unravel_one = ravel_pytree(one)
+    raveled = RaveledState(unravel_one=unravel_one, num_features=flat0.shape[0])
+    return raveled.ravel(y0), raveled
+
+
+def ravel_term(
+    f: Callable | ODETerm, raveled: RaveledState, *, with_args: bool = True
+) -> ODETerm:
+    """Adapt a *per-instance* PyTree vector field ``f(t, y_tree, args) ->
+    dy_tree`` onto the flat batched convention.
+
+    Ravel/unravel happens only at this boundary; the step math, controllers
+    and kernels all stay on (b, f) buffers.
+    """
+    if isinstance(f, ODETerm):
+        with_args = f.with_args
+        f = f.f
+
+    def flat_f(t, y, args):
+        def one(ti, yi):
+            yt = raveled.unravel_one(yi)
+            dy = f(ti, yt, args) if with_args else f(ti, yt)
+            return ravel_pytree(dy)[0]
+
+        return jax.vmap(one)(t, y)
+
+    return ODETerm(flat_f, batched=True, with_args=True)

@@ -5,8 +5,9 @@ Backend selection (env var ``REPRO_KERNEL_BACKEND``):
   - ``pallas``    compiled Pallas TPU kernels (default on TPU)
   - ``interpret`` Pallas kernels in interpret mode (CPU correctness validation)
 
-The solver core only ever imports from this module, so swapping the backend
-never touches solver logic.
+The solver core (``core/stepper.py`` for the stage math, ``core/step.py`` for
+the error norm and dense-output interpolation) only ever imports from this
+module, so swapping the backend never touches solver logic.
 """
 
 from __future__ import annotations
@@ -71,3 +72,4 @@ def interp_eval(coeffs, x, mask, out):
 
 
 hermite_coeffs = ref.hermite_coeffs  # pure arithmetic; fused into callers by XLA
+rms_norm = ref.rms_norm  # init-time only (step-size selection); never in the hot loop

@@ -54,6 +54,17 @@ def error_norm(err, y0, y1, atol, rtol):
     return jnp.sqrt(jnp.mean(ratio * ratio, axis=-1))
 
 
+def rms_norm(x, scale):
+    """Scaled RMS over the feature axis: ||x / scale||_rms.
+
+    x, scale: (b, f) (scale may broadcast).  Returns (b,).  Used by the
+    automatic initial-step-size heuristic; ``error_norm`` is the in-loop
+    variant with the accept/reject scale convention.
+    """
+    ratio = x / scale
+    return jnp.sqrt(jnp.mean(ratio * ratio, axis=-1))
+
+
 def hermite_coeffs(y0, y1, f0, f1, dt):
     """Cubic-Hermite dense-output coefficients in Horner form.
 

@@ -1,5 +1,34 @@
 import os
 import sys
 
+import pytest
+
 # smoke tests and benches must see ONE device; only dryrun.py forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Backends whose kernels go through pallas_call, which has no reverse-mode
+# rule: gradient-through-the-loop tests only run on the ref backend leg.
+_NONDIFF_BACKENDS = ("pallas", "interpret")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "reverse_diff: test reverse-differentiates through the solver loop "
+        "(skipped on pallas/interpret kernel backends)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    from repro.kernels import ops
+
+    backend = ops.backend()  # resolves "auto" (-> pallas on TPU, ref on CPU)
+    if backend not in _NONDIFF_BACKENDS:
+        return
+    skip = pytest.mark.skip(
+        reason=f"REPRO_KERNEL_BACKEND={backend}: pallas_call has no reverse-mode "
+        "rule; gradient tests run on the ref backend"
+    )
+    for item in items:
+        if item.get_closest_marker("reverse_diff"):
+            item.add_marker(skip)

@@ -31,6 +31,7 @@ def reference():
     return ref_grads()
 
 
+@pytest.mark.reverse_diff
 @pytest.mark.parametrize("mode", ["joint", "per_instance"])
 def test_adjoint_matches_direct(mode, reference):
     solve = make_adjoint_solve(linear, mode=mode, rtol=1e-8, atol=1e-8)
@@ -70,6 +71,7 @@ def test_joint_and_per_instance_agree():
     np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
 
 
+@pytest.mark.reverse_diff
 def test_adjoint_pytree_params():
     def mlp_dyn(t, y, p):
         return jnp.tanh(y @ p["w"]) @ p["v"]
@@ -92,6 +94,7 @@ def test_adjoint_pytree_params():
         np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_ref[k]), atol=3e-4)
 
 
+@pytest.mark.reverse_diff
 def test_dense_adjoint_matches_direct():
     """Adjoint with evaluation points: segment-wise backsolve (torchode's
     dense-output adjoint)."""

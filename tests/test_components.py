@@ -1,0 +1,331 @@
+"""The componentized API: PyTree states, drivers, and the statistics registry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoDiffAdjoint,
+    BacksolveAdjoint,
+    FixedController,
+    ODETerm,
+    ScanAdjoint,
+    Status,
+    Stepper,
+    StepFunction,
+    integral_controller,
+    make_solver,
+    pid_controller,
+    ravel_state,
+    solve_ivp,
+    solve_ivp_scan,
+)
+from repro.core.stepper import initial_step_size
+
+
+def decay(t, y, args):
+    return -y
+
+
+def tree_decay(t, y, args):
+    """Per-instance PyTree dynamics: every leaf decays."""
+    return jax.tree_util.tree_map(lambda x: -x, y)
+
+
+NESTED_Y0 = {
+    "pos": jnp.array([[1.0, 2.0], [0.5, -1.0], [3.0, 0.1]]),
+    "aux": {"v": jnp.array([[2.0], [1.0], [-0.5]])},
+}
+
+
+class TestPyTreeStates:
+    def test_nested_dict_roundtrip_matches_flat(self):
+        """A nested-dict IVP through AutoDiffAdjoint equals the flat-array
+        solve on the raveled state, and stats come from the registry."""
+        t_eval = jnp.linspace(0.0, 1.5, 7)
+        solver = AutoDiffAdjoint(Stepper("tsit5"), pid_controller(),
+                                 rtol=1e-7, atol=1e-9)
+        sol = solver.solve(tree_decay, NESTED_Y0, t_eval)
+
+        y0_flat, raveled = ravel_state(NESTED_Y0)
+        assert raveled is not None and raveled.num_features == 3
+        flat = solver.solve(decay, y0_flat, t_eval)
+
+        assert jax.tree_util.tree_structure(sol.ys) == jax.tree_util.tree_structure(NESTED_Y0)
+        assert sol.ys["pos"].shape == (3, 7, 2)
+        assert sol.ys["aux"]["v"].shape == (3, 7, 1)
+        # same flat trajectory once re-raveled
+        reravel = jnp.concatenate(
+            [sol.ys["aux"]["v"], sol.ys["pos"]], axis=-1
+        )  # ravel_pytree sorts dict keys: aux < pos
+        np.testing.assert_allclose(np.asarray(reravel), np.asarray(flat.ys),
+                                   rtol=1e-6, atol=1e-8)
+        for key in ("n_steps", "n_accepted", "n_f_evals", "n_initialized"):
+            np.testing.assert_array_equal(np.asarray(sol.stats[key]),
+                                          np.asarray(flat.stats[key]))
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
+
+    def test_pytree_backward_in_time(self):
+        """Integrating dy/dt = -y from t=1 down to t=0 grows by e."""
+        solver = AutoDiffAdjoint(Stepper("dopri5"), rtol=1e-9, atol=1e-9)
+        sol = solver.solve(tree_decay, NESTED_Y0, None, t_start=1.0, t_end=0.0)
+        expect = jax.tree_util.tree_map(lambda x: np.asarray(x) * np.e, NESTED_Y0)
+        for got, want in zip(jax.tree_util.tree_leaves(sol.ys),
+                             jax.tree_util.tree_leaves(expect)):
+            np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+    def test_pytree_mixed_directions(self):
+        """Per-instance integration ranges with mixed directions."""
+        y0 = {"a": jnp.ones((3, 1)), "b": jnp.full((3, 2), 2.0)}
+        t_start = jnp.array([0.0, 0.0, 1.0])
+        t_end = jnp.array([1.0, 2.0, -1.0])
+        solver = AutoDiffAdjoint(Stepper("dopri5"), rtol=1e-9, atol=1e-9)
+        sol = solver.solve(tree_decay, y0, None, t_start=t_start, t_end=t_end)
+        scale = np.exp(-(np.asarray(t_end) - np.asarray(t_start)))
+        np.testing.assert_allclose(np.asarray(sol.ys["a"])[:, 0], scale, rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(sol.ys["b"]),
+            np.broadcast_to(2.0 * scale[:, None], (3, 2)),
+            rtol=1e-5,
+        )
+
+    def test_tuple_pytree_of_1d_leaves_not_mistaken_for_flat(self):
+        """A tuple of (b,)-shaped states is a PyTree, not a (b, f) array."""
+        y0 = (jnp.array([1.0, 2.0, 3.0]), jnp.array([0.5, 0.5, 0.5]))
+        sol = AutoDiffAdjoint(Stepper("dopri5"), rtol=1e-8, atol=1e-8).solve(
+            tree_decay, y0, None, t_start=0.0, t_end=1.0)
+        assert isinstance(sol.ys, tuple) and len(sol.ys) == 2
+        for got, want in zip(sol.ys, y0):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want) * np.exp(-1.0),
+                                       rtol=1e-5)
+
+    def test_nested_numeric_lists_still_flat(self):
+        y0_flat, raveled = ravel_state([[1.0, 2.0], [3.0, 4.0]])
+        assert raveled is None and y0_flat.shape == (2, 2)
+
+    def test_solve_ivp_wrapper_accepts_pytree(self):
+        """The compatibility wrapper inherits PyTree support from the driver."""
+        sol = solve_ivp(tree_decay, NESTED_Y0, None, t_start=0.0, t_end=1.0,
+                        rtol=1e-8, atol=1e-8)
+        np.testing.assert_allclose(
+            np.asarray(sol.ys["pos"]), np.asarray(NESTED_Y0["pos"]) * np.exp(-1.0),
+            rtol=1e-5,
+        )
+
+    @pytest.mark.reverse_diff
+    def test_scan_adjoint_pytree_gradient(self):
+        """Reverse-mode gradients flow through the ravel boundary."""
+        def dyn(t, y, a):
+            return jax.tree_util.tree_map(lambda x: -a * x, y)
+
+        def loss(a):
+            driver = ScanAdjoint(Stepper("dopri5"), max_steps=64, rtol=1e-6, atol=1e-8)
+            sol = driver.solve(dyn, {"x": jnp.ones((2, 1))}, None,
+                               t_start=0.0, t_end=1.0, args=a)
+            return jnp.sum(sol.ys["x"])
+
+        g = jax.grad(loss)(1.5)
+        assert abs(float(g) - (-2 * np.exp(-1.5))) < 1e-4
+
+
+class TestDrivers:
+    def test_autodiff_adjoint_matches_solve_ivp(self):
+        y0 = jnp.array([[1.0, 0.5], [0.2, -0.4]])
+        t_eval = jnp.linspace(0.0, 2.0, 9)
+        a = AutoDiffAdjoint(Stepper("dopri5"), integral_controller()).solve(decay, y0, t_eval)
+        b = solve_ivp(decay, y0, t_eval, method="dopri5", controller=integral_controller())
+        np.testing.assert_allclose(np.asarray(a.ys), np.asarray(b.ys), rtol=1e-7)
+        for key in a.stats:
+            np.testing.assert_array_equal(np.asarray(a.stats[key]), np.asarray(b.stats[key]))
+
+    @pytest.mark.reverse_diff
+    def test_scan_adjoint_matches_solve_ivp_scan_gradient(self):
+        def loss_driver(a):
+            sol = ScanAdjoint(Stepper("dopri5"), max_steps=64, rtol=1e-6, atol=1e-8,
+                              checkpoint_every=16).solve(
+                lambda t, y, a_: -a_ * y, jnp.ones((2, 1)), None,
+                t_start=0.0, t_end=1.0, args=a)
+            return jnp.sum(sol.ys)
+
+        def loss_wrapper(a):
+            sol = solve_ivp_scan(lambda t, y, a_: -a_ * y, jnp.ones((2, 1)), None,
+                                 t_start=0.0, t_end=1.0, args=a, max_steps=64,
+                                 rtol=1e-6, atol=1e-8, checkpoint_every=16)
+            return jnp.sum(sol.ys)
+
+        g1 = jax.grad(loss_driver)(1.3)
+        g2 = jax.grad(loss_wrapper)(1.3)
+        np.testing.assert_allclose(float(g1), float(g2), rtol=1e-6)
+
+    @pytest.mark.reverse_diff
+    def test_backsolve_adjoint_gradients(self):
+        A0 = jnp.array([[-0.5, 0.3], [-0.2, -0.8]])
+        Y0 = jnp.array([[1.0, 0.5], [0.3, -1.2]])
+
+        def linear(t, y, A):
+            return y @ A.T
+
+        driver = BacksolveAdjoint(Stepper("dopri5"), rtol=1e-8, atol=1e-8)
+
+        def loss(A):
+            return jnp.sum(driver.solve(linear, Y0, t_start=jnp.zeros(2),
+                                        t_end=jnp.ones(2), args=A) ** 2)
+
+        def loss_ref(A):
+            s = solve_ivp_scan(linear, Y0, None, t_start=0.0, t_end=1.0, args=A,
+                               rtol=1e-8, atol=1e-8, max_steps=128)
+            return jnp.sum(s.ys ** 2)
+
+        gA = jax.grad(loss)(A0)
+        gA_ref = jax.grad(loss_ref)(A0)
+        np.testing.assert_allclose(np.asarray(gA), np.asarray(gA_ref), atol=2e-4)
+
+    def test_make_solver_triple_still_composable(self):
+        """The legacy (init, body, finish) triple drives a hand-rolled loop."""
+        init, body, finish = make_solver(decay, method="dopri5", rtol=1e-8, atol=1e-8)
+        state, consts = init(jnp.ones((2, 1)), None, 0.0, 1.0, None, None)
+        state = jax.lax.while_loop(
+            lambda s: jnp.any(s.running) & (s.it < 1000),
+            lambda s: body(s, consts, None),
+            state,
+        )
+        sol = finish(state, consts)
+        np.testing.assert_allclose(np.asarray(sol.ys)[:, 0], np.exp(-1.0), rtol=1e-6)
+
+    def test_driver_accepts_method_string(self):
+        sol = AutoDiffAdjoint("tsit5").solve(decay, jnp.ones((1, 1)), None,
+                                             t_start=0.0, t_end=1.0)
+        np.testing.assert_allclose(np.asarray(sol.ys)[0, 0], np.exp(-1.0), rtol=1e-3)
+
+    @pytest.mark.reverse_diff
+    def test_backsolve_adjoint_custom_tableau(self):
+        """A Stepper built from an unregistered tableau must drive the
+        backward solve with its own coefficients (regression: the stepper used
+        to be degraded to its tableau *name*)."""
+        import dataclasses as dc
+
+        from repro.core import get_tableau
+
+        custom = dc.replace(get_tableau("dopri5"), name="my_dopri5")
+        driver = BacksolveAdjoint(Stepper(custom), rtol=1e-8, atol=1e-8)
+        y = driver.solve(decay, jnp.ones((2, 1)), t_start=jnp.zeros(2),
+                         t_end=jnp.ones(2))
+        np.testing.assert_allclose(np.asarray(y)[:, 0], np.exp(-1.0), rtol=1e-6)
+        g = jax.grad(lambda y0: jnp.sum(driver.solve(decay, y0, t_start=jnp.zeros(2),
+                                                     t_end=jnp.ones(2))))(jnp.ones((2, 1)))
+        np.testing.assert_allclose(np.asarray(g), np.exp(-1.0), rtol=1e-5)
+
+
+class TestInitialStepClamp:
+    """Regression: the automatic first-step proposal must respect the
+    controller's dt bounds (it used to be unbounded -- on smooth problems the
+    heuristic proposes 100x its pilot step)."""
+
+    def test_proposal_clamped_to_dt_max(self):
+        term = ODETerm(decay)
+        y0 = jnp.ones((2, 4))
+        t0 = jnp.zeros((2,))
+        direction = jnp.ones((2,))
+        f0 = term.vf(t0, y0, None)
+        free = initial_step_size(term, t0, y0, f0, direction, 5, 1e-6, 1e-3)
+        assert np.all(np.asarray(jnp.abs(free)) > 0.05), "smooth problem: eager proposal"
+        clamped = initial_step_size(term, t0, y0, f0, direction, 5, 1e-6, 1e-3,
+                                    dt_min=0.0, dt_max=0.01)
+        np.testing.assert_allclose(np.asarray(jnp.abs(clamped)), 0.01, rtol=1e-6)
+        floored = initial_step_size(term, t0, y0, f0, direction, 5, 1e-6, 1e-3,
+                                    dt_min=0.5, dt_max=10.0)
+        assert np.all(np.asarray(jnp.abs(floored)) >= 0.5)
+
+    def test_solver_first_step_respects_controller_dt_max(self):
+        ctrl = integral_controller(dt_max=0.01)
+        sol = solve_ivp(decay, jnp.ones((1, 1)), None, t_start=0.0, t_end=1.0,
+                        controller=ctrl, rtol=1e-3, atol=1e-6)
+        # dt <= 0.01 everywhere (including the first step) forces >= 100 steps
+        assert int(np.asarray(sol.stats["n_steps"])[0]) >= 100
+        assert np.asarray(sol.status)[0] == Status.SUCCESS.value
+
+    def test_clamp_preserves_direction(self):
+        term = ODETerm(decay)
+        y0 = jnp.ones((1, 2))
+        f0 = term.vf(jnp.zeros((1,)), y0, None)
+        h = initial_step_size(term, jnp.zeros((1,)), y0, f0, -jnp.ones((1,)), 5,
+                              1e-6, 1e-3, dt_max=0.01)
+        assert float(h[0]) == pytest.approx(-0.01)
+
+
+class RejectionCounter:
+    """A user-registered statistics contributor (counts rejected attempts)."""
+
+    def init_stats(self, batch):
+        return {"n_rejected": jnp.zeros((batch,), dtype=jnp.int32)}
+
+    def update_stats(self, stats, ctx):
+        rejected = ctx.running & ~ctx.accept
+        return {**stats, "n_rejected": stats["n_rejected"] + rejected.astype(jnp.int32)}
+
+
+class TestStatsRegistry:
+    def vdp(self, t, y, mu):
+        x, xd = y[..., 0], y[..., 1]
+        return jnp.stack((xd, mu * (1 - x ** 2) * xd - x), axis=-1)
+
+    def test_default_registry_keys(self):
+        sol = solve_ivp(decay, jnp.ones((2, 1)), None, t_start=0.0, t_end=1.0)
+        assert set(sol.stats) == {"n_steps", "n_accepted", "n_f_evals", "n_initialized"}
+
+    def test_custom_contributor(self):
+        y0 = jnp.stack([jnp.array([2.0, 0.0]) + 0.3 * i for i in range(4)])
+        driver = AutoDiffAdjoint(Stepper("dopri5"), extra_stats=(RejectionCounter(),))
+        sol = driver.solve(self.vdp, y0, None, t_start=0.0, t_end=10.0, args=10.0)
+        stats = {k: np.asarray(v) for k, v in sol.stats.items()}
+        assert "n_rejected" in stats
+        np.testing.assert_array_equal(
+            stats["n_rejected"], stats["n_steps"] - stats["n_accepted"]
+        )
+
+    def test_duplicate_stat_name_rejected(self):
+        class Clash:
+            def init_stats(self, batch):
+                return {"n_steps": jnp.zeros((batch,), jnp.int32)}
+
+        sf = StepFunction(ODETerm(decay), Stepper("dopri5"), extra_stats=(Clash(),))
+        with pytest.raises(ValueError, match="duplicate statistic"):
+            sf.init(jnp.ones((1, 1)), None, 0.0, 1.0, None, None)
+
+    def test_registry_under_jit(self):
+        driver = AutoDiffAdjoint(Stepper("tsit5"), extra_stats=(RejectionCounter(),))
+        f = jax.jit(lambda y: driver.solve(self.vdp, y, None, t_start=0.0,
+                                           t_end=5.0, args=5.0).stats["n_rejected"])
+        out = f(jnp.array([[2.0, 0.0]] * 3))
+        assert out.shape == (3,)
+
+    def test_duck_typed_controller_still_records_n_accepted(self):
+        """Pre-registry custom controllers (no init_stats hook) keep the
+        unconditional n_accepted stat the Solution contract promises."""
+        class OldSchoolController:
+            dt_min = 0.0
+            dt_max = float("inf")
+
+            def init(self, batch, dtype):
+                one = jnp.ones((batch,), dtype=dtype)
+                from repro.core.controller import ControllerState
+                return ControllerState(one, one)
+
+            def __call__(self, err_ratio, dt, state, k):
+                accept = jnp.isfinite(err_ratio) & (err_ratio <= 1.0)
+                factor = jnp.where(accept, 1.1, 0.5)
+                return accept, dt * factor, state
+
+        sol = solve_ivp(decay, jnp.ones((2, 1)), None, t_start=0.0, t_end=1.0,
+                        controller=OldSchoolController())
+        stats = {k: np.asarray(v) for k, v in sol.stats.items()}
+        assert "n_accepted" in stats
+        assert np.all(stats["n_accepted"] <= stats["n_steps"])
+        assert np.all(stats["n_accepted"] > 0)
+
+    def test_fixed_controller_registry(self):
+        sol = solve_ivp(decay, jnp.ones((2, 1)), None, t_start=0.0, t_end=1.0,
+                        method="rk4", dt0=0.1, max_steps=20)
+        stats = {k: np.asarray(v) for k, v in sol.stats.items()}
+        np.testing.assert_array_equal(stats["n_steps"], stats["n_accepted"])

@@ -169,6 +169,7 @@ class TestControllers:
         assert int(np.asarray(sol.stats["n_steps"])[0]) < 60
 
 
+@pytest.mark.reverse_diff
 class TestDifferentiability:
     def test_scan_gradient_matches_analytic(self):
         def loss(a):
