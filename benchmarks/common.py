@@ -20,6 +20,12 @@ import numpy as np
 from repro.core import solve_ivp
 
 
+def vdp(t, y, mu):
+    """The Van der Pol RHS shared by the VdP-based suites (Table 3, stiff)."""
+    x, xd = y[..., 0], y[..., 1]
+    return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
+
+
 def timed(fn, *args, repeats=3, warmup=1):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))

@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [table3|table4|table5|fig1|fig2|all] [--json [PATH]]
+  python -m benchmarks.run [table3|table4|table5|fig1|fig2|stiff|all] [--json [PATH]]
 
 Prints ``name,value,derived`` CSV rows (value is microseconds for *_time
 rows).  ``--json`` additionally writes the rows to a JSON file (default
@@ -17,7 +17,8 @@ import time
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="?", default="all",
-                        choices=["all", "table3", "table4", "table5", "fig1", "fig2"])
+                        choices=["all", "table3", "table4", "table5", "fig1", "fig2",
+                                 "stiff"])
     parser.add_argument("--json", nargs="?", const="BENCH_solver.json", default=None,
                         metavar="PATH", help="also write rows to a JSON file")
     opts = parser.parse_args()
@@ -44,6 +45,13 @@ def main() -> None:
         from . import pid_bench
 
         suites.append(("fig2_pid", pid_bench.rows))
+    if which == "stiff":
+        # Not part of "all": the explicit-solver baselines grind at their
+        # stability limit by design (200k-step budgets).  Run explicitly, or
+        # at reduced size with REPRO_STIFF_SMOKE=1.
+        from . import stiff_bench
+
+        suites.append(("stiff", stiff_bench.rows))
 
     records = []
     print("name,value,derived")

@@ -1,0 +1,101 @@
+"""Stiff suite: explicit vs implicit steppers on classic stiff problems.
+
+Two problems where every instance of the batch is stiff -- the regime the
+explicit-only solver could not touch (any stiff instance grinds at its
+stability limit, the exact within-batch pathology the paper measures):
+
+  robertson   the 3-species chemical kinetics IVP (rates spanning 9 orders
+              of magnitude), t in [0, 100]
+  vdp1000     Van der Pol with mu = 1000, t in [0, 20] (relaxation phase)
+
+For each problem we run ``kvaerno5`` (SDIRK + batched masked Newton) and
+``dopri5`` at the same tolerance and report wall time, accepted steps, Newton
+iterations and Jacobian evaluations.  The explicit method gets a generous but
+bounded step budget; when it hits the cap the step ratio reported is a lower
+bound.
+
+``REPRO_STIFF_SMOKE=1`` shrinks batch/horizons/budgets for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solve_ivp
+
+from .common import timed, vdp
+
+
+def robertson(t, y, args):
+    y1, y2, y3 = y[..., 0], y[..., 1], y[..., 2]
+    r1 = -0.04 * y1 + 1e4 * y2 * y3
+    r3 = 3e7 * y2 * y2
+    return jnp.stack((r1, -r1 - r3, r3), axis=-1)
+
+
+def _solve(f, y0, t_end, method, max_steps, args=None, atol=1e-8, rtol=1e-5):
+    fn = jax.jit(
+        lambda y: solve_ivp(f, y, None, t_start=0.0, t_end=t_end, method=method,
+                            atol=atol, rtol=rtol, args=args, max_steps=max_steps)
+    )
+    sol = fn(y0)
+    total, _ = timed(fn, y0, repeats=2)
+    stats = {k: np.asarray(v) for k, v in sol.stats.items()}
+    return sol, stats, total
+
+
+def _problem_rows(tag, f, y0, t_end, args, imp_steps, exp_steps):
+    out = []
+    isol, istats, itime = _solve(f, y0, t_end, "kvaerno5", imp_steps, args)
+    esol, estats, etime = _solve(f, y0, t_end, "dopri5", exp_steps, args)
+    i_acc = float(istats["n_accepted"].mean())
+    e_acc = float(estats["n_accepted"].mean())
+    i_done = bool(np.all(np.asarray(isol.status) == 0))
+    e_done = bool(np.all(np.asarray(esol.status) == 0))
+    out.append((f"{tag}/kvaerno5/total_time", itime * 1e6,
+                f"acc={i_acc:.0f} newton={istats['n_newton_iters'].mean():.0f} "
+                f"jac={istats['n_jac_evals'].mean():.0f} finished={i_done}"))
+    out.append((f"{tag}/dopri5/total_time", etime * 1e6,
+                f"acc={e_acc:.0f} finished={e_done}"))
+    if not i_done:
+        # A truncated implicit solve would make the headline ratio bogus:
+        # report the failure itself instead of a flattering number.
+        out.append((f"{tag}/IMPLICIT_SOLVE_FAILED", 1.0,
+                    f"statuses={np.asarray(isol.status).tolist()}"))
+        return out
+    ratio = e_acc / max(i_acc, 1.0)
+    out.append((f"{tag}/explicit_vs_implicit_step_ratio", ratio,
+                "x more accepted steps when explicit"
+                + ("" if e_done else " (lower bound: capped)")))
+    return out
+
+
+def rows():
+    smoke = os.environ.get("REPRO_STIFF_SMOKE", "0") == "1"
+    batch = 4 if smoke else 32
+    key = jax.random.PRNGKey(0)
+
+    out = []
+    # Van der Pol mu=1000: relaxation-oscillation stiffness.
+    y0 = jnp.array([2.0, 0.0]) + 0.05 * jax.random.normal(key, (batch, 2))
+    t_end = 2.0 if smoke else 20.0
+    exp_cap = 4000 if smoke else 200_000
+    out += _problem_rows("vdp1000", vdp, y0, t_end, 1000.0,
+                         imp_steps=20_000, exp_steps=exp_cap)
+
+    # Robertson kinetics: rate constants spanning 9 orders of magnitude.
+    ry0 = jnp.tile(jnp.array([[1.0, 0.0, 0.0]]), (batch, 1))
+    rt_end = 1.0 if smoke else 100.0
+    rexp_cap = 4000 if smoke else 50_000
+    out += _problem_rows("robertson", robertson, ry0, rt_end, None,
+                         imp_steps=20_000, exp_steps=rexp_cap)
+    return out
+
+
+if __name__ == "__main__":
+    for name, v, extra in rows():
+        print(f"{name},{v:.1f},{extra}")

@@ -19,12 +19,7 @@ import numpy as np
 
 from repro.core import solve_ivp
 
-from .common import solve_joint, timed
-
-
-def vdp(t, y, mu):
-    x, xd = y[..., 0], y[..., 1]
-    return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
+from .common import solve_joint, timed, vdp
 
 
 def run(batch=256, mu=2.0, n_eval=200, tol=1e-5):

@@ -19,13 +19,29 @@ from .controller import (
 )
 from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint
 from .loop import make_solver, solve_ivp, solve_ivp_scan
+from .newton import NewtonResult, newton_solve
 from .solution import Solution, Status
 from .step import LoopState, StepContext, StepFunction
-from .stepper import Stepper, StepResult, initial_step_size, rk_step
+from .stepper import (
+    AbstractStepper,
+    DiagonallyImplicitRK,
+    DIRKCarry,
+    ExplicitRK,
+    Stepper,
+    StepResult,
+    initial_step_size,
+    rk_step,
+)
 from .tableau import TABLEAUS, ButcherTableau, get_tableau
 from .terms import ODETerm, RaveledState, as_term, ravel_state, ravel_term
 
 __all__ = [
+    "AbstractStepper",
+    "DiagonallyImplicitRK",
+    "DIRKCarry",
+    "ExplicitRK",
+    "NewtonResult",
+    "newton_solve",
     "FixedController",
     "PIDController",
     "integral_controller",

@@ -26,13 +26,13 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from .loop import solve_ivp
-from .stepper import Stepper
+from .stepper import AbstractStepper
 
 
 def make_adjoint_solve(
     f: Callable,
     *,
-    method: str | Stepper = "dopri5",
+    method: str | AbstractStepper = "dopri5",
     rtol=1e-3,
     atol=1e-6,
     max_steps: int = 10_000,
@@ -43,15 +43,16 @@ def make_adjoint_solve(
     solves the adjoint ODE backwards in time (O(1) memory in solver steps).
 
     ``f(t, y, params)`` is the batched dynamics; ``params`` any pytree.
-    ``method`` is a tableau name or a ``Stepper``.  ``mode`` is "joint"
+    ``method`` is a tableau name or a stepper (explicit or implicit -- the
+    backward adjoint solve reuses the same method).  ``mode`` is "joint"
     (single fused adjoint problem, paper's recommended default) or
     "per_instance" (fully independent adjoint solves).
     """
     assert mode in ("joint", "per_instance")
-    if isinstance(method, Stepper):
-        # Pass the tableau object itself so custom (unregistered) tableaus
-        # keep their coefficients in the backward solve.
-        method = method.tableau
+    # ``method`` may be a stepper object: it is passed through to solve_ivp
+    # unchanged (coerce returns it as-is), so custom tableaus AND stepper
+    # configuration (e.g. an implicit stepper's Newton knobs) apply to both
+    # the forward and the backward adjoint solve.
 
     @jax.custom_vjp
     def _solve(y0, t_start, t_end, params):

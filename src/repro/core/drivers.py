@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from .solution import Solution
 from .step import StepFunction
-from .stepper import Stepper
+from .stepper import AbstractStepper
 from .terms import ODETerm, as_term, ravel_state, ravel_term
 
 
@@ -44,7 +44,7 @@ class _Driver:
 
     def __init__(
         self,
-        stepper: Stepper | str | None = None,
+        stepper: AbstractStepper | str | None = None,
         controller=None,
         *,
         rtol=1e-3,
@@ -55,7 +55,7 @@ class _Driver:
         batched_term: bool = True,
         extra_stats: tuple = (),
     ):
-        self.stepper = Stepper.coerce(stepper)
+        self.stepper = AbstractStepper.coerce(stepper)
         self.controller = controller
         self.rtol = rtol
         self.atol = atol
@@ -176,7 +176,7 @@ class BacksolveAdjoint:
 
     def __init__(
         self,
-        stepper: Stepper | str | None = None,
+        stepper: AbstractStepper | str | None = None,
         controller=None,
         *,
         rtol=1e-3,
@@ -184,7 +184,7 @@ class BacksolveAdjoint:
         max_steps: int = 10_000,
         mode: str = "joint",
     ):
-        self.stepper = Stepper.coerce(stepper)
+        self.stepper = AbstractStepper.coerce(stepper)
         self.controller = controller
         self.rtol = rtol
         self.atol = atol

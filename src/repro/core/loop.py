@@ -21,7 +21,7 @@ from .solution import Solution
 # LoopState keeps its historical import path, but note its counter fields
 # (n_steps/n_accepted/...) moved into the ``stats`` registry dict.
 from .step import LoopState, StepFunction  # noqa: F401
-from .stepper import Stepper
+from .stepper import AbstractStepper
 from .terms import as_term
 
 
@@ -44,7 +44,7 @@ def make_solver(
     del max_steps
     step_fn = StepFunction(
         as_term(f, batched=batched_term),
-        Stepper(method),
+        AbstractStepper.coerce(method),
         controller,
         rtol=rtol,
         atol=atol,
@@ -81,11 +81,17 @@ def solve_ivp(
             track only the final state (fastest; the CNF case in the paper)
     t_start/t_end: scalars or (batch,) vectors; default to t_eval boundaries.
             Integration ranges may differ per instance, including direction.
+    method: a tableau name -- explicit ("dopri5", "tsit5", ...) or implicit
+            ("kvaerno5", "kvaerno3", "trbdf2", "implicit_euler") for stiff
+            problems; implicit names route through ``DiagonallyImplicitRK``.
+    rtol/atol: scalars shared by the batch, or per-instance (b,) vectors --
+            each instance is then held to its own tolerance by the error norm
+            and the step-size controller (torchode's per-instance tolerances).
 
     Returns a ``Solution`` with per-instance status and statistics.
     """
     driver = AutoDiffAdjoint(
-        Stepper(method),
+        AbstractStepper.coerce(method),
         controller,
         rtol=rtol,
         atol=atol,
@@ -122,7 +128,7 @@ def solve_ivp_scan(
     in ``jax.checkpoint`` to trade recompute for memory on long solves.
     """
     driver = ScanAdjoint(
-        Stepper(method),
+        AbstractStepper.coerce(method),
         controller,
         rtol=rtol,
         atol=atol,

@@ -1,8 +1,13 @@
 """The shared ``init/step/finish`` step function of the batch-parallel solver.
 
 ``StepFunction`` composes the three swappable components -- ``ODETerm``
-(dynamics), ``Stepper`` (tableau + RK step + interpolant) and a controller --
-into one adaptive solver step for the whole batch.  The drivers in
+(dynamics), a stepper (``ExplicitRK`` / ``DiagonallyImplicitRK``: tableau +
+stage recursion + interpolant) and a controller -- into one adaptive solver
+step for the whole batch.  Steppers may thread private cross-step state
+(``LoopState.scarry``, e.g. the implicit stepper's reused Jacobian and its
+per-instance refresh mask) and report per-instance nonlinear-solver failure,
+which the loop turns into an ordinary controller reject by forcing that
+instance's error ratio to infinity.  The drivers in
 ``drivers.py`` iterate it with ``lax.while_loop`` / bounded ``lax.scan``;
 ``make_solver`` in ``loop.py`` exposes the bare function triple for callers
 that build their own loop.
@@ -44,7 +49,7 @@ from .controller import (
     integral_controller,
 )
 from .solution import Solution, Status
-from .stepper import Stepper
+from .stepper import AbstractStepper, Stepper
 from .terms import ODETerm, as_term
 
 
@@ -53,6 +58,7 @@ class LoopState(NamedTuple):
     dt: jax.Array  # (b,) signed step proposal for the next attempt
     y: jax.Array  # (b, f)
     f0: jax.Array  # (b, f) FSAL derivative cache at (t, y)
+    scarry: Any  # stepper cross-step carry (() for explicit, Jacobian for DIRK)
     cstate: ControllerState
     running: jax.Array  # (b,) bool
     status: jax.Array  # (b,) int32
@@ -67,9 +73,10 @@ class StepContext(NamedTuple):
     running: jax.Array  # (b,) bool: running mask *before* this step
     accept: jax.Array  # (b,) bool: accepted this step (masked by running)
     step_active: jax.Array  # () int32: 1 while any instance runs (overhanging evals)
-    n_f_evals: int  # static dynamics-evaluation count of this step
+    n_f_evals: Any  # dynamics-evaluation count of this step (int or () int32)
     n_written: jax.Array  # (b,) int32: dense-output points written this step
     err_ratio: jax.Array  # (b,) weighted RMS error ratio of this step
+    aux: dict | None = None  # stepper-private extras (e.g. Newton iteration counts)
 
 
 def _normalize_times(y0, t_eval, t_start, t_end, dtype):
@@ -100,7 +107,7 @@ class StepFunction:
     def __init__(
         self,
         term: ODETerm,
-        stepper: Stepper | str | None = None,
+        stepper: AbstractStepper | str | None = None,
         controller=None,
         *,
         rtol=1e-3,
@@ -110,7 +117,7 @@ class StepFunction:
         extra_stats: tuple = (),
     ):
         self.term = as_term(term)
-        stepper = self.stepper = Stepper.coerce(stepper)
+        stepper = self.stepper = AbstractStepper.coerce(stepper)
         if controller is None:
             controller = integral_controller() if stepper.is_adaptive else FixedController()
         self.controller = controller
@@ -157,6 +164,13 @@ class StepFunction:
                 stats = hook(stats, ctx)
         return stats
 
+    def _scale(self, y: jax.Array) -> jax.Array:
+        """The (b, f) error scale atol + rtol*|y| shared by the acceptance
+        test and the Newton convergence test.  Tolerances may be scalars,
+        per-instance (b,) vectors or full (b, f) arrays."""
+        atol, rtol = ops.broadcast_tolerances(self.atol, self.rtol, y.dtype)
+        return atol + rtol * jnp.abs(y)
+
     def init(self, y0, t_eval=None, t_start=None, t_end=None, dt0=None, args=None):
         """Build the initial LoopState.  Returns ``(state, consts)`` where
         ``consts = (t_eval, t_start, t_end, direction)`` is loop-invariant."""
@@ -202,6 +216,7 @@ class StepFunction:
             dt=dt,
             y=y0,
             f0=f0,
+            scarry=self.stepper.init_carry(self.term, t_start, y0, f0, args),
             cstate=self.controller.init(b, dtype),
             running=jnp.ones((b,), dtype=bool),
             status=jnp.zeros((b,), dtype=jnp.int32),
@@ -248,12 +263,26 @@ class StepFunction:
         safe_dt = jnp.where(jnp.abs(dt_used) > tiny, dt_used, jnp.ones_like(dt_used))
 
         # --- one RK step for the whole batch ---
-        res = stepper.step(term, state.t, safe_dt, state.y, state.f0, args)
+        res = stepper.step(
+            term, state.t, safe_dt, state.y, state.f0, args,
+            carry=state.scarry, scale=self._scale(state.y),
+        )
         err_ratio = ops.error_norm(res.err, state.y, res.y1, self.atol, self.rtol)
+        if res.solver_failed is not None:
+            # Nonlinear-solver divergence flows through the ordinary
+            # controller reject path: an infinite error ratio is a hard
+            # reject that shrinks that instance's step and retries.
+            err_ratio = jnp.where(res.solver_failed, jnp.inf, err_ratio)
 
         # --- per-instance accept/reject + next step proposal ---
         accept, dt_next, cstate_new = controller(err_ratio, state.dt, state.cstate, k)
         accept = accept & state.running
+        if res.solver_failed is not None:
+            # A failed nonlinear solve must never be committed, even by an
+            # always-accept controller (FixedController): the iterate is
+            # garbage.  Under a fixed step this retries until max_steps, a
+            # visible failure instead of a silently wrong SUCCESS.
+            accept = accept & ~res.solver_failed
 
         t_new = jnp.where(will_finish, t_end, state.t + dt_used)
         done_now = accept & will_finish
@@ -317,6 +346,7 @@ class StepFunction:
             n_f_evals=res.n_f_evals,
             n_written=n_written,
             err_ratio=err_ratio,
+            aux=res.stats_aux,
         )
         stats = self._apply_stat_updates(dict(state.stats), ctx)
 
@@ -325,7 +355,10 @@ class StepFunction:
             dt=dt,
             y=y,
             f0=f0,
-            cstate=cstate_new if not isinstance(controller, FixedController) else state.cstate,
+            scarry=stepper.commit_carry(state.scarry, res.carry, accept, state.running),
+            # Every controller returns its own next state (masking non-advances
+            # internally), so the loop threads it uniformly -- no special cases.
+            cstate=cstate_new,
             running=running,
             status=status,
             stats=stats,

@@ -1,15 +1,27 @@
-"""Explicit Runge-Kutta stepping: the swappable "step method" component.
+"""Runge-Kutta stepping: the swappable "step method" component hierarchy.
 
-``Stepper`` owns the Butcher tableau, the fused RK step (FSAL/SSAL reuse) and
-the dense-output interpolant.  One ``step`` computes all stage derivatives,
-the 5th/embedded-order update and the error estimate.  The per-stage
-accumulation and the final (update, error) pair go through
-``repro.kernels.ops`` so the hot loops run as single fused kernels (Pallas on
-TPU, XLA-fused jnp on CPU).
+``AbstractStepper`` is the protocol every step method implements -- construct
+(``init``/``init_carry``), advance (``step``), interpolate (``interp_coeffs``),
+propose a first step (``initial_step_size``) and contribute to the statistics
+registry (``init_stats``/``update_stats``).  Two implementations:
+
+``ExplicitRK``
+    The tableau + FSAL explicit path (``Stepper`` is kept as a compatibility
+    alias).  One ``step`` computes all stage derivatives, the solution update
+    and the embedded error estimate through the fused kernels in
+    ``repro.kernels.ops``.
+``DiagonallyImplicitRK``
+    SDIRK/ESDIRK methods for stiff problems (implicit_euler, trbdf2,
+    kvaerno3, kvaerno5).  Each implicit stage equation is solved by the
+    batched masked-Newton layer in ``core/newton.py`` -- per-instance
+    convergence masks, Jacobians from ``ODETerm.vf_jac`` (autodiff default,
+    user-overridable) and chord-style Jacobian reuse across stages AND steps
+    with a per-instance refresh mask carried in the loop state.
 
 The module-level ``rk_step`` / ``initial_step_size`` functions remain the
-underlying primitives; ``Stepper`` is the object the drivers compose with a
-term and a controller (``AutoDiffAdjoint(Stepper("tsit5"), pid_controller())``).
+underlying primitives; steppers are the objects the drivers compose with a
+term and a controller (``AutoDiffAdjoint(ExplicitRK("tsit5"),
+pid_controller())`` or ``AutoDiffAdjoint("kvaerno5")``).
 """
 
 from __future__ import annotations
@@ -18,8 +30,10 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels import ops
+from .newton import newton_solve
 from .tableau import ButcherTableau, get_tableau
 from .terms import ODETerm
 
@@ -28,7 +42,26 @@ class StepResult(NamedTuple):
     y1: jax.Array  # (b, f) candidate next state
     err: jax.Array  # (b, f) embedded error estimate (zeros for fixed-step)
     f1: jax.Array  # (b, f) f(t + dt, y1) -- exact for FSAL/SSAL tableaus
-    n_f_evals: int  # static count of dynamics evaluations in this step
+    n_f_evals: Any  # dynamics evaluations in this step (int or () int32)
+    carry: Any = ()  # stepper-private cross-step state proposal (e.g. Jacobian)
+    solver_failed: jax.Array | None = None  # (b,) bool: nonlinear solve failed
+    stats_aux: dict | None = None  # extra per-step stats (n_newton_iters, ...)
+
+
+def _tableau_arrays(tab: ButcherTableau, dtype):
+    """Tableau coefficients as host-side numpy (a, c, b_sol, b_err): they are
+    compile-time constants, which lets the Pallas kernels unroll them into the
+    VPU instruction stream (no coefficient loads at runtime).  Fixed-step
+    tableaus (b_err is None) get zero error weights."""
+    a = np.asarray(tab.a, dtype=dtype)
+    c = np.asarray(tab.c, dtype=dtype)
+    b_sol = np.asarray(tab.b_sol, dtype=dtype)
+    b_err = (
+        np.asarray(tab.b_err, dtype=dtype)
+        if tab.b_err is not None
+        else np.zeros((tab.stages,), dtype=dtype)
+    )
+    return a, c, b_sol, b_err
 
 
 def rk_step(
@@ -40,21 +73,8 @@ def rk_step(
     f0: jax.Array,  # (b, f) derivative at (t, y); FSAL cache
     args: Any,
 ) -> StepResult:
-    import numpy as np
-
     s = tab.stages
-    dtype = y.dtype
-    # Tableau coefficients stay as host-side numpy: they are compile-time
-    # constants, which lets the Pallas kernels unroll them into the VPU
-    # instruction stream (no coefficient loads at runtime).
-    a = np.asarray(tab.a, dtype=dtype)
-    c = np.asarray(tab.c, dtype=dtype)
-    b_sol = np.asarray(tab.b_sol, dtype=dtype)
-    b_err = (
-        np.asarray(tab.b_err, dtype=dtype)
-        if tab.b_err is not None
-        else np.zeros((s,), dtype=dtype)
-    )
+    a, c, b_sol, b_err = _tableau_arrays(tab, y.dtype)
 
     ks = [f0]  # stage 0 is always f(t, y) == the FSAL cache
     n_evals = 0
@@ -96,13 +116,7 @@ def initial_step_size(
     first step can never exceed the controller's step bounds (on smooth
     problems the heuristic happily proposes steps 100x larger than ``h0``).
     """
-    dtype = y0.dtype
-    atol = jnp.asarray(atol, dtype=dtype)
-    rtol = jnp.asarray(rtol, dtype=dtype)
-    if atol.ndim == 1:
-        atol = atol[:, None]
-    if rtol.ndim == 1:
-        rtol = rtol[:, None]
+    atol, rtol = ops.broadcast_tolerances(atol, rtol, y0.dtype)
     scale = atol + jnp.abs(y0) * rtol
 
     def rms(x):
@@ -126,31 +140,27 @@ def initial_step_size(
     return h * direction
 
 
-class Stepper:
-    """Owns tableau + RK step + interpolant; stateless across steps.
+class AbstractStepper:
+    """The step-method protocol the drivers and ``StepFunction`` compose.
 
-    Construct from a method name or an explicit tableau::
-
-        Stepper("tsit5")
-        Stepper(my_tableau)
-
-    Contributes ``n_f_evals`` to the solver's statistics registry (the static
-    per-step evaluation count, shared across the batch because the dynamics
-    run on the full batch while any instance is running -- torchode's
-    "overhanging evaluations").
+    A stepper owns a tableau, is stateless across *construction* (all
+    cross-step state lives in the loop-carried ``carry`` it proposes), and
+    contributes named per-instance accumulators to the statistics registry.
     """
 
-    def __init__(self, method: str | ButcherTableau = "dopri5"):
-        self.tableau = get_tableau(method) if isinstance(method, str) else method
+    tableau: ButcherTableau
 
-    @classmethod
-    def coerce(cls, value: "Stepper | str | ButcherTableau | None") -> "Stepper":
-        """Normalize the stepper argument accepted by drivers/StepFunction."""
+    @staticmethod
+    def coerce(value: "AbstractStepper | str | ButcherTableau | None") -> "AbstractStepper":
+        """Normalize the stepper argument accepted by drivers/StepFunction:
+        explicit tableaus get an ``ExplicitRK``, implicit ones a
+        ``DiagonallyImplicitRK``."""
         if value is None:
-            return cls()
-        if isinstance(value, Stepper):
+            return ExplicitRK()
+        if isinstance(value, AbstractStepper):
             return value
-        return cls(value)
+        tab = get_tableau(value) if isinstance(value, str) else value
+        return DiagonallyImplicitRK(tab) if tab.implicit else ExplicitRK(tab)
 
     @property
     def order(self) -> int:
@@ -165,8 +175,14 @@ class Stepper:
         return self.tableau.b_err is not None
 
     def init(self, term: ODETerm, t0: jax.Array, y0: jax.Array, args: Any) -> jax.Array:
-        """Seed the FSAL derivative cache: f(t0, y0)."""
+        """Seed the derivative cache: f(t0, y0) (the FSAL seed)."""
         return term.vf(t0, y0, args)
+
+    def init_carry(self, term: ODETerm, t0, y0, f0, args) -> Any:
+        """Build the stepper's cross-step carry (lives in ``LoopState``).
+        Explicit methods carry nothing; implicit ones carry the Jacobian and
+        its per-instance refresh mask."""
+        return ()
 
     def step(
         self,
@@ -176,8 +192,25 @@ class Stepper:
         y: jax.Array,
         f0: jax.Array,
         args: Any,
+        carry: Any = (),
+        scale: jax.Array | None = None,
     ) -> StepResult:
-        return rk_step(term, self.tableau, t, dt, y, f0, args)
+        raise NotImplementedError
+
+    def commit_carry(self, old: Any, new: Any, accept: jax.Array, running: jax.Array) -> Any:
+        """Merge the step's proposed carry into the loop state.  Default:
+        advance the carry for running instances, freeze it for finished ones
+        (the carry is valid for accepted AND rejected attempts -- e.g. a
+        Jacobian evaluated at (t, y) stays correct when the step is retried
+        with a smaller dt)."""
+
+        def mask(n, o):
+            if n.ndim == 0:  # batch-shared scalar leaves advance as proposed
+                return n
+            r = running.reshape(running.shape + (1,) * (n.ndim - 1))
+            return jnp.where(r, n, o)
+
+        return jax.tree_util.tree_map(mask, new, old)
 
     def interp_coeffs(self, y0, y1, f0, f1, dt):
         """Dense-output interpolant coefficients (cubic Hermite, Horner form)."""
@@ -213,4 +246,207 @@ class Stepper:
         }
 
     def __repr__(self) -> str:
-        return f"Stepper({self.tableau.name!r})"
+        return f"{type(self).__name__}({self.tableau.name!r})"
+
+
+class ExplicitRK(AbstractStepper):
+    """Tableau + explicit RK step + interpolant; stateless across steps.
+
+    Construct from a method name or an explicit tableau::
+
+        ExplicitRK("tsit5")
+        ExplicitRK(my_tableau)
+
+    Contributes ``n_f_evals`` to the solver's statistics registry (the static
+    per-step evaluation count, shared across the batch because the dynamics
+    run on the full batch while any instance is running -- torchode's
+    "overhanging evaluations").
+    """
+
+    def __init__(self, method: str | ButcherTableau = "dopri5"):
+        self.tableau = get_tableau(method) if isinstance(method, str) else method
+        if self.tableau.implicit:
+            raise ValueError(
+                f"tableau {self.tableau.name!r} has implicit stages; "
+                "use DiagonallyImplicitRK"
+            )
+
+    def step(self, term, t, dt, y, f0, args, carry=(), scale=None):
+        return rk_step(term, self.tableau, t, dt, y, f0, args)
+
+
+# Compatibility alias: the pre-hierarchy name of the explicit stepper.
+Stepper = ExplicitRK
+
+
+class DIRKCarry(NamedTuple):
+    """Cross-step state of ``DiagonallyImplicitRK``: the chord Jacobian and
+    the per-instance mask asking for it to be re-evaluated next step."""
+
+    jac: jax.Array  # (b, f, f) df/dy from a previous step (possibly stale)
+    refresh: jax.Array  # (b,) bool
+
+
+class DiagonallyImplicitRK(AbstractStepper):
+    """SDIRK/ESDIRK stepper for stiff problems, batched-Newton inside.
+
+    Every implicit stage shares the tableau's single diagonal coefficient
+    ``gamma``, so one chord matrix ``M = I - dt*gamma*J`` (per instance)
+    serves all stages of a step.  ``J`` comes from ``ODETerm.vf_jac`` and is
+    reused across stages *and* steps; an instance re-evaluates it only when
+    its ``refresh`` flag is set (Newton failed or converged slowly), so
+    well-behaved instances amortize one Jacobian over many steps.
+
+    Newton knobs:
+
+    newton_tol
+        Convergence threshold for the scaled RMS of the Newton update,
+        measured in the step's atol/rtol error units -- the fraction of the
+        local error budget the inexact inner solve may consume.
+    max_newton_iters
+        Per-stage iteration cap; an instance that exhausts it is marked
+        failed, which the step function turns into a controller reject.
+    slow_iters
+        Stages needing at least this many iterations set the instance's
+        Jacobian refresh flag for the next step (default: half the cap).
+
+    Statistics: ``n_f_evals`` (batched Newton evaluations, overhanging),
+    ``n_newton_iters`` (per-instance inner iterations while running) and
+    ``n_jac_evals`` (per-instance Jacobian evaluations).
+    """
+
+    def __init__(
+        self,
+        method: str | ButcherTableau = "kvaerno5",
+        *,
+        newton_tol: float = 1e-2,
+        max_newton_iters: int = 8,
+        slow_iters: int | None = None,
+    ):
+        self.tableau = get_tableau(method) if isinstance(method, str) else method
+        if not self.tableau.implicit:
+            raise ValueError(
+                f"tableau {self.tableau.name!r} is explicit; use ExplicitRK"
+            )
+        self.gamma = self.tableau.diagonal  # validates the constant diagonal
+        self.newton_tol = newton_tol
+        self.max_newton_iters = max_newton_iters
+        self.slow_iters = slow_iters if slow_iters is not None else max(2, max_newton_iters // 2)
+
+    def init_carry(self, term, t0, y0, f0, args) -> DIRKCarry:
+        b, f = y0.shape
+        return DIRKCarry(
+            jac=jnp.zeros((b, f, f), dtype=y0.dtype),
+            refresh=jnp.ones((b,), dtype=bool),
+        )
+
+    def step(self, term, t, dt, y, f0, args, carry=(), scale=None):
+        tab = self.tableau
+        dtype = y.dtype
+        a, c, b_sol, b_err = _tableau_arrays(tab, dtype)
+        if not isinstance(carry, DIRKCarry):
+            carry = self.init_carry(term, t, y, f0, args)
+        if scale is None:
+            # Direct-call default: the solver's default tolerances.
+            scale = 1e-6 + 1e-3 * jnp.abs(y)
+
+        # --- per-instance Jacobian refresh (skipped entirely when nobody asks) ---
+        J = jax.lax.cond(
+            jnp.any(carry.refresh),
+            lambda: jnp.where(carry.refresh[:, None, None], term.vf_jac(t, y, args), carry.jac),
+            lambda: carry.jac,
+        )
+        n_jac_evals = carry.refresh.astype(jnp.int32)
+        eye = jnp.eye(y.shape[1], dtype=dtype)
+        M = eye - (dt * self.gamma)[:, None, None] * J
+
+        ks: list[jax.Array] = []
+        failed = jnp.zeros(dt.shape, dtype=bool)
+        slow = jnp.zeros(dt.shape, dtype=bool)
+        n_newton_iters = jnp.zeros(dt.shape, dtype=jnp.int32)
+        n_evals = jnp.zeros((), dtype=jnp.int32)
+        n_static_evals = 0
+        for i in range(tab.stages):
+            ti = t + c[i] * dt
+            y_pred = y if i == 0 else ops.stage_accum(y, dt, jnp.stack(ks), a[i, :i])
+            if a[i, i] == 0.0:  # explicit stage (the E in ESDIRK)
+                if i == 0:
+                    ks.append(f0)
+                else:
+                    ks.append(term.vf(ti, y_pred, args))
+                    n_static_evals += 1
+            else:
+                dtg = (dt * a[i, i])[:, None]
+
+                def eval_fn(k, ti=ti, y_pred=y_pred, dtg=dtg):
+                    return term.vf(ti, y_pred + dtg * k, args)
+
+                res = newton_solve(
+                    eval_fn,
+                    ks[-1] if ks else f0,  # predictor: the previous stage slope
+                    M,
+                    # Convergence is measured on the stage VALUE increment
+                    # dt*a_ii*delta_k (state units), not the raw slope update,
+                    # so the test matches the atol/rtol error scale.
+                    scale / jnp.maximum(jnp.abs(dtg), jnp.finfo(dtype).tiny),
+                    tol=self.newton_tol,
+                    max_iters=self.max_newton_iters,
+                )
+                ks.append(res.k)
+                failed = failed | ~res.converged
+                slow = slow | (res.n_iters >= self.slow_iters)
+                n_newton_iters = n_newton_iters + res.n_iters
+                n_evals = n_evals + res.n_evals
+
+        K = jnp.stack(ks)
+        y1, err = ops.fused_update(y, K, dt, b_sol, b_err)
+        if tab.stiffly_accurate and tab.c[-1] == 1.0:
+            f1 = ks[-1]  # the last stage derivative IS f(t + dt, y1)
+        else:
+            f1 = term.vf(t + dt, y1, args)
+            n_static_evals += 1
+
+        return StepResult(
+            y1=y1,
+            err=err,
+            f1=f1,
+            n_f_evals=n_evals + n_static_evals,
+            carry=DIRKCarry(jac=J, refresh=failed | slow),
+            solver_failed=failed,
+            stats_aux={"n_newton_iters": n_newton_iters, "n_jac_evals": n_jac_evals},
+        )
+
+    def commit_carry(self, old, new, accept, running):
+        """Advance the Jacobian for running instances.  Two refresh-flag
+        refinements: a rejected step that already ran on a FRESH Jacobian
+        (old.refresh was set) retries at the same (t, y), where re-evaluating
+        would reproduce J bit-identically -- suppress the flag and let the dt
+        shrink do the work; and finished instances drop their flag so a frozen
+        instance can never keep triggering whole-batch re-evaluation."""
+        wasteful = old.refresh & ~accept
+        return DIRKCarry(
+            jac=jnp.where(running[:, None, None], new.jac, old.jac),
+            refresh=new.refresh & ~wasteful & running,
+        )
+
+    # --- statistics registry contribution ---
+    def init_stats(self, batch: int) -> dict[str, jax.Array]:
+        zeros = jnp.zeros((batch,), dtype=jnp.int32)
+        return {"n_f_evals": zeros, "n_newton_iters": zeros, "n_jac_evals": zeros}
+
+    def update_stats(self, stats: dict, ctx) -> dict:
+        aux = ctx.aux or {}
+        running = ctx.running.astype(jnp.int32)
+        out = {
+            **stats,
+            "n_f_evals": stats["n_f_evals"] + ctx.step_active * ctx.n_f_evals,
+        }
+        if "n_newton_iters" in aux:
+            out["n_newton_iters"] = (
+                stats["n_newton_iters"] + ctx.step_active * running * aux["n_newton_iters"]
+            )
+        if "n_jac_evals" in aux:
+            out["n_jac_evals"] = (
+                stats["n_jac_evals"] + ctx.step_active * running * aux["n_jac_evals"]
+            )
+        return out

@@ -1,14 +1,21 @@
-"""Butcher tableaus for the explicit Runge-Kutta steppers.
+"""Butcher tableaus for the explicit and diagonally implicit RK steppers.
 
 Conventions:
-  - ``a`` is the full (s, s) lower-triangular stage matrix.
+  - ``a`` is the full (s, s) lower-triangular stage matrix.  Explicit methods
+    have a zero diagonal; SDIRK/ESDIRK methods carry the implicit coefficient
+    ``gamma`` on the diagonal of their implicit stages.
   - ``b_sol`` are the solution weights, ``b_err = b_sol - b_hat`` are the weights
     of the embedded error estimate (``None`` for fixed-step methods).
   - ``fsal``: the last stage equals f(t + dt, y1), so an accepted step seeds the
-    next step's first stage for free (First Same As Last).
+    next step's first stage for free (First Same As Last).  For the stiffly
+    accurate implicit tableaus below (b_sol == last row of ``a``, c_s == 1) the
+    same property holds: the last stage derivative IS f(t + dt, y1).
   - ``ssal``: the solution is available before the last stage (Solution Same As
     Last) -- dopri5/tsit5's last stage is evaluated *at* the solution, which also
     makes f1 for dense output free.
+  - ``implicit``: at least one diagonal entry of ``a`` is nonzero; the tableau
+    must be driven by ``DiagonallyImplicitRK`` (stage equations solved by the
+    batched masked-Newton layer), never by the explicit stage recursion.
 """
 
 from __future__ import annotations
@@ -29,10 +36,32 @@ class ButcherTableau:
     c: np.ndarray  # (s,)
     fsal: bool
     ssal: bool
+    implicit: bool = False
 
     @property
     def stages(self) -> int:
         return len(self.c)
+
+    @property
+    def stiffly_accurate(self) -> bool:
+        """b_sol equals the last row of ``a``: y1 is the last stage value, so
+        (with c_s == 1) the last stage derivative is f(t + dt, y1) for free."""
+        return bool(np.allclose(self.a[-1], self.b_sol))
+
+    @property
+    def diagonal(self) -> float:
+        """The shared implicit coefficient gamma of an SDIRK/ESDIRK tableau
+        (every implicit stage carries the same diagonal entry, so one
+        I - dt*gamma*J matrix serves all stages of a step)."""
+        diag = np.diag(self.a)
+        nz = diag[diag != 0.0]
+        if nz.size == 0:
+            return 0.0
+        if not np.allclose(nz, nz[0]):
+            raise ValueError(
+                f"tableau {self.name!r} has non-constant implicit diagonal {diag}"
+            )
+        return float(nz[0])
 
 
 def _tri(rows, s):
@@ -188,7 +217,140 @@ TSIT5 = ButcherTableau(
     ssal=True,
 )
 
-TABLEAUS = {t.name: t for t in (EULER, MIDPOINT, RK4, HEUN, BOSH3, DOPRI5, TSIT5)}
+# --------------------------------------------------------------------------
+# Diagonally implicit (SDIRK/ESDIRK) tableaus for stiff problems.  All four
+# are stiffly accurate (b_sol == last row of a, c_s == 1), so the last stage
+# derivative doubles as the FSAL cache, and all share a single diagonal
+# coefficient gamma, so one I - dt*gamma*J matrix serves every stage.
+
+# Backward Euler: L-stable, order 1, no embedded estimate (fixed-step).
+IMPLICIT_EULER = ButcherTableau(
+    name="implicit_euler",
+    order=1,
+    error_order=2,
+    a=np.array([[1.0]]),
+    b_sol=np.array([1.0]),
+    b_err=None,
+    c=np.array([1.0]),
+    fsal=True,
+    ssal=True,
+    implicit=True,
+)
+
+# TR-BDF2 as an ESDIRK 2(3) pair (Hosea & Shampine 1996): one trapezoidal
+# substage + one BDF2 substage, L-stable, with a 3rd-order embedded estimate.
+_TRBDF2_G = 2.0 - np.sqrt(2.0)  # gamma: the intermediate abscissa
+_TRBDF2_D = _TRBDF2_G / 2.0  # the shared implicit diagonal
+_TRBDF2_W = np.sqrt(2.0) / 4.0
+TRBDF2 = ButcherTableau(
+    name="trbdf2",
+    order=2,
+    error_order=3,
+    a=np.array(
+        [
+            [0.0, 0.0, 0.0],
+            [_TRBDF2_D, _TRBDF2_D, 0.0],
+            [_TRBDF2_W, _TRBDF2_W, _TRBDF2_D],
+        ]
+    ),
+    b_sol=np.array([_TRBDF2_W, _TRBDF2_W, _TRBDF2_D]),
+    b_err=np.array([_TRBDF2_W, _TRBDF2_W, _TRBDF2_D])
+    - np.array([(1.0 - _TRBDF2_W) / 3.0, (3.0 * _TRBDF2_W + 1.0) / 3.0, _TRBDF2_D / 3.0]),
+    c=np.array([0.0, _TRBDF2_G, 1.0]),
+    fsal=True,
+    ssal=True,
+    implicit=True,
+)
+
+# Kvaerno (2004) ESDIRK 3(2): A-L stable, explicit first stage.
+_KV3_G = 0.43586652150845899941601945
+_KV3_A31 = (-4.0 * _KV3_G**2 + 6.0 * _KV3_G - 1.0) / (4.0 * _KV3_G)
+_KV3_A32 = (-2.0 * _KV3_G + 1.0) / (4.0 * _KV3_G)
+_KV3_A41 = (6.0 * _KV3_G - 1.0) / (12.0 * _KV3_G)
+_KV3_A42 = -1.0 / ((24.0 * _KV3_G - 12.0) * _KV3_G)
+_KV3_A43 = (-6.0 * _KV3_G**2 + 6.0 * _KV3_G - 1.0) / (6.0 * _KV3_G - 3.0)
+_KV3_B = np.array([_KV3_A41, _KV3_A42, _KV3_A43, _KV3_G])
+KVAERNO3 = ButcherTableau(
+    name="kvaerno3",
+    order=3,
+    error_order=3,
+    a=np.array(
+        [
+            [0.0, 0.0, 0.0, 0.0],
+            [_KV3_G, _KV3_G, 0.0, 0.0],
+            [_KV3_A31, _KV3_A32, _KV3_G, 0.0],
+            [_KV3_A41, _KV3_A42, _KV3_A43, _KV3_G],
+        ]
+    ),
+    b_sol=_KV3_B,
+    b_err=_KV3_B - np.array([_KV3_A31, _KV3_A32, _KV3_G, 0.0]),
+    c=np.array([0.0, 2.0 * _KV3_G, 1.0, 1.0]),
+    fsal=True,
+    ssal=True,
+    implicit=True,
+)
+
+# Kvaerno (2004) ESDIRK 5(4): the workhorse stiff method (diffrax's kvaerno5).
+_KV5_G = 0.26
+_KV5_A = np.zeros((7, 7))
+_KV5_A[1, :2] = [0.26, 0.26]
+_KV5_A[2, :3] = [0.13, 0.84033320996790809, 0.26]
+_KV5_A[3, :4] = [0.22371961478320505, 0.47675532319799699, -0.06470895363112615, 0.26]
+_KV5_A[4, :5] = [
+    0.16648564323248321,
+    0.10450018841591720,
+    0.03631482272098715,
+    -0.13090704451073998,
+    0.26,
+]
+_KV5_A[5, :6] = [
+    0.13855640231268224,
+    0.0,
+    -0.04245337201752043,
+    0.02446657898003141,
+    0.61943039072480676,
+    0.26,
+]
+_KV5_A[6, :7] = [
+    0.13659751177640291,
+    0.0,
+    -0.05496908796538376,
+    -0.04118626728321046,
+    0.62993304899016403,
+    0.06962479448202728,
+    0.26,
+]
+_KV5_B = _KV5_A[6].copy()
+_KV5_BHAT = np.append(_KV5_A[5, :5], [0.26, 0.0])
+KVAERNO5 = ButcherTableau(
+    name="kvaerno5",
+    order=5,
+    error_order=5,
+    a=_KV5_A,
+    b_sol=_KV5_B,
+    b_err=_KV5_B - _KV5_BHAT,
+    c=np.array([0.0, 0.52, 1.230333209967908, 0.895765984350076, 0.436393609858648, 1.0, 1.0]),
+    fsal=True,
+    ssal=True,
+    implicit=True,
+)
+
+TABLEAUS = {
+    t.name: t
+    for t in (
+        EULER,
+        MIDPOINT,
+        RK4,
+        HEUN,
+        BOSH3,
+        DOPRI5,
+        TSIT5,
+        IMPLICIT_EULER,
+        TRBDF2,
+        KVAERNO3,
+        KVAERNO5,
+    )
+}
 
 
 def get_tableau(name: str) -> ButcherTableau:

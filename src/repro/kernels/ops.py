@@ -71,5 +71,20 @@ def interp_eval(coeffs, x, mask, out):
     return _impl().interp_eval(coeffs, x, mask, out)
 
 
+def batched_linsolve(A, rhs):
+    """Batched dense solve A @ x = rhs: the Newton linear-algebra hot spot."""
+    if backend() == "ref":
+        return ref.batched_linsolve(A, rhs)
+    return _impl().batched_linsolve(A, rhs)
+
+
+def masked_newton_update(k, delta, active, scale):
+    """Fused masked Newton commit + per-instance scaled update norm."""
+    if backend() == "ref":
+        return ref.masked_newton_update(k, delta, active, scale)
+    return _impl().masked_newton_update(k, delta, active, scale)
+
+
 hermite_coeffs = ref.hermite_coeffs  # pure arithmetic; fused into callers by XLA
 rms_norm = ref.rms_norm  # init-time only (step-size selection); never in the hot loop
+broadcast_tolerances = ref.broadcast_tolerances  # the shared tolerance-shape contract

@@ -13,6 +13,12 @@ torchode fast, re-thought for the TPU memory hierarchy:
     block (grid is sequential on TPU), finalizing sqrt(mean) on the last tile.
   - ``interp_eval``: masked Horner evaluation of the dense-output cubic into the
     (aliased) output buffer -- torchode's "evaluation tracking" hot spot.
+  - ``batched_linsolve``: per-instance dense Gauss-Jordan solve (with partial
+    pivoting) for the implicit steppers' Newton systems, one batch tile per
+    program with the full matrix resident in VMEM.
+  - ``masked_newton_update``: the masked Newton commit fused with the
+    per-instance scaled update norm (the inner-iteration analogue of
+    ``error_norm``).
 
 Tiling: (8, 128)-aligned blocks (f32 VREG lane layout); wrappers pad
 non-aligned shapes and slice back, so kernels always see divisible shapes.
@@ -26,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from . import ref
 
 BB = 8  # batch tile
 BF = 128  # feature tile (lane dimension)
@@ -156,16 +164,30 @@ def _error_norm_kernel(err_ref, y0_ref, y1_ref, atol_ref, rtol_ref, out_ref, *, 
 def error_norm(err, y0, y1, atol, rtol, *, interpret=False):
     b, f = err.shape
     dtype = err.dtype
-    atol = jnp.broadcast_to(jnp.asarray(atol, dtype), (b,))[:, None]
-    rtol = jnp.broadcast_to(jnp.asarray(rtol, dtype), (b,))[:, None]
+    # Tolerances may be scalar, per-instance (b,) or full (b, f) -- same
+    # contract as the ref oracle.  Shape is static, so the common scalar/(b,)
+    # case keeps streaming cheap (BB, 1) tolerance blocks; only genuine
+    # per-feature tolerances pay for full (BB, BF) tiles.
+    atol, rtol = ref.broadcast_tolerances(atol, rtol, dtype)
+    per_feature = atol.ndim == 2 and atol.shape[1] > 1 or rtol.ndim == 2 and rtol.shape[1] > 1
+    if per_feature:
+        atol = jnp.broadcast_to(atol, (b, f))
+        rtol = jnp.broadcast_to(rtol, (b, f))
+        tol_block, tol_index = (BB, BF), (lambda i, j: (i, j))
+        atolp = _pad_to(_pad_to(atol, 0, BB, value=1), 1, BF, value=1)
+        rtolp = _pad_to(_pad_to(rtol, 0, BB, value=1), 1, BF, value=1)
+    else:
+        atol = jnp.broadcast_to(atol.reshape((-1, 1)) if atol.ndim else atol, (b, 1))
+        rtol = jnp.broadcast_to(rtol.reshape((-1, 1)) if rtol.ndim else rtol, (b, 1))
+        tol_block, tol_index = (BB, 1), (lambda i, j: (i, 0))
+        atolp = _pad_to(atol, 0, BB, value=1)
+        rtolp = _pad_to(rtol, 0, BB, value=1)
     # Padding is exact: padded err entries are 0, padded y entries 1 and padded
-    # atol rows 1, so every padded cell contributes 0 / (positive scale) = 0 to
+    # atol cells 1, so every padded cell contributes 0 / (positive scale) = 0 to
     # the sum of squares; we divide by the TRUE feature count.
     errp = _pad_to(_pad_to(err, 0, BB), 1, BF)
     y0p = _pad_to(_pad_to(y0, 0, BB, value=1), 1, BF, value=1)
     y1p = _pad_to(_pad_to(y1, 0, BB, value=1), 1, BF, value=1)
-    atolp = _pad_to(atol, 0, BB, value=1)
-    rtolp = _pad_to(rtol, 0, BB, value=1)
     bp, fp = errp.shape
     nf_tiles = fp // BF
     out = pl.pallas_call(
@@ -175,8 +197,8 @@ def error_norm(err, y0, y1, atol, rtol, *, interpret=False):
             pl.BlockSpec((BB, BF), lambda i, j: (i, j)),
             pl.BlockSpec((BB, BF), lambda i, j: (i, j)),
             pl.BlockSpec((BB, BF), lambda i, j: (i, j)),
-            pl.BlockSpec((BB, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((BB, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec(tol_block, tol_index),
+            pl.BlockSpec(tol_block, tol_index),
         ],
         out_specs=pl.BlockSpec((BB, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bp, 1), dtype),
@@ -227,6 +249,141 @@ def interp_eval(coeffs, x, mask, out, *, interpret=False):
     return res[:b, :n, :f]
 
 
+# ------------------------------------------------------- batched linear solve
+
+
+def _linsolve_kernel(a_ref, b_ref, x_ref, *, n):
+    """Gauss-Jordan with partial pivoting, vectorized over the batch tile.
+
+    One program owns BB instances and their full (R, C) matrices in VMEM
+    (R = rows padded to the 8-sublane layout, C = columns padded to the
+    128-lane layout -- stiff ODE systems are small, so rows are NOT padded
+    to a full lane multiple).  Row selection/swap is done with one-hot masks
+    (no dynamic gathers), the pivot search with a max-reduction + first-match
+    instead of argmax, so every op vectorizes.  Only the true n columns are
+    eliminated: the padded block is an identity that never mixes with real
+    rows.
+    """
+    A = a_ref[...]  # (BB, R, C)
+    rhs = b_ref[...]  # (BB, R)
+    R = A.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (A.shape[0], R), 1)  # (BB, R)
+
+    def body(i, carry):
+        A, rhs = carry
+        col = jax.lax.dynamic_slice_in_dim(A, i, 1, axis=2)[..., 0]  # (BB, R)
+        mag = jnp.where(rows >= i, jnp.abs(col), -1.0)
+        m = jnp.max(mag, axis=1, keepdims=True)
+        cand = mag == m
+        p = jnp.min(jnp.where(cand, rows, R), axis=1, keepdims=True)  # (BB, 1)
+        is_i = rows == i
+        is_p = rows == p
+        Ai = jnp.sum(jnp.where(is_i[:, :, None], A, 0.0), axis=1)  # (BB, C)
+        Ap = jnp.sum(jnp.where(is_p[:, :, None], A, 0.0), axis=1)
+        bi = jnp.sum(jnp.where(is_i, rhs, 0.0), axis=1, keepdims=True)  # (BB, 1)
+        bp = jnp.sum(jnp.where(is_p, rhs, 0.0), axis=1, keepdims=True)
+        # swap rows i <-> p (no-op when p == i: is_i wins and Ap == Ai)
+        A = jnp.where(
+            is_i[:, :, None], Ap[:, None, :], jnp.where(is_p[:, :, None], Ai[:, None, :], A)
+        )
+        rhs = jnp.where(is_i, bp, jnp.where(is_p, bi, rhs))
+        # normalize the pivot row, eliminate column i from every other row
+        piv = jax.lax.dynamic_slice_in_dim(Ap, i, 1, axis=1)  # (BB, 1)
+        prow = Ap / piv
+        pb = bp / piv
+        colnew = jax.lax.dynamic_slice_in_dim(A, i, 1, axis=2)[..., 0]  # (BB, R)
+        factor = jnp.where(is_i, 0.0, colnew)
+        A = A - factor[:, :, None] * prow[:, None, :]
+        rhs = rhs - factor * pb
+        A = jnp.where(is_i[:, :, None], prow[:, None, :], A)
+        rhs = jnp.where(is_i, pb, rhs)
+        return A, rhs
+
+    _, rhs = jax.lax.fori_loop(0, n, body, (A, rhs))
+    x_ref[...] = rhs
+
+
+def batched_linsolve(A, rhs, *, interpret=False):
+    b, f = rhs.shape
+    # Rows only need the 8-sublane layout; columns are the lane dimension.
+    Ap = _pad_to(_pad_to(_pad_to(A, 0, BB), 1, BB), 2, BF)
+    bp_, fr, fc = Ap.shape
+    # The padded block must stay nonsingular: identity on the padded diagonal.
+    pad_eye = (
+        (jnp.arange(fr)[:, None] == jnp.arange(fc)[None, :])
+        & (jnp.arange(fr)[:, None] >= f)
+    ).astype(A.dtype)
+    Ap = Ap + pad_eye[None, :, :]
+    rhsp = _pad_to(_pad_to(rhs, 0, BB), 1, BB)
+    out = pl.pallas_call(
+        functools.partial(_linsolve_kernel, n=f),
+        grid=(bp_ // BB,),
+        in_specs=[
+            pl.BlockSpec((BB, fr, fc), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp_, fr), rhs.dtype),
+        interpret=interpret,
+    )(Ap, rhsp)
+    return out[:b, :f]
+
+
+# --------------------------------------------------------- masked newton update
+
+
+def _newton_update_kernel(k_ref, d_ref, act_ref, scale_ref, k_out, res_out, *, n_feat, nf_tiles):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        res_out[...] = jnp.zeros_like(res_out)
+
+    k = k_ref[...]
+    d = d_ref[...]
+    active = act_ref[...]  # (BB, 1) bool
+    k_out[...] = jnp.where(active, k - d, k)
+    r = d / scale_ref[...]
+    res_out[...] += jnp.sum(r * r, axis=1, keepdims=True)
+
+    @pl.when(j == nf_tiles - 1)
+    def _finalize():
+        res_out[...] = jnp.sqrt(res_out[...] / n_feat)
+
+
+def masked_newton_update(k, delta, active, scale, *, interpret=False):
+    b, f = k.shape
+    scale = jnp.broadcast_to(jnp.asarray(scale, k.dtype), (b, f))
+    # Padding is exact: padded deltas are 0 and padded scales 1, so padded
+    # cells add 0 to the sum of squares; we divide by the TRUE feature count.
+    kp = _pad_to(_pad_to(k, 0, BB), 1, BF)
+    dp = _pad_to(_pad_to(delta, 0, BB), 1, BF)
+    ap = _pad_to(active[:, None], 0, BB)
+    sp = _pad_to(_pad_to(scale, 0, BB, value=1), 1, BF, value=1)
+    bp_, fp = kp.shape
+    nf_tiles = fp // BF
+    k_new, res = pl.pallas_call(
+        functools.partial(_newton_update_kernel, n_feat=float(f), nf_tiles=nf_tiles),
+        grid=(bp_ // BB, nf_tiles),
+        in_specs=[
+            pl.BlockSpec((BB, BF), lambda i, j: (i, j)),
+            pl.BlockSpec((BB, BF), lambda i, j: (i, j)),
+            pl.BlockSpec((BB, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((BB, BF), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BB, BF), lambda i, j: (i, j)),
+            pl.BlockSpec((BB, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(kp.shape, k.dtype),
+            jax.ShapeDtypeStruct((bp_, 1), k.dtype),
+        ],
+        interpret=interpret,
+    )(kp, dp, ap, sp)
+    return k_new[:b, :f], res[:b, 0]
+
+
 # ------------------------------------------------------------- impl namespaces
 
 
@@ -245,6 +402,12 @@ class _Impl:
 
     def interp_eval(self, coeffs, x, mask, out):
         return interp_eval(coeffs, x, mask, out, interpret=self._i)
+
+    def batched_linsolve(self, A, rhs):
+        return batched_linsolve(A, rhs, interpret=self._i)
+
+    def masked_newton_update(self, k, delta, active, scale):
+        return masked_newton_update(k, delta, active, scale, interpret=self._i)
 
 
 _INTERPRET = _Impl(True)

@@ -35,6 +35,23 @@ def fused_update(y, K, dt, b_sol, b_err):
     return y1, err
 
 
+def broadcast_tolerances(atol, rtol, dtype):
+    """Normalize tolerances onto column-broadcastable arrays.
+
+    Accepted shapes -- the ONE tolerance contract shared by the error norm
+    (both backends), the Newton convergence scale and the initial-step
+    heuristic: scalar (batch-shared), (b,) per-instance, or full (b, f).
+    Returns (atol, rtol) ready to broadcast against a (b, f) state.
+    """
+    atol = jnp.asarray(atol, dtype=dtype)
+    rtol = jnp.asarray(rtol, dtype=dtype)
+    if atol.ndim == 1:
+        atol = atol[:, None]
+    if rtol.ndim == 1:
+        rtol = rtol[:, None]
+    return atol, rtol
+
+
 def error_norm(err, y0, y1, atol, rtol):
     """Weighted RMS norm, per instance.
 
@@ -43,12 +60,7 @@ def error_norm(err, y0, y1, atol, rtol):
     err, y0, y1: (b, f);  atol, rtol: scalar or (b,) or (b, f).
     Returns (b,).
     """
-    atol = jnp.asarray(atol, dtype=err.dtype)
-    rtol = jnp.asarray(rtol, dtype=err.dtype)
-    if atol.ndim == 1:
-        atol = atol[:, None]
-    if rtol.ndim == 1:
-        rtol = rtol[:, None]
+    atol, rtol = broadcast_tolerances(atol, rtol, err.dtype)
     scale = atol + rtol * jnp.maximum(jnp.abs(y0), jnp.abs(y1))
     ratio = err / scale
     return jnp.sqrt(jnp.mean(ratio * ratio, axis=-1))
@@ -77,6 +89,36 @@ def hermite_coeffs(y0, y1, f0, f1, dt):
     c2 = 3.0 * (y1 - y0) - hdt * (2.0 * f0 + f1)
     c3 = 2.0 * (y0 - y1) + hdt * (f0 + f1)
     return c0, c1, c2, c3
+
+
+def batched_linsolve(A, rhs):
+    """Batched dense linear solve: x s.t. A @ x = rhs, per instance.
+
+    A:   (b, f, f) Newton matrices (I - dt*gamma*J -- well conditioned for
+         any stable step size, diagonally dominant in the stiff limit)
+    rhs: (b, f)
+
+    Returns (b, f).  The inner hot spot of the masked-Newton layer.
+    """
+    return jnp.linalg.solve(A, rhs[..., None])[..., 0]
+
+
+def masked_newton_update(k, delta, active, scale):
+    """One fused masked Newton commit: apply the update only where an
+    instance's nonlinear solve is still active, and report the scaled RMS
+    norm of the update (the per-instance convergence measure).
+
+    k:      (b, f) current stage iterate
+    delta:  (b, f) Newton update (solution of the linearized system)
+    active: (b,) bool -- instances still iterating
+    scale:  (b, f) error scale atol + rtol*|y| (may broadcast)
+
+    Returns (k_new, res_norm): k - delta where active (k elsewhere), and the
+    (b,) RMS of delta/scale.
+    """
+    k_new = jnp.where(active[:, None], k - delta, k)
+    ratio = delta / scale
+    return k_new, jnp.sqrt(jnp.mean(ratio * ratio, axis=-1))
 
 
 def interp_eval(coeffs, x, mask, out):

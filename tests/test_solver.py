@@ -122,6 +122,41 @@ class TestParallelIndependence:
         steps = np.asarray(sol.stats["n_steps"])
         assert steps[1] > steps[0], "tighter tolerance must take more steps"
 
+    def test_mixed_tolerances_match_solo_solves(self):
+        """(b,)-shaped atol/rtol thread through error_norm and the controller:
+        a mixed-tolerance batch makes exactly the per-instance step decisions
+        of separate single-instance solves (regression for the per-instance
+        tolerance path)."""
+        y0 = jnp.array([[1.0, 2.0], [1.0, 2.0], [1.0, 2.0]])
+        atol = jnp.array([1e-3, 1e-6, 1e-9])
+        rtol = jnp.array([1e-2, 1e-5, 1e-8])
+        mixed = solve_ivp(vdp, y0, None, t_start=0.0, t_end=4.0, args=3.0,
+                          atol=atol, rtol=rtol, max_steps=4000)
+        assert np.all(np.asarray(mixed.status) == Status.SUCCESS.value)
+        for i in range(3):
+            solo = solve_ivp(vdp, y0[i : i + 1], None, t_start=0.0, t_end=4.0, args=3.0,
+                             atol=atol[i : i + 1], rtol=rtol[i : i + 1], max_steps=4000)
+            assert int(np.asarray(mixed.stats["n_steps"])[i]) == int(
+                np.asarray(solo.stats["n_steps"])[0]
+            )
+            np.testing.assert_allclose(
+                np.asarray(mixed.ys)[i], np.asarray(solo.ys)[0], rtol=1e-6, atol=1e-6
+            )
+
+    def test_mixed_tolerances_implicit(self):
+        """Per-instance tolerances also steer the implicit path (and its
+        Newton convergence scale)."""
+        y0 = jnp.ones((2, 1))
+        atol = jnp.array([1e-3, 1e-7])
+        rtol = jnp.array([1e-2, 1e-6])
+        sol = solve_ivp(exp_decay, y0, None, t_start=0.0, t_end=1.0,
+                        method="kvaerno5", atol=atol, rtol=rtol, max_steps=2000)
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
+        steps = np.asarray(sol.stats["n_steps"])
+        assert steps[1] > steps[0]
+        # the tight instance actually achieves its accuracy
+        assert abs(float(sol.ys[1, 0]) - np.exp(-1.0)) < 1e-4
+
 
 class TestStats:
     def test_listing1_semantics(self):
@@ -167,6 +202,34 @@ class TestControllers:
         sol = solve_ivp(exp_decay, jnp.ones((1, 1)), None, t_start=0.0, t_end=10.0,
                         atol=1e-6, rtol=1e-3)
         assert int(np.asarray(sol.stats["n_steps"])[0]) < 60
+
+    def test_stateful_fixed_controller_subclass_state_threads(self):
+        """Every controller's returned state is threaded uniformly by the
+        loop (regression: an isinstance(FixedController) special case used to
+        freeze the state of FixedController subclasses, so a stateful
+        third-party controller was silently stuck at its initial state)."""
+        from repro.core import FixedController
+        from repro.core.controller import ControllerState
+
+        class RejectFirst(FixedController):
+            """Rejects only the very first attempt, counting attempts in its
+            own state.  With frozen state it would reject forever."""
+
+            def __call__(self, err_ratio, dt, state, k):
+                first = state.prev_inv_ratio == 0.0
+                new = ControllerState(state.prev_inv_ratio + 1.0, state.prev2_inv_ratio)
+                return ~first, dt, new
+
+            def init(self, batch, dtype):
+                zero = jnp.zeros((batch,), dtype=dtype)
+                return ControllerState(zero, zero)
+
+        sol = solve_ivp(exp_decay, jnp.ones((2, 1)), None, t_start=0.0, t_end=1.0,
+                        method="rk4", dt0=0.05, controller=RejectFirst(), max_steps=100)
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
+        n_steps = np.asarray(sol.stats["n_steps"])
+        n_accepted = np.asarray(sol.stats["n_accepted"])
+        assert np.all(n_steps == n_accepted + 1)  # exactly the one rejection
 
 
 @pytest.mark.reverse_diff
