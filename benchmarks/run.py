@@ -18,7 +18,7 @@ def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="?", default="all",
                         choices=["all", "table3", "table4", "table5", "fig1", "fig2",
-                                 "stiff"])
+                                 "stiff", "events"])
     parser.add_argument("--json", nargs="?", const="BENCH_solver.json", default=None,
                         metavar="PATH", help="also write rows to a JSON file")
     opts = parser.parse_args()
@@ -45,6 +45,10 @@ def main() -> None:
         from . import pid_bench
 
         suites.append(("fig2_pid", pid_bench.rows))
+    if which in ("all", "events"):
+        from . import events_bench
+
+        suites.append(("events", events_bench.rows))
     if which == "stiff":
         # Not part of "all": the explicit-solver baselines grind at their
         # stability limit by design (200k-step budgets).  Run explicitly, or

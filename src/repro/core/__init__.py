@@ -18,6 +18,7 @@ from .controller import (
     pid_controller,
 )
 from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint
+from .events import Event, EventState
 from .loop import make_solver, solve_ivp, solve_ivp_scan
 from .newton import NewtonResult, newton_solve
 from .solution import Solution, Status
@@ -50,6 +51,8 @@ __all__ = [
     "AutoDiffAdjoint",
     "BacksolveAdjoint",
     "ScanAdjoint",
+    "Event",
+    "EventState",
     "make_solver",
     "solve_ivp",
     "solve_ivp_scan",

@@ -33,6 +33,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from .events import Event, normalize_events
 from .solution import Solution
 from .step import StepFunction
 from .stepper import AbstractStepper
@@ -53,6 +54,8 @@ class _Driver:
         dense: bool = True,
         dense_window: int = 0,
         batched_term: bool = True,
+        events=None,
+        event_bisect_iters: int = 30,
         extra_stats: tuple = (),
     ):
         self.stepper = AbstractStepper.coerce(stepper)
@@ -63,7 +66,28 @@ class _Driver:
         self.dense = dense
         self.dense_window = dense_window
         self.batched_term = batched_term
+        self.events = normalize_events(events)
+        self.event_bisect_iters = event_bisect_iters
         self.extra_stats = tuple(extra_stats)
+
+    def _events_for(self, raveled) -> tuple[Event, ...]:
+        """Events see the caller's state: for PyTree solves each per-instance
+        condition receives the unravelled PyTree, not the flat buffer."""
+        if raveled is None or not self.events:
+            return self.events
+        wrapped = []
+        for e in self.events:
+            if e.batched:
+                raise ValueError(
+                    "batched event conditions are not supported for PyTree "
+                    "states; use per-instance cond_fn (batched=False)"
+                )
+            if e.with_args:
+                cond = lambda t, y, args, _f=e.cond_fn: _f(t, raveled.unravel_one(y), args)
+            else:
+                cond = lambda t, y, _f=e.cond_fn: _f(t, raveled.unravel_one(y))
+            wrapped.append(dataclasses.replace(e, cond_fn=cond))
+        return tuple(wrapped)
 
     def _prepare(self, f, y0):
         """Normalize (f, y0) onto the flat convention.  Returns
@@ -81,6 +105,8 @@ class _Driver:
             atol=self.atol,
             dense=self.dense,
             dense_window=self.dense_window,
+            events=self._events_for(raveled),
+            event_bisect_iters=self.event_bisect_iters,
             extra_stats=self.extra_stats,
         )
         return step_fn, y0_flat, raveled
@@ -89,7 +115,10 @@ class _Driver:
     def _finalize(sol: Solution, raveled) -> Solution:
         if raveled is None:
             return sol
-        return dataclasses.replace(sol, ys=raveled.unravel(sol.ys))
+        updates = dict(ys=raveled.unravel(sol.ys))
+        if sol.event_y is not None:
+            updates["event_y"] = raveled.unravel(sol.event_y)
+        return dataclasses.replace(sol, **updates)
 
 
 class AutoDiffAdjoint(_Driver):
@@ -183,7 +212,20 @@ class BacksolveAdjoint:
         atol=1e-6,
         max_steps: int = 10_000,
         mode: str = "joint",
+        events=None,
     ):
+        if normalize_events(events):
+            # Gradients through an event time need the implicit function
+            # theorem on the adjoint boundary condition, which the backsolve's
+            # custom_vjp does not implement.  Refuse loudly rather than
+            # silently ignoring the events.
+            raise ValueError(
+                "BacksolveAdjoint does not support events: its O(1)-memory "
+                "custom_vjp integrates the adjoint ODE from a fixed t_end and "
+                "cannot differentiate through per-instance stopping times. "
+                "Use AutoDiffAdjoint (forward mode) or ScanAdjoint "
+                "(discretize-then-optimize) for event-terminated solves."
+            )
         self.stepper = AbstractStepper.coerce(stepper)
         self.controller = controller
         self.rtol = rtol

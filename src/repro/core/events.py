@@ -1,0 +1,252 @@
+"""Per-instance event handling: detection and localization on dense output.
+
+An ``Event`` observes the solution through a scalar condition function
+``cond_fn(t, y, args)`` and *fires* when that condition crosses zero between
+two accepted solver states.  Detection is a per-instance sign test on every
+accepted step; localization refines the crossing time by masked bisection on
+the stepper's dense-output interpolant (the cubic Hermite the solver already
+builds for ``t_eval``), so pinning down the event time costs ZERO extra
+vector-field evaluations -- each bisection iteration evaluates only the
+interpolant polynomial (the ``masked_bisect_refine`` kernel op) and the
+condition function on the interpolated state.
+
+Everything is batched with per-instance masks, the same discipline as the
+outer loop and the Newton layer: each instance in the batch detects, localizes
+and (for ``terminal`` events) terminates independently, and instances whose
+events already fired ride along frozen.  ``StepFunction`` threads an
+``EventState`` through the loop and turns a fired terminal event into a
+per-instance stop with ``Status.EVENT``, truncating dense output past the
+event time.
+
+Semantics (matching ``scipy.integrate.solve_ivp`` events):
+
+direction
+    ``0`` fires on any zero crossing, ``> 0`` only when the condition goes
+    from negative to positive (rising), ``< 0`` only falling.  A condition
+    that is zero at both endpoints of a step does not fire (an identically
+    zero condition never fires).
+terminal
+    ``True`` stops the instance at the event time: its committed state
+    becomes the interpolated ``(event_t, event_y)`` and its status
+    ``Status.EVENT``.  ``False`` records the FIRST crossing per (instance,
+    event) and keeps integrating (fixed-shape buffers cannot hold an
+    unbounded crossing list; re-arm by solving again from the event time).
+
+A crossing that enters and leaves zero within a single accepted step (an even
+number of crossings) is invisible to the endpoint sign test -- the standard
+limitation of sampled event detection; tighten tolerances to shrink steps
+near an expected event.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """A scalar zero-crossing condition on the solution.
+
+    ``batched=False`` (default): ``cond_fn(t, y, args) -> scalar`` is written
+    for a single instance (scalar ``t``, ``(f,)`` -- or the user's PyTree --
+    state) and is vmapped over the batch, mirroring scipy's event signature.
+    ``batched=True``: ``cond_fn`` handles ``(b,)`` times and ``(b, f)`` states
+    directly and returns ``(b,)`` values (not supported for PyTree states,
+    whose per-instance structure only exists inside the vmap).
+    """
+
+    cond_fn: Callable[..., Any]
+    terminal: bool = True
+    direction: float = 0.0
+    batched: bool = False
+    with_args: bool = True
+
+    def value(self, t: jax.Array, y: jax.Array, args: Any) -> jax.Array:
+        """Batched condition values: ((b,), (b, f)) -> (b,)."""
+        if self.batched:
+            out = self.cond_fn(t, y, args) if self.with_args else self.cond_fn(t, y)
+        else:
+            if self.with_args:
+                out = jax.vmap(lambda ti, yi: self.cond_fn(ti, yi, args))(t, y)
+            else:
+                out = jax.vmap(self.cond_fn)(t, y)
+        return jnp.asarray(out, dtype=y.dtype).reshape(t.shape)
+
+
+def normalize_events(events) -> tuple[Event, ...]:
+    """Accept None, a single Event or a sequence; return a tuple of Events."""
+    if events is None:
+        return ()
+    if isinstance(events, Event):
+        return (events,)
+    events = tuple(events)
+    for e in events:
+        if not isinstance(e, Event):
+            raise TypeError(f"expected Event, got {type(e).__name__}; wrap cond_fn in Event(...)")
+    return events
+
+
+class EventState(NamedTuple):
+    """Loop-carried per-instance event bookkeeping (all (b, E)-shaped, E = #events)."""
+
+    value: jax.Array  # (b, E) condition values at the current accepted state
+    fired: jax.Array  # (b, E) bool: first crossing already recorded
+    t: jax.Array  # (b, E) localized first-crossing times (NaN until fired)
+    y: jax.Array  # (b, E, f) interpolated states at the crossings
+
+
+def init_event_state(
+    events: Sequence[Event], t0: jax.Array, y0: jax.Array, args: Any
+) -> EventState:
+    b, f = y0.shape
+    E = len(events)
+    value = jnp.stack([e.value(t0, y0, args) for e in events], axis=1)
+    return EventState(
+        value=value,
+        fired=jnp.zeros((b, E), dtype=bool),
+        t=jnp.full((b, E), jnp.nan, dtype=t0.dtype),
+        y=jnp.zeros((b, E, f), dtype=y0.dtype),
+    )
+
+
+def _crossed(v0: jax.Array, v1: jax.Array, direction: float) -> jax.Array:
+    """scipy's sign-change test between consecutive condition values."""
+    up = (v0 <= 0.0) & (v1 >= 0.0)
+    down = (v0 >= 0.0) & (v1 <= 0.0)
+    if direction > 0:
+        c = up
+    elif direction < 0:
+        c = down
+    else:
+        c = up | down
+    return c & ((v0 != 0.0) | (v1 != 0.0))
+
+
+def _localize(
+    event: Event,
+    coeffs,
+    t0: jax.Array,  # (b,) step start times
+    dt: jax.Array,  # (b,) signed step sizes actually taken
+    v0: jax.Array,  # (b,) condition values at x = 0
+    active: jax.Array,  # (b,) bool: instances whose crossing to localize
+    args: Any,
+    iters: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Bisect the crossing of ``event`` on the interpolant, masked by ``active``.
+
+    The bracket lives in interpolant coordinates x = (t - t0)/dt in [0, 1]
+    (monotone along the trajectory for either time direction).  Returns
+    ``(x, y)``: the bracket midpoint after ``iters`` halvings and the
+    interpolated state there; garbage where ``~active`` (callers mask).
+    """
+    lo = jnp.zeros_like(t0)
+    hi = jnp.ones_like(t0)
+    none = jnp.zeros(t0.shape, dtype=bool)
+    # Priming call with an all-False mask: leaves the bracket at [0, 1] and
+    # evaluates the interpolant at its midpoint, seeding the loop carry.
+    carry = ops.masked_bisect_refine(coeffs, lo, hi, v0, v0, none)
+
+    def body(_, carry):
+        lo, hi, v_lo, mid, y_mid = carry
+        v_mid = event.value(t0 + mid * dt, y_mid, args)
+        return ops.masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active)
+
+    lo, hi, v_lo, mid, y_mid = jax.lax.fori_loop(0, iters, body, carry)
+    return mid, y_mid
+
+
+class EventAdvance(NamedTuple):
+    """What one step's event processing hands back to ``StepFunction.step``."""
+
+    estate: EventState
+    stop: jax.Array  # (b,) bool: a terminal event fired this step
+    t_stop: jax.Array  # (b,) earliest terminal event time (valid where stop)
+    y_stop: jax.Array  # (b, f) interpolated state there (valid where stop)
+    n_new: jax.Array  # (b,) int32: events recorded this step
+
+
+def advance(
+    events: Sequence[Event],
+    estate: EventState,
+    coeffs,  # dense-output interpolant coefficients of this step
+    t0: jax.Array,  # (b,) step start times
+    dt: jax.Array,  # (b,) signed step sizes actually taken
+    t_new: jax.Array,  # (b,) step end times
+    y_new: jax.Array,  # (b, f) accepted candidate states
+    accept: jax.Array,  # (b,) bool (already masked by running)
+    args: Any,
+    iters: int,
+) -> EventAdvance:
+    """Detect, localize and record this step's crossings, per instance.
+
+    Each event's bisection (the only nontrivial cost) runs under a
+    ``lax.cond`` on "any instance fired THIS event", so steps without
+    crossings pay E condition evaluations and nothing else.
+
+    Gradients: the bisection returns bracket midpoints that are dyadic
+    constants in x, so differentiating ``event_t = t0 + x*dt`` carries only
+    the firing step's endpoint sensitivities -- NOT the implicit-function
+    event derivative -(dg/dtheta)/(dg/dt).  Treat event-time gradients (in
+    either AD mode) as approximate; apply the IFT correction outside the
+    solver when exact sensitivities are needed.
+    """
+    b = y_new.shape[0]
+    v_new = jnp.stack([e.value(t_new, y_new, args) for e in events], axis=1)
+    crossed = jnp.stack(
+        [_crossed(estate.value[:, i], v_new[:, i], e.direction) for i, e in enumerate(events)],
+        axis=1,
+    )
+    newly = crossed & ~estate.fired & accept[:, None]  # (b, E)
+
+    # Each event's bisection runs under its OWN cond: a step where only one
+    # of E events fires pays one localizer, not E.
+    xs, ys = [], []
+    for i, e in enumerate(events):
+        x_i, y_i = jax.lax.cond(
+            jnp.any(newly[:, i]),
+            lambda i=i, e=e: _localize(
+                e, coeffs, t0, dt, estate.value[:, i], newly[:, i], args, iters
+            ),
+            lambda: (jnp.zeros_like(t0), jnp.zeros_like(y_new)),
+        )
+        xs.append(x_i)
+        ys.append(y_i)
+    x, y_ev = jnp.stack(xs, axis=1), jnp.stack(ys, axis=1)  # (b, E), (b, E, f)
+
+    # Terminal resolution: the instance stops at its EARLIEST terminal
+    # crossing; crossings localized after that point happened beyond the end
+    # of this instance's trajectory and are discarded (not recorded, so a
+    # re-solve from the event time can still observe them).
+    inf = jnp.asarray(jnp.inf, t0.dtype)
+    x_stop = jnp.full((b,), inf, dtype=t0.dtype)
+    y_stop = y_new
+    stop = jnp.zeros((b,), dtype=bool)
+    for i, e in enumerate(events):
+        if not e.terminal:
+            continue
+        stop = stop | newly[:, i]
+        earlier = newly[:, i] & (x[:, i] < x_stop)
+        y_stop = jnp.where(earlier[:, None], y_ev[:, i], y_stop)
+        x_stop = jnp.where(earlier, x[:, i], x_stop)
+    rec = newly & (x <= x_stop[:, None])
+
+    t_ev = t0[:, None] + x * dt[:, None]
+    estate_new = EventState(
+        value=jnp.where(accept[:, None], v_new, estate.value),
+        fired=estate.fired | rec,
+        t=jnp.where(rec, t_ev, estate.t),
+        y=jnp.where(rec[:, :, None], y_ev, estate.y),
+    )
+    return EventAdvance(
+        estate=estate_new,
+        stop=stop,
+        t_stop=t0 + jnp.where(stop, x_stop, 0.0) * dt,
+        y_stop=y_stop,
+        n_new=rec.sum(axis=1).astype(jnp.int32),
+    )

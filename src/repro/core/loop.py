@@ -36,6 +36,8 @@ def make_solver(
     batched_term: bool = True,
     dense: bool = True,
     dense_window: int = 0,
+    events=None,
+    event_bisect_iters: int = 30,
 ):
     """Build (init_fn, body_fn, finish_fn) shared by the while_loop and scan
     drivers.  Compatibility shim over ``StepFunction``; ``max_steps`` is
@@ -50,6 +52,8 @@ def make_solver(
         atol=atol,
         dense=dense,
         dense_window=dense_window,
+        events=events,
+        event_bisect_iters=event_bisect_iters,
     )
     return step_fn.init, step_fn.step, step_fn.finish
 
@@ -71,6 +75,8 @@ def solve_ivp(
     batched_term: bool = True,
     dense: bool = True,
     dense_window: int = 0,
+    events=None,
+    event_bisect_iters: int = 30,
 ) -> Solution:
     """Solve a batch of IVPs in parallel with independent per-instance state.
 
@@ -87,6 +93,11 @@ def solve_ivp(
     rtol/atol: scalars shared by the batch, or per-instance (b,) vectors --
             each instance is then held to its own tolerance by the error norm
             and the step-size controller (torchode's per-instance tolerances).
+    events: an ``Event`` (or sequence of them) with per-instance scalar
+            conditions ``cond_fn(t, y, args)``; terminal events stop each
+            instance independently at its localized crossing time
+            (``Status.EVENT``), and the Solution carries per-instance
+            ``event_t`` / ``event_y`` / ``event_mask``.
 
     Returns a ``Solution`` with per-instance status and statistics.
     """
@@ -99,6 +110,8 @@ def solve_ivp(
         dense=dense,
         dense_window=dense_window,
         batched_term=batched_term,
+        events=events,
+        event_bisect_iters=event_bisect_iters,
     )
     return driver.solve(f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args)
 
@@ -121,6 +134,8 @@ def solve_ivp_scan(
     dense: bool = True,
     dense_window: int = 0,
     checkpoint_every: int = 0,
+    events=None,
+    event_bisect_iters: int = 30,
 ) -> Solution:
     """Reverse-mode-differentiable variant: a bounded ``lax.scan`` over
     ``max_steps`` iterations with masked no-op steps after termination
@@ -137,5 +152,7 @@ def solve_ivp_scan(
         dense_window=dense_window,
         batched_term=batched_term,
         checkpoint_every=checkpoint_every,
+        events=events,
+        event_bisect_iters=event_bisect_iters,
     )
     return driver.solve(f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args)

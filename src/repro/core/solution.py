@@ -16,6 +16,7 @@ class Status(enum.IntEnum):
     REACHED_MAX_STEPS = 1
     INFINITE = 2
     REACHED_DT_MIN = 3
+    EVENT = 4  # a terminal event fired; the instance stopped at event_t
 
 
 @jax.tree_util.register_dataclass
@@ -23,22 +24,41 @@ class Status(enum.IntEnum):
 class Solution:
     """Result of a batched IVP solve.
 
-    ts:     (b, n) evaluation times (== the t_eval passed in), or (b,) final times
+    ts:     (b, n) evaluation times (== the t_eval passed in), or (b,) the
+            per-instance reached times when t_eval is None (t_end on SUCCESS,
+            the event time on EVENT, the last accepted time otherwise)
     ys:     (b, n, f) solution values, or (b, f) final states when t_eval is None.
             For a PyTree initial state, ``ys`` is the same PyTree structure with
             (b, n, ...) / (b, ...) leaves (unravelled at the driver boundary).
+            Dense output is truncated at a terminal event: eval points past the
+            event time stay at their initial (zero) fill and are excluded from
+            ``n_initialized``.
     status: (b,) int32, one of ``Status``
     stats:  the solver's statistics registry: a dict of named per-instance (b,)
             accumulators contributed by each component (stepper: n_f_evals,
             controller: n_accepted, step function: n_steps, n_initialized,
-            plus any user-registered contributors)
+            and n_events when events are registered, plus any user-registered
+            contributors)
+
+    When events are registered (all None otherwise; E = number of events):
+
+    event_t:    (b, E) localized first-crossing times (NaN where not fired)
+    event_y:    (b, E, f) interpolated states at the crossings (PyTree states
+                unravel to (b, E, ...) leaves)
+    event_mask: (b, E) bool -- which (instance, event) cells fired
     """
 
     ts: jax.Array
     ys: jax.Array
     status: jax.Array
     stats: dict[str, Any]
+    event_t: jax.Array | None = None
+    event_y: Any = None
+    event_mask: jax.Array | None = None
 
     @property
     def success(self) -> jax.Array:
-        return self.status == Status.SUCCESS.value
+        """True where integration ended as requested: reached t_end OR was
+        stopped by a terminal event (scipy's solve_ivp convention -- an event
+        termination is the *intended* outcome, not a failure)."""
+        return (self.status == Status.SUCCESS.value) | (self.status == Status.EVENT.value)

@@ -13,7 +13,11 @@ instance's error ratio to infinity.  The drivers in
 that build their own loop.
 
 Every instance in the batch carries its own time, step size, controller
-history, accept/reject decision and termination status.  The body is a single
+history, accept/reject decision, termination status and (when events are
+registered) event bookkeeping: sign changes of each event condition are
+detected on accepted steps and localized by masked bisection on the step's
+dense-output interpolant (``core/events.py``), and a fired terminal event
+stops that instance at the interpolated event state with ``Status.EVENT``.  The body is a single
 fused XLA program -- termination is an on-device reduction, so there is never
 a host<->device synchronization inside the loop (the GPU-sync avoidance
 torchode implements by hand in PyTorch).  Instances that finish early keep
@@ -48,6 +52,8 @@ from .controller import (
     _ControllerStats,
     integral_controller,
 )
+from .events import advance as advance_events
+from .events import init_event_state, normalize_events
 from .solution import Solution, Status
 from .stepper import AbstractStepper, Stepper
 from .terms import ODETerm, as_term
@@ -65,6 +71,7 @@ class LoopState(NamedTuple):
     stats: dict[str, jax.Array]  # named (b,) accumulators (statistics registry)
     ys: jax.Array  # (b, n, f) dense output buffer (or (b, 0, f) when unused)
     it: jax.Array  # () int32 global iteration counter
+    estate: Any = ()  # per-instance event bookkeeping (EventState, or () without events)
 
 
 class StepContext(NamedTuple):
@@ -77,6 +84,7 @@ class StepContext(NamedTuple):
     n_written: jax.Array  # (b,) int32: dense-output points written this step
     err_ratio: jax.Array  # (b,) weighted RMS error ratio of this step
     aux: dict | None = None  # stepper-private extras (e.g. Newton iteration counts)
+    n_events: jax.Array | None = None  # (b,) int32: events recorded this step
 
 
 def _normalize_times(y0, t_eval, t_start, t_end, dtype):
@@ -114,6 +122,8 @@ class StepFunction:
         atol=1e-6,
         dense: bool = True,
         dense_window: int = 0,
+        events=None,
+        event_bisect_iters: int = 30,
         extra_stats: tuple = (),
     ):
         self.term = as_term(term)
@@ -125,6 +135,8 @@ class StepFunction:
         self.atol = atol
         self.dense = dense
         self.dense_window = dense_window
+        self.events = normalize_events(events)
+        self.event_bisect_iters = event_bisect_iters
         # Registry order: component contributions first, loop bookkeeping last.
         # Duck-typed controllers predating the registry (init/__call__ only)
         # still get n_accepted recorded -- it was unconditional before and the
@@ -137,14 +149,20 @@ class StepFunction:
     # --- the step function's own statistics contribution ---
     def init_stats(self, batch: int) -> dict[str, jax.Array]:
         zeros = jnp.zeros((batch,), dtype=jnp.int32)
-        return {"n_steps": zeros, "n_initialized": zeros}
+        out = {"n_steps": zeros, "n_initialized": zeros}
+        if self.events:
+            out["n_events"] = zeros
+        return out
 
     def update_stats(self, stats: dict, ctx: StepContext) -> dict:
-        return {
+        out = {
             **stats,
             "n_steps": stats["n_steps"] + ctx.step_active * ctx.running.astype(jnp.int32),
             "n_initialized": stats["n_initialized"] + ctx.n_written,
         }
+        if ctx.n_events is not None:
+            out["n_events"] = stats["n_events"] + ctx.n_events
+        return out
 
     def _collect_init_stats(self, batch: int) -> dict[str, jax.Array]:
         stats: dict[str, jax.Array] = {}
@@ -223,6 +241,9 @@ class StepFunction:
             stats=stats,
             ys=ys,
             it=jnp.zeros((), dtype=jnp.int32),
+            estate=(
+                init_event_state(self.events, t_start, y0, args) if self.events else ()
+            ),
         )
         return state, (t_eval, t_start, t_end, direction)
 
@@ -292,14 +313,36 @@ class StepFunction:
         nonfinite_y = ~jnp.all(jnp.isfinite(res.y1), axis=-1)
         stopped = state.running & ~accept & (jnp.abs(dt_next) <= dt_floor)
 
+        # The dense-output interpolant of this step is shared by the eval-point
+        # writer and the event localizer.
+        dense_now = self.dense and t_eval is not None
+        if dense_now or self.events:
+            coeffs = stepper.interp_coeffs(state.y, res.y1, state.f0, res.f1, safe_dt)
+
+        # --- events: detect sign changes on accepted steps, localize by
+        # masked bisection on the interpolant (zero extra vf evaluations),
+        # stop instances whose terminal event fired ---
+        if self.events:
+            adv = advance_events(
+                self.events, state.estate, coeffs, state.t, safe_dt, t_new,
+                res.y1, accept, args, self.event_bisect_iters,
+            )
+            estate, event_stop = adv.estate, adv.stop
+            # Dense output and the committed state are truncated at the
+            # earliest terminal event time.
+            t_stop = jnp.where(event_stop, adv.t_stop, t_new)
+        else:
+            adv, estate = None, state.estate
+            event_stop = jnp.zeros_like(accept)
+            t_stop = t_new
+
         # --- dense output: write every eval point passed by this step ---
         ys = state.ys
         n_written = jnp.zeros_like(state.running, dtype=jnp.int32)
         if windowed:
-            coeffs = stepper.interp_coeffs(state.y, res.y1, state.f0, res.f1, safe_dt)
             xw = jnp.clip((t_win - state.t[:, None]) / safe_dt[:, None], 0.0, 1.0)
             after_t = direction[:, None] * (t_win - state.t[:, None]) > 0.0
-            upto_new = direction[:, None] * (t_win - t_new[:, None]) <= 0.0
+            upto_new = direction[:, None] * (t_win - t_stop[:, None]) <= 0.0
             maskw = accept[:, None] & after_t & upto_new
             feat = ys.shape[-1]
             cur = jax.vmap(
@@ -310,12 +353,11 @@ class StepFunction:
                 lambda row, m, c: jax.lax.dynamic_update_slice(row, m, (c, 0))
             )(ys, merged, cursor)
             n_written = maskw.sum(axis=1).astype(jnp.int32)
-        elif self.dense and t_eval is not None:
-            coeffs = stepper.interp_coeffs(state.y, res.y1, state.f0, res.f1, safe_dt)
+        elif dense_now:
             x = (t_eval - state.t[:, None]) / safe_dt[:, None]
             x = jnp.clip(x, 0.0, 1.0)  # masked points stay finite (grad-safe)
             after_t = direction[:, None] * (t_eval - state.t[:, None]) > 0.0
-            upto_new = direction[:, None] * (t_eval - t_new[:, None]) <= 0.0
+            upto_new = direction[:, None] * (t_eval - t_stop[:, None]) <= 0.0
             mask = accept[:, None] & after_t & upto_new
             ys = ops.interp_eval(coeffs, x, mask, ys)
             n_written = mask.sum(axis=1).astype(jnp.int32)
@@ -326,15 +368,24 @@ class StepFunction:
         f0 = jnp.where(acc_f, res.f1, state.f0)
         t = jnp.where(accept, t_new, state.t)
         dt = jnp.where(state.running, dt_next, state.dt)
+        if self.events:
+            # An event-stopped instance rests AT the event: its committed
+            # state is the interpolated (event_t, event_y), not (t_new, y1).
+            y = jnp.where(event_stop[:, None], adv.y_stop, y)
+            t = jnp.where(event_stop, t_stop, t)
 
-        running = state.running & ~done_now & ~stopped
+        running = state.running & ~done_now & ~stopped & ~event_stop
         status = jnp.where(
-            done_now,
-            Status.SUCCESS.value,
+            event_stop,
+            Status.EVENT.value,
             jnp.where(
-                stopped,
-                jnp.where(nonfinite_y, Status.INFINITE.value, Status.REACHED_DT_MIN.value),
-                state.status,
+                done_now,
+                Status.SUCCESS.value,
+                jnp.where(
+                    stopped,
+                    jnp.where(nonfinite_y, Status.INFINITE.value, Status.REACHED_DT_MIN.value),
+                    state.status,
+                ),
             ),
         ).astype(jnp.int32)
 
@@ -347,6 +398,7 @@ class StepFunction:
             n_written=n_written,
             err_ratio=err_ratio,
             aux=res.stats_aux,
+            n_events=adv.n_new if adv is not None else None,
         )
         stats = self._apply_stat_updates(dict(state.stats), ctx)
 
@@ -364,6 +416,7 @@ class StepFunction:
             stats=stats,
             ys=ys,
             it=state.it + inc,
+            estate=estate,
         )
 
     def finish(self, state: LoopState, consts) -> Solution:
@@ -372,6 +425,17 @@ class StepFunction:
             state.running, Status.REACHED_MAX_STEPS.value, state.status
         ).astype(jnp.int32)
         stats = dict(state.stats)
+        extra = {}
+        if self.events:
+            extra = dict(
+                event_t=state.estate.t,
+                event_y=state.estate.y,
+                event_mask=state.estate.fired,
+            )
         if self.dense and t_eval is not None:
-            return Solution(ts=t_eval, ys=state.ys, status=status, stats=stats)
-        return Solution(ts=t_end, ys=state.y, status=status, stats=stats)
+            return Solution(ts=t_eval, ys=state.ys, status=status, stats=stats, **extra)
+        # Without t_eval, report the per-instance time actually reached:
+        # t_end on SUCCESS (the final step lands there exactly), the event
+        # time on EVENT, and the last accepted time for early stops
+        # (REACHED_DT_MIN / INFINITE / REACHED_MAX_STEPS).
+        return Solution(ts=state.t, ys=state.y, status=status, stats=stats, **extra)

@@ -85,6 +85,15 @@ def masked_newton_update(k, delta, active, scale):
     return _impl().masked_newton_update(k, delta, active, scale)
 
 
+def masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active):
+    """One masked bisection step of the event localizer: halve the bracket
+    keeping the sign change inside, and evaluate the dense-output interpolant
+    at the new midpoint."""
+    if backend() == "ref":
+        return ref.masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active)
+    return _impl().masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active)
+
+
 hermite_coeffs = ref.hermite_coeffs  # pure arithmetic; fused into callers by XLA
 rms_norm = ref.rms_norm  # init-time only (step-size selection); never in the hot loop
 broadcast_tolerances = ref.broadcast_tolerances  # the shared tolerance-shape contract

@@ -19,6 +19,9 @@ torchode fast, re-thought for the TPU memory hierarchy:
   - ``masked_newton_update``: the masked Newton commit fused with the
     per-instance scaled update norm (the inner-iteration analogue of
     ``error_norm``).
+  - ``masked_bisect_refine``: one masked bisection step of the event-time
+    localizer -- bracket halving fused with the Horner evaluation of the
+    dense-output cubic at the new midpoint.
 
 Tiling: (8, 128)-aligned blocks (f32 VREG lane layout); wrappers pad
 non-aligned shapes and slice back, so kernels always see divisible shapes.
@@ -249,6 +252,67 @@ def interp_eval(coeffs, x, mask, out, *, interpret=False):
     return res[:b, :n, :f]
 
 
+# ------------------------------------------------------ masked bisect refine
+
+
+def _bisect_refine_kernel(
+    c0_ref, c1_ref, c2_ref, c3_ref, lo_ref, hi_ref, vlo_ref, vmid_ref, act_ref,
+    lo_out, hi_out, vlo_out, mid_out, y_out,
+):
+    lo = lo_ref[...]  # (BB, 1)
+    hi = hi_ref[...]
+    v_lo = vlo_ref[...]
+    v_mid = vmid_ref[...]
+    active = act_ref[...]
+    mid = 0.5 * (lo + hi)
+    left = jnp.sign(v_lo) != jnp.sign(v_mid)
+    hi_new = jnp.where(active & left, mid, hi)
+    lo_new = jnp.where(active & ~left, mid, lo)
+    vlo_new = jnp.where(active & ~left, v_mid, v_lo)
+    mid_new = 0.5 * (lo_new + hi_new)
+    # The (BB, 1) bracket outputs are written once per feature tile; the
+    # values do not depend on the feature tile, so the rewrite is idempotent
+    # (the TPU grid runs sequentially).
+    lo_out[...] = lo_new
+    hi_out[...] = hi_new
+    vlo_out[...] = vlo_new
+    mid_out[...] = mid_new
+    x = mid_new  # (BB, 1), broadcasts against the (BB, BF) coefficient tiles
+    y_out[...] = ((c3_ref[...] * x + c2_ref[...]) * x + c1_ref[...]) * x + c0_ref[...]
+
+
+def masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active, *, interpret=False):
+    c0, c1, c2, c3 = coeffs  # the stepper's dense output is cubic Hermite
+    b, f = c0.shape
+    cs = [_pad_to(_pad_to(c, 0, BB), 1, BF) for c in (c0, c1, c2, c3)]
+    # Padded rows: values 0, active False -> sign(0) == sign(0) keeps the
+    # bracket untouched; the padded outputs are sliced away.
+    lop = _pad_to(lo[:, None], 0, BB)
+    hip = _pad_to(hi[:, None], 0, BB)
+    vlop = _pad_to(v_lo[:, None], 0, BB)
+    vmidp = _pad_to(v_mid[:, None], 0, BB)
+    actp = _pad_to(active[:, None], 0, BB)
+    bp, fp = cs[0].shape
+    scalar_spec = pl.BlockSpec((BB, 1), lambda i, j: (i, 0))
+    tile_spec = pl.BlockSpec((BB, BF), lambda i, j: (i, j))
+    lo_n, hi_n, vlo_n, mid_n, y_mid = pl.pallas_call(
+        _bisect_refine_kernel,
+        grid=(bp // BB, fp // BF),
+        in_specs=[tile_spec, tile_spec, tile_spec, tile_spec,
+                  scalar_spec, scalar_spec, scalar_spec, scalar_spec, scalar_spec],
+        out_specs=[scalar_spec, scalar_spec, scalar_spec, scalar_spec, tile_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), lo.dtype),
+            jax.ShapeDtypeStruct((bp, 1), hi.dtype),
+            jax.ShapeDtypeStruct((bp, 1), v_lo.dtype),
+            jax.ShapeDtypeStruct((bp, 1), lo.dtype),
+            jax.ShapeDtypeStruct((bp, fp), c0.dtype),
+        ],
+        interpret=interpret,
+    )(*cs, lop, hip, vlop, vmidp, actp)
+    return lo_n[:b, 0], hi_n[:b, 0], vlo_n[:b, 0], mid_n[:b, 0], y_mid[:b, :f]
+
+
 # ------------------------------------------------------- batched linear solve
 
 
@@ -408,6 +472,9 @@ class _Impl:
 
     def masked_newton_update(self, k, delta, active, scale):
         return masked_newton_update(k, delta, active, scale, interpret=self._i)
+
+    def masked_bisect_refine(self, coeffs, lo, hi, v_lo, v_mid, active):
+        return masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active, interpret=self._i)
 
 
 _INTERPRET = _Impl(True)

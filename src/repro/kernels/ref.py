@@ -121,6 +121,40 @@ def masked_newton_update(k, delta, active, scale):
     return k_new, jnp.sqrt(jnp.mean(ratio * ratio, axis=-1))
 
 
+def masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active):
+    """One masked bisection refinement on the dense-output interpolant.
+
+    The event localizer brackets a sign change of the condition function in
+    interpolant coordinates x in [0, 1].  Given the bracket, the condition
+    value at its low end and at its midpoint, this op halves the bracket
+    (keeping the sign change inside) and evaluates the interpolant at the NEW
+    midpoint -- the caller then evaluates the condition there and iterates.
+
+    coeffs: tuple of (b, f) Horner coefficients, low -> high degree
+    lo, hi: (b,) current bracket
+    v_lo:   (b,) condition value at lo
+    v_mid:  (b,) condition value at (lo + hi)/2
+    active: (b,) bool -- instances still refining (others keep their bracket)
+
+    Returns ``(lo', hi', v_lo', mid', y_mid')`` with ``mid' = (lo' + hi')/2``
+    and ``y_mid'`` the interpolant there (evaluated for every row; inactive
+    rows' brackets are frozen).
+    """
+    mid = 0.5 * (lo + hi)
+    # The crossing is in [lo, mid] iff the condition changes sign there
+    # (v_mid == 0 counts: the event is at/before the midpoint).
+    left = jnp.sign(v_lo) != jnp.sign(v_mid)
+    hi_new = jnp.where(active & left, mid, hi)
+    lo_new = jnp.where(active & ~left, mid, lo)
+    v_lo_new = jnp.where(active & ~left, v_mid, v_lo)
+    mid_new = 0.5 * (lo_new + hi_new)
+    xe = mid_new[:, None]
+    acc = coeffs[-1]
+    for c in coeffs[-2::-1]:
+        acc = acc * xe + c
+    return lo_new, hi_new, v_lo_new, mid_new, acc
+
+
 def interp_eval(coeffs, x, mask, out):
     """Masked Horner evaluation of the dense-output polynomial.
 

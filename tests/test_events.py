@@ -1,0 +1,336 @@
+"""Event subsystem tests: the masked_bisect_refine kernel contract
+(ref vs Pallas interpret), per-instance detection/localization semantics,
+driver plumbing and the Solution/statistics surface.
+
+Golden comparisons against scipy live in test_events_golden.py; hypothesis
+permutation properties in test_solver_properties.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoDiffAdjoint,
+    BacksolveAdjoint,
+    Event,
+    ScanAdjoint,
+    Status,
+    make_solver,
+    solve_ivp,
+    solve_ivp_scan,
+)
+from repro.kernels import pallas_impl as pi, ref
+
+G = 9.81
+
+
+def ball(t, y, args):
+    """Free fall: y = (height, velocity)."""
+    return jnp.stack((y[..., 1], jnp.full_like(y[..., 1], -G)), axis=-1)
+
+
+def hit_time(h0, v0):
+    return (v0 + np.sqrt(v0**2 + 2.0 * G * h0)) / G
+
+
+GROUND = Event(lambda t, y, args: y[0], terminal=True, direction=-1.0)
+
+
+# ---------------------------------------------------------------- kernel op
+
+
+class TestMaskedBisectRefine:
+    SHAPES = [(1, 1), (3, 5), (8, 128), (17, 300), (2, 1025), (9, 64)]
+
+    @pytest.mark.parametrize("b,f", SHAPES)
+    def test_matches_ref(self, b, f):
+        rng = np.random.default_rng(b * f + 1)
+        coeffs = tuple(jnp.asarray(rng.standard_normal((b, f)), jnp.float32) for _ in range(4))
+        lo = jnp.asarray(rng.uniform(0.0, 0.4, (b,)), jnp.float32)
+        hi = jnp.asarray(rng.uniform(0.6, 1.0, (b,)), jnp.float32)
+        v_lo = jnp.asarray(rng.standard_normal((b,)), jnp.float32)
+        v_mid = jnp.asarray(rng.standard_normal((b,)), jnp.float32)
+        active = jnp.asarray(rng.uniform(size=(b,)) > 0.4)
+        r = ref.masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active)
+        p = pi.masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active, interpret=True)
+        for rr, pp in zip(r, p):
+            np.testing.assert_allclose(np.asarray(rr), np.asarray(pp), rtol=1e-6, atol=1e-6)
+
+    def test_inactive_rows_keep_bracket(self):
+        coeffs = tuple(jnp.ones((2, 3)) for _ in range(4))
+        lo = jnp.asarray([0.0, 0.25])
+        hi = jnp.asarray([1.0, 0.75])
+        v = jnp.asarray([-1.0, -1.0])
+        lo2, hi2, _, mid2, _ = ref.masked_bisect_refine(
+            coeffs, lo, hi, v, jnp.asarray([1.0, 1.0]), jnp.asarray([True, False])
+        )
+        # active row: sign change at mid -> bracket halves to [0, 0.5]
+        np.testing.assert_allclose(np.asarray(lo2), [0.0, 0.25])
+        np.testing.assert_allclose(np.asarray(hi2), [0.5, 0.75])
+        np.testing.assert_allclose(np.asarray(mid2), [0.25, 0.5])
+
+    def test_iterated_bisection_finds_polynomial_root(self):
+        """Driving the op in the localizer's loop converges to the root of the
+        cubic itself (the condition IS the first state feature here)."""
+        # p(x) = x - 0.3125 (c1 = 1, c0 = -0.3125): root exactly representable
+        b, f = 4, 3
+        c0 = jnp.full((b, f), -0.3125)
+        c1 = jnp.ones((b, f))
+        zeros = jnp.zeros((b, f))
+        coeffs = (c0, c1, zeros, zeros)
+        lo, hi = jnp.zeros((b,)), jnp.ones((b,))
+        v_lo = jnp.full((b,), -0.3125)
+        active = jnp.asarray([True, True, True, False])
+        carry = ref.masked_bisect_refine(coeffs, lo, hi, v_lo, v_lo, jnp.zeros((b,), bool))
+        for _ in range(30):
+            lo, hi, v_lo, mid, y_mid = carry
+            carry = ref.masked_bisect_refine(coeffs, lo, hi, v_lo, y_mid[:, 0], active)
+        mid = np.asarray(carry[3])
+        np.testing.assert_allclose(mid[:3], 0.3125, atol=1e-6)
+        np.testing.assert_allclose(mid[3], 0.5)  # inactive row never moved
+
+
+# ------------------------------------------------------------ solve surface
+
+
+class TestTerminalEvents:
+    def test_mixed_batch_localization_accuracy(self):
+        """Acceptance: event times within 10*rtol of analytic per instance in
+        a mixed batch (different drop heights/velocities, one non-firing)."""
+        rtol = 1e-6
+        h0 = np.array([10.0, 5.0, 20.0, 500.0])
+        v0 = np.array([0.0, 2.0, -1.0, 0.0])
+        y0 = jnp.asarray(np.stack([h0, v0], 1), jnp.float32)
+        sol = solve_ivp(ball, y0, None, t_start=0.0, t_end=5.0, events=GROUND,
+                        rtol=rtol, atol=1e-9)
+        status = np.asarray(sol.status)
+        assert list(status) == [Status.EVENT.value] * 3 + [Status.SUCCESS.value]
+        t_ev = np.asarray(sol.event_t)[:, 0]
+        expect = hit_time(h0, v0)
+        np.testing.assert_allclose(t_ev[:3], expect[:3], rtol=10 * rtol)
+        assert np.isnan(t_ev[3]) and not bool(np.asarray(sol.event_mask)[3, 0])
+        # the instance rests AT the event: ts is the event time, height ~ 0
+        np.testing.assert_allclose(np.asarray(sol.ts)[:3], t_ev[:3])
+        np.testing.assert_allclose(np.asarray(sol.event_y)[:3, 0, 0], 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sol.ys)[:3, 0], 0.0, atol=1e-5)
+
+    def test_zero_extra_vf_evaluations(self):
+        """Localization runs on interpolant coefficients only: a NON-terminal
+        event (same trajectory, same steps) leaves n_f_evals untouched."""
+        y0 = jnp.asarray([[10.0, 0.0]], jnp.float32)
+        marker = Event(lambda t, y, args: y[0] - 5.0, terminal=False)
+        kw = dict(t_start=0.0, t_end=1.2, rtol=1e-6, atol=1e-9)
+        plain = solve_ivp(ball, y0, None, **kw)
+        with_ev = solve_ivp(ball, y0, None, events=marker, **kw)
+        assert np.asarray(with_ev.stats["n_events"])[0] == 1
+        np.testing.assert_array_equal(np.asarray(plain.stats["n_f_evals"]),
+                                      np.asarray(with_ev.stats["n_f_evals"]))
+        np.testing.assert_array_equal(np.asarray(plain.stats["n_steps"]),
+                                      np.asarray(with_ev.stats["n_steps"]))
+
+    def test_dense_output_truncated_past_event(self):
+        y0 = jnp.asarray([[10.0, 0.0], [200.0, 0.0]], jnp.float32)
+        t_eval = jnp.linspace(0.0, 3.0, 31)
+        sol = solve_ivp(ball, y0, t_eval, events=GROUND, rtol=1e-6, atol=1e-9)
+        t_hit = hit_time(10.0, 0.0)
+        n_pre = int((np.asarray(t_eval) <= t_hit).sum())
+        ninit = np.asarray(sol.stats["n_initialized"])
+        assert ninit[0] == n_pre and ninit[1] == 31
+        ys = np.asarray(sol.ys)
+        assert np.all(ys[0, n_pre:] == 0.0)  # truncated tail untouched
+        te = np.asarray(t_eval[:n_pre])
+        np.testing.assert_allclose(ys[0, :n_pre, 0], 10.0 - 0.5 * G * te**2, atol=1e-4)
+
+    def test_terminal_beats_success_on_final_step(self):
+        """An event inside the very step that reaches t_end still wins."""
+        y0 = jnp.asarray([[10.0, 0.0]], jnp.float32)
+        t_hit = hit_time(10.0, 0.0)
+        sol = solve_ivp(ball, y0, None, t_start=0.0, t_end=t_hit + 1e-3,
+                        events=GROUND, rtol=1e-6, atol=1e-9)
+        assert np.asarray(sol.status)[0] == Status.EVENT.value
+        np.testing.assert_allclose(np.asarray(sol.event_t)[0, 0], t_hit, rtol=1e-5)
+
+    def test_backward_time_event(self):
+        """Integrating the fall backwards from the ground state recovers the
+        time the ball passed half height on the way down."""
+        t_hit = hit_time(10.0, 0.0)
+        y_end = jnp.asarray([[0.0, -G * t_hit]], jnp.float32)
+        half = Event(lambda t, y, args: y[0] - 5.0, terminal=True)
+        sol = solve_ivp(ball, y_end, None, t_start=t_hit, t_end=-1.0,
+                        events=half, rtol=1e-6, atol=1e-9)
+        assert np.asarray(sol.status)[0] == Status.EVENT.value
+        # h(t) = 10 - G t^2 / 2 crosses 5 at t = sqrt(10/G)
+        np.testing.assert_allclose(np.asarray(sol.event_t)[0, 0],
+                                   np.sqrt(10.0 / G), rtol=1e-4)
+
+
+class TestEventSemantics:
+    def test_direction_filtering(self):
+        """y[0] = sin(t + 0.5) falls through zero at pi - 0.5 and rises at
+        2pi - 0.5 (the phase offset keeps the condition nonzero at t_start,
+        which would otherwise fire immediately -- scipy semantics)."""
+        def rot(t, y, args):
+            return jnp.stack((y[..., 1], -y[..., 0]), axis=-1)
+
+        y0 = jnp.asarray([[np.sin(0.5), np.cos(0.5)]], jnp.float32)
+        kw = dict(t_start=0.0, t_end=8.0, rtol=1e-7, atol=1e-9)
+        for direction, expect in [(-1.0, np.pi - 0.5), (1.0, 2.0 * np.pi - 0.5),
+                                  (0.0, np.pi - 0.5)]:
+            ev = Event(lambda t, y, args: y[0], terminal=True, direction=direction)
+            sol = solve_ivp(rot, y0, None, events=ev, **kw)
+            np.testing.assert_allclose(np.asarray(sol.event_t)[0, 0], expect, rtol=1e-4)
+
+    def test_non_terminal_records_first_crossing_and_continues(self):
+        y0 = jnp.asarray([[10.0, 0.0]], jnp.float32)
+        ev = Event(lambda t, y, args: y[1] + 5.0, terminal=False, direction=-1.0)
+        sol = solve_ivp(ball, y0, None, t_start=0.0, t_end=1.0, events=ev,
+                        rtol=1e-6, atol=1e-9)
+        assert np.asarray(sol.status)[0] == Status.SUCCESS.value
+        np.testing.assert_allclose(np.asarray(sol.ts)[0], 1.0)
+        np.testing.assert_allclose(np.asarray(sol.event_t)[0, 0], 5.0 / G, rtol=1e-5)
+
+    def test_crossings_after_terminal_event_are_discarded(self):
+        """A non-terminal crossing localized AFTER the earliest terminal event
+        time lies beyond the instance's trajectory and must not be recorded."""
+        y0 = jnp.asarray([[10.0, 0.0]], jnp.float32)
+        # velocity crosses -15 at t ~ 1.53 > ground hit ~ 1.43; with loose
+        # tolerances both sign changes can land inside one accepted step
+        late = Event(lambda t, y, args: y[1] + 15.0, terminal=False, direction=-1.0)
+        sol = solve_ivp(ball, y0, None, t_start=0.0, t_end=5.0,
+                        events=[GROUND, late], rtol=1e-3, atol=1e-6)
+        mask = np.asarray(sol.event_mask)[0]
+        assert bool(mask[0]) and not bool(mask[1])
+        assert np.asarray(sol.stats["n_events"])[0] == 1
+
+    def test_multiple_terminal_events_earliest_wins(self):
+        fast = Event(lambda t, y, args: y[1] + 5.0, terminal=True, direction=-1.0)
+        sol = solve_ivp(ball, jnp.asarray([[10.0, 0.0]], jnp.float32), None,
+                        t_start=0.0, t_end=5.0, events=[GROUND, fast],
+                        rtol=1e-6, atol=1e-9)
+        # velocity hits -5 at t = 5/G ~ 0.51, long before the ground at 1.43
+        np.testing.assert_allclose(np.asarray(sol.ts)[0], 5.0 / G, rtol=1e-5)
+        mask = np.asarray(sol.event_mask)[0]
+        assert not bool(mask[0]) and bool(mask[1])
+
+    def test_batched_and_no_args_conditions(self):
+        evb = Event(lambda t, y: y[:, 0], terminal=True, direction=-1.0,
+                    batched=True, with_args=False)
+        sol = solve_ivp(ball, jnp.asarray([[10.0, 0.0]], jnp.float32), None,
+                        t_start=0.0, t_end=5.0, events=evb, rtol=1e-6, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(sol.event_t)[0, 0],
+                                   hit_time(10.0, 0.0), rtol=1e-5)
+
+    def test_condition_args_flow_through(self):
+        threshold = 4.0
+        ev = Event(lambda t, y, args: y[0] - args, terminal=True, direction=-1.0)
+        sol = solve_ivp(ball, jnp.asarray([[10.0, 0.0]], jnp.float32), None,
+                        t_start=0.0, t_end=5.0, events=ev, args=threshold,
+                        rtol=1e-6, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(sol.event_y)[0, 0, 0], threshold,
+                                   atol=1e-4)
+
+
+class TestEventDrivers:
+    def test_scan_driver_matches_while_driver(self):
+        y0 = jnp.asarray([[10.0, 0.0], [5.0, 2.0]], jnp.float32)
+        kw = dict(t_start=0.0, t_end=5.0, events=GROUND, rtol=1e-6, atol=1e-9)
+        a = solve_ivp(ball, y0, None, **kw)
+        s = solve_ivp_scan(ball, y0, None, max_steps=64, **kw)
+        np.testing.assert_allclose(np.asarray(a.event_t), np.asarray(s.event_t),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a.status), np.asarray(s.status))
+
+    def test_pytree_state_conditions_see_the_tree(self):
+        def dyn(t, y, args):  # per-instance PyTree dynamics
+            return {"h": y["v"], "v": jnp.full_like(y["v"], -G)}
+
+        y0 = {"h": jnp.asarray([[10.0]], jnp.float32),
+              "v": jnp.asarray([[0.0]], jnp.float32)}
+        ev = Event(lambda t, y, args: y["h"][0], terminal=True, direction=-1.0)
+        drv = AutoDiffAdjoint("tsit5", rtol=1e-6, atol=1e-9, events=ev)
+        sol = drv.solve(dyn, y0, None, t_start=0.0, t_end=5.0)
+        np.testing.assert_allclose(np.asarray(sol.event_t)[0, 0],
+                                   hit_time(10.0, 0.0), rtol=1e-5)
+        # event_y unravels to the caller's structure with an (b, E, ...) leaf
+        assert sol.event_y["h"].shape == (1, 1, 1)
+        np.testing.assert_allclose(np.asarray(sol.event_y["h"])[0, 0, 0], 0.0,
+                                   atol=1e-5)
+
+    def test_pytree_batched_condition_rejected(self):
+        ev = Event(lambda t, y, args: y, batched=True)
+        drv = AutoDiffAdjoint("tsit5", events=ev)
+        y0 = {"h": jnp.ones((1, 1))}
+        with pytest.raises(ValueError, match="batched event conditions"):
+            drv.solve(lambda t, y, args: y, y0, None, t_start=0.0, t_end=1.0)
+
+    def test_backsolve_adjoint_rejects_events(self):
+        with pytest.raises(ValueError, match="does not support events"):
+            BacksolveAdjoint("tsit5", events=GROUND)
+
+    def test_make_solver_triple_threads_events(self):
+        init, body, finish = make_solver(ball, method="dopri5", rtol=1e-6,
+                                         atol=1e-9, events=GROUND)
+        state, consts = init(jnp.asarray([[10.0, 0.0]], jnp.float32), None,
+                             0.0, 5.0, None, None)
+        state = jax.lax.while_loop(
+            lambda s: jnp.any(s.running) & (s.it < 1000),
+            lambda s: body(s, consts, None),
+            state,
+        )
+        sol = finish(state, consts)
+        assert np.asarray(sol.status)[0] == Status.EVENT.value
+        np.testing.assert_allclose(np.asarray(sol.event_t)[0, 0],
+                                   hit_time(10.0, 0.0), rtol=1e-5)
+
+    def test_event_termination_counts_as_success(self):
+        """scipy convention: stopping at a terminal event is the intended
+        outcome, so Solution.success includes Status.EVENT."""
+        y0 = jnp.asarray([[10.0, 0.0], [200.0, 0.0]], jnp.float32)
+        sol = solve_ivp(ball, y0, None, t_start=0.0, t_end=3.0, events=GROUND,
+                        rtol=1e-6, atol=1e-9)
+        assert list(np.asarray(sol.status)) == [Status.EVENT.value,
+                                                Status.SUCCESS.value]
+        assert np.all(np.asarray(sol.success))
+
+    def test_solution_event_fields_default_none(self):
+        sol = solve_ivp(ball, jnp.asarray([[10.0, 0.0]], jnp.float32), None,
+                        t_start=0.0, t_end=0.5)
+        assert sol.event_t is None and sol.event_y is None and sol.event_mask is None
+        assert "n_events" not in sol.stats
+
+
+class TestFinishReportsReachedTime:
+    """Regression for Solution.ts when t_eval is None: the per-instance time
+    actually reached, not a blanket t_end."""
+
+    def test_early_stop_reports_last_accepted_time(self):
+        def blowup(t, y, args):  # finite-time blowup at t = 1/y0
+            return y * y
+
+        y0 = jnp.asarray([[1.0], [0.1]], jnp.float32)
+        sol = solve_ivp(blowup, y0, None, t_start=0.0, t_end=2.0, max_steps=5000)
+        status = np.asarray(sol.status)
+        ts = np.asarray(sol.ts)
+        # instance 0 explodes at t = 1 and must stop strictly before t_end
+        assert status[0] in (Status.INFINITE.value, Status.REACHED_DT_MIN.value)
+        assert 0.0 < ts[0] <= 1.01
+        # instance 1 is fine through t_end
+        assert status[1] == Status.SUCCESS.value and ts[1] == 2.0
+
+    def test_event_stop_reports_event_time(self):
+        sol = solve_ivp(ball, jnp.asarray([[10.0, 0.0]], jnp.float32), None,
+                        t_start=0.0, t_end=5.0, events=GROUND, rtol=1e-6, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(sol.ts)[0],
+                                   np.asarray(sol.event_t)[0, 0])
+
+    def test_max_steps_reports_partial_progress(self):
+        def vdp(t, y, mu):
+            x, xd = y[..., 0], y[..., 1]
+            return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
+
+        sol = solve_ivp(vdp, jnp.asarray([[2.0, 0.0]], jnp.float32), None,
+                        t_start=0.0, t_end=100.0, args=50.0, max_steps=10)
+        assert np.asarray(sol.status)[0] == Status.REACHED_MAX_STEPS.value
+        assert 0.0 < float(np.asarray(sol.ts)[0]) < 100.0

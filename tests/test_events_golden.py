@@ -1,0 +1,114 @@
+"""Golden tests against scipy.integrate.solve_ivp at matched tolerances:
+terminal event times and dense output on the bouncing ball and a
+threshold-crossing exponential, plus the analytic values both solvers chase.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Event, Status, solve_ivp
+
+scipy_integrate = pytest.importorskip("scipy.integrate")
+
+G = 9.81
+RTOL, ATOL = 1e-6, 1e-9
+
+
+def ball(t, y, args):
+    return jnp.stack((y[..., 1], jnp.full_like(y[..., 1], -G)), axis=-1)
+
+
+def ball_np(t, y):
+    return [y[1], -G]
+
+
+def exp_growth(t, y, a):
+    return a * y
+
+
+class TestBouncingBallGolden:
+    H0 = np.array([10.0, 5.0, 20.0])
+    V0 = np.array([0.0, 2.0, -1.0])
+
+    def _ours(self):
+        y0 = jnp.asarray(np.stack([self.H0, self.V0], 1), jnp.float32)
+        ev = Event(lambda t, y, args: y[0], terminal=True, direction=-1.0)
+        return solve_ivp(ball, y0, None, t_start=0.0, t_end=5.0, events=ev,
+                         rtol=RTOL, atol=ATOL)
+
+    def _scipy_hit(self, h0, v0):
+        ground = lambda t, y: y[0]
+        ground.terminal = True
+        ground.direction = -1.0
+        res = scipy_integrate.solve_ivp(ball_np, (0.0, 5.0), [h0, v0],
+                                        events=ground, rtol=RTOL, atol=ATOL)
+        return res.t_events[0][0]
+
+    def test_terminal_times_match_scipy_and_analytic(self):
+        sol = self._ours()
+        t_ev = np.asarray(sol.event_t)[:, 0]
+        analytic = (self.V0 + np.sqrt(self.V0**2 + 2.0 * G * self.H0)) / G
+        scipy_t = np.array([self._scipy_hit(h, v) for h, v in zip(self.H0, self.V0)])
+        # acceptance bar: within 10*rtol of the analytic value, per instance
+        np.testing.assert_allclose(t_ev, analytic, rtol=10 * RTOL)
+        np.testing.assert_allclose(t_ev, scipy_t, rtol=10 * RTOL)
+        assert np.all(np.asarray(sol.status) == Status.EVENT.value)
+
+    def test_dense_output_matches_scipy(self):
+        t_eval = np.linspace(0.0, 1.2, 25)  # before every instance's impact
+        y0 = jnp.asarray(np.stack([self.H0, self.V0], 1), jnp.float32)
+        ours = solve_ivp(ball, y0, jnp.asarray(t_eval, jnp.float32),
+                         rtol=RTOL, atol=ATOL)
+        for i, (h0, v0) in enumerate(zip(self.H0, self.V0)):
+            res = scipy_integrate.solve_ivp(ball_np, (0.0, 1.2), [h0, v0],
+                                            t_eval=t_eval, dense_output=True,
+                                            rtol=RTOL, atol=ATOL)
+            np.testing.assert_allclose(np.asarray(ours.ys)[i], res.y.T,
+                                       rtol=1e-4, atol=1e-4)
+
+
+class TestThresholdExponentialGolden:
+    A = 0.9
+    Y0 = np.array([0.5, 1.0, 2.0])
+    THRESHOLD = 6.0
+
+    def _event(self):
+        return Event(lambda t, y, args: y[0] - self.THRESHOLD,
+                     terminal=True, direction=1.0)
+
+    def test_terminal_times_match_scipy_and_analytic(self):
+        y0 = jnp.asarray(self.Y0[:, None], jnp.float32)
+        sol = solve_ivp(exp_growth, y0, None, t_start=0.0, t_end=6.0,
+                        events=self._event(), args=self.A, rtol=RTOL, atol=ATOL)
+        t_ev = np.asarray(sol.event_t)[:, 0]
+        analytic = np.log(self.THRESHOLD / self.Y0) / self.A
+
+        cross = lambda t, y: y[0] - self.THRESHOLD
+        cross.terminal = True
+        cross.direction = 1.0
+        scipy_t = []
+        for v in self.Y0:
+            res = scipy_integrate.solve_ivp(lambda t, y: [self.A * y[0]],
+                                            (0.0, 6.0), [v], events=cross,
+                                            rtol=RTOL, atol=ATOL)
+            scipy_t.append(res.t_events[0][0])
+        np.testing.assert_allclose(t_ev, analytic, rtol=10 * RTOL)
+        np.testing.assert_allclose(t_ev, np.asarray(scipy_t), rtol=10 * RTOL)
+        # the recorded event state sits on the threshold
+        np.testing.assert_allclose(np.asarray(sol.event_y)[:, 0, 0],
+                                   self.THRESHOLD, rtol=1e-5)
+
+    def test_non_terminal_matches_analytic_with_full_horizon(self):
+        y0 = jnp.asarray(self.Y0[:, None], jnp.float32)
+        ev = Event(lambda t, y, args: y[0] - self.THRESHOLD, terminal=False,
+                   direction=1.0)
+        sol = solve_ivp(exp_growth, y0, None, t_start=0.0, t_end=6.0,
+                        events=ev, args=self.A, rtol=RTOL, atol=ATOL)
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
+        np.testing.assert_allclose(np.asarray(sol.event_t)[:, 0],
+                                   np.log(self.THRESHOLD / self.Y0) / self.A,
+                                   rtol=10 * RTOL)
+        # final states ran through to t_end regardless of the marker event
+        np.testing.assert_allclose(np.asarray(sol.ys)[:, 0],
+                                   self.Y0 * np.exp(self.A * 6.0), rtol=1e-4)

@@ -8,11 +8,17 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Status, solve_ivp
+from repro.core import Event, Status, solve_ivp
 
 
 def decay(t, y, a):
     return -a * y
+
+
+def vdp_mu(t, y, mu):
+    """Van der Pol with a per-instance (b,) stiffness argument."""
+    x, xd = y[..., 0], y[..., 1]
+    return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
 
 
 class TestLinearInvariants:
@@ -82,3 +88,77 @@ class TestBatchInvariants:
         y0 = jnp.asarray(rng.uniform(-1, 1, (3, 2)), jnp.float32)
         sol = solve_ivp(decay, y0, None, t_start=0.0, t_end=1.0, args=1.0)
         assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
+
+
+class TestBatchMatchesSoloSolves:
+    """The paper's headline property, adversarially: batching, shuffling and
+    padding a batch must not change any instance's solution."""
+
+    @settings(max_examples=5, deadline=None)
+    @given(perm_seed=st.integers(0, 2**30), mu_lo=st.floats(0.1, 2.0))
+    def test_shuffled_mixed_stiffness_batch_matches_solo(self, perm_seed, mu_lo):
+        """A shuffled batch mixing stiff and non-stiff VdP instances (solved
+        implicitly) reproduces each instance's solo solve: per-instance
+        Jacobians, Newton masks and controller state never leak across
+        the batch."""
+        rng = np.random.default_rng(perm_seed)
+        mu = np.array([mu_lo, 5.0, 50.0, 200.0])[rng.permutation(4)]
+        y0 = np.tile(np.array([[2.0, 0.0]]), (4, 1)) + rng.uniform(-0.1, 0.1, (4, 2))
+        kw = dict(t_start=0.0, t_end=3.0, method="kvaerno5", rtol=1e-5,
+                  atol=1e-7, max_steps=5000)
+        batch = solve_ivp(vdp_mu, jnp.asarray(y0, jnp.float32), None,
+                          args=jnp.asarray(mu, jnp.float32), **kw)
+        assert np.all(np.asarray(batch.status) == Status.SUCCESS.value)
+        for i in range(4):
+            solo = solve_ivp(vdp_mu, jnp.asarray(y0[i:i + 1], jnp.float32), None,
+                             args=jnp.asarray(mu[i:i + 1], jnp.float32), **kw)
+            np.testing.assert_allclose(np.asarray(batch.ys)[i], np.asarray(solo.ys)[0],
+                                       rtol=1e-4, atol=1e-5)
+            assert int(np.asarray(batch.stats["n_steps"])[i]) == int(
+                np.asarray(solo.stats["n_steps"])[0]
+            )
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**30), pad=st.integers(1, 4))
+    def test_padding_the_batch_leaves_instances_unchanged(self, seed, pad):
+        rng = np.random.default_rng(seed)
+        y0 = rng.uniform(0.5, 2.0, (3, 2))
+        y_pad = np.concatenate([y0, rng.uniform(0.5, 2.0, (pad, 2))])
+        kw = dict(t_start=0.0, t_end=2.0, args=0.8, rtol=1e-6, atol=1e-8)
+        a = solve_ivp(decay, jnp.asarray(y0, jnp.float32), None, **kw)
+        b = solve_ivp(decay, jnp.asarray(y_pad, jnp.float32), None, **kw)
+        np.testing.assert_allclose(np.asarray(b.ys)[:3], np.asarray(a.ys),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(b.stats["n_steps"])[:3],
+                                      np.asarray(a.stats["n_steps"]))
+
+
+class TestEventInvariants:
+    @settings(max_examples=8, deadline=None)
+    @given(perm_seed=st.integers(0, 2**30))
+    def test_event_times_permutation_invariant(self, perm_seed):
+        """Localized event times follow a batch permutation exactly: event
+        detection and bisection never mix instances."""
+        g = 9.81
+
+        def ball(t, y, args):
+            return jnp.stack((y[..., 1], jnp.full_like(y[..., 1], -g)), axis=-1)
+
+        rng = np.random.default_rng(0)
+        h0 = rng.uniform(2.0, 30.0, 6)
+        v0 = rng.uniform(-2.0, 3.0, 6)
+        y0 = jnp.asarray(np.stack([h0, v0], 1), jnp.float32)
+        ev = Event(lambda t, y, args: y[0], terminal=True, direction=-1.0)
+        perm = np.random.default_rng(perm_seed).permutation(6)
+        kw = dict(t_start=0.0, t_end=10.0, events=ev, rtol=1e-6, atol=1e-9)
+        s1 = solve_ivp(ball, y0, None, **kw)
+        s2 = solve_ivp(ball, y0[perm], None, **kw)
+        assert np.all(np.asarray(s1.status) == Status.EVENT.value)
+        np.testing.assert_allclose(np.asarray(s2.event_t),
+                                   np.asarray(s1.event_t)[perm], rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(s2.event_mask),
+                                      np.asarray(s1.event_mask)[perm])
+        # and every localized time matches the analytic impact time
+        analytic = (v0 + np.sqrt(v0**2 + 2 * g * h0)) / g
+        np.testing.assert_allclose(np.asarray(s1.event_t)[:, 0], analytic,
+                                   rtol=1e-5)
