@@ -18,7 +18,7 @@ def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="?", default="all",
                         choices=["all", "table3", "table4", "table5", "fig1", "fig2",
-                                 "stiff", "events"])
+                                 "stiff", "events", "dispatch"])
     parser.add_argument("--json", nargs="?", const="BENCH_solver.json", default=None,
                         metavar="PATH", help="also write rows to a JSON file")
     opts = parser.parse_args()
@@ -49,6 +49,13 @@ def main() -> None:
         from . import events_bench
 
         suites.append(("events", events_bench.rows))
+    if which == "dispatch":
+        # Not part of "all": the eager-retrace baseline is deliberately slow
+        # (it re-traces the whole loop program every call).  CI runs it via
+        # ``python -m benchmarks.dispatch_bench --json``.
+        from . import dispatch_bench
+
+        suites.append(("dispatch", dispatch_bench.rows))
     if which == "stiff":
         # Not part of "all": the explicit-solver baselines grind at their
         # stability limit by design (200k-step budgets).  Run explicitly, or

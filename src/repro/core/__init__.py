@@ -10,6 +10,7 @@ Two API levels:
     contribute per-instance accumulators to the solver's statistics registry.
 """
 
+from .compiled import CompiledSolve, CompiledSolver, sharded_solve
 from .controller import (
     FixedController,
     PIDController,
@@ -20,7 +21,7 @@ from .controller import (
 from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint
 from .events import Event, EventState
 from .loop import make_solver, solve_ivp, solve_ivp_scan
-from .newton import NewtonResult, newton_solve
+from .newton import NewtonConfig, NewtonResult, newton_solve
 from .solution import Solution, Status
 from .step import LoopState, StepContext, StepFunction
 from .stepper import (
@@ -38,9 +39,13 @@ from .terms import ODETerm, RaveledState, as_term, ravel_state, ravel_term
 
 __all__ = [
     "AbstractStepper",
+    "CompiledSolve",
+    "CompiledSolver",
+    "sharded_solve",
     "DiagonallyImplicitRK",
     "DIRKCarry",
     "ExplicitRK",
+    "NewtonConfig",
     "NewtonResult",
     "newton_solve",
     "FixedController",

@@ -1,0 +1,481 @@
+"""Zero-retrace compiled solving: the AOT front end and multi-device sharding.
+
+Every ``AutoDiffAdjoint.solve`` call traces the full ``lax.while_loop``
+program from scratch unless the caller wraps it in ``jax.jit`` themselves --
+and even then, Python-side dispatch re-validates the closure every call.  In
+the small-model serving regime the paper's per-step numbers target (Sec. 4),
+that dispatch overhead dominates the actual integration.  This module fixes
+it with the static/dynamic split the component stack now guarantees:
+
+``CompiledSolver``
+    Wraps a driver.  ``solve(...)`` looks up an LRU cache keyed on the
+    driver's *static config* (hashable treedef aux) plus the shapes/dtypes of
+    every dynamic argument; on a miss it AOT-compiles the solve program once
+    (``jax.jit(...).lower(...).compile()`` with ``donate_argnums`` on ``y0``)
+    and thereafter dispatches straight to the cached executable -- repeated
+    same-shaped solves perform **zero retraces** and zero Python tracing work.
+    ``compile(...)`` exposes the same machinery ahead of time: pass
+    ``jax.ShapeDtypeStruct`` specs and get a callable handle back before the
+    first request arrives.
+
+``sharded_solve``
+    The paper's batch parallelism extended across chips: instances are
+    independent, so the batch axis shards embarrassingly across a device mesh
+    via ``shard_map`` -- each device runs the full per-instance adaptive loop
+    on its shard, with its own termination reduction (no cross-device sync
+    inside the loop, the multi-device analogue of torchode's no-host-sync
+    rule).  Results match the single-device compiled program exactly.
+
+What is static vs dynamic (the retrace contract):
+
+* static -- retrace on change: the vector field (by ``is`` identity: reuse
+  the function object), stepper/tableau, controller coefficients, event
+  specs, ``dense``/``dense_window``/``max_steps``, and every *shape/dtype*.
+* dynamic -- free to vary per call: ``y0`` values, ``t_eval``/``t_start``/
+  ``t_end`` values, ``dt0``, ``args`` leaves, and the tolerances
+  ``rtol``/``atol`` (including per-instance vectors).
+
+Donation caveat: XLA can only reuse a donated buffer when some *output* has
+the same shape/dtype, which for a solve means the final-state regime
+(``t_eval=None``: ``ys`` is ``(b, f)`` like ``y0``).  The default
+``donate="auto"`` therefore donates ``y0`` exactly when ``t_eval is None``
+and keeps it alive otherwise (avoiding XLA's "donated buffers were not
+usable" warning on dense-output solves, where donation buys nothing).  When
+donation is active the executable *consumes* the ``y0`` buffers -- reusing
+the same array for a later call raises "buffer has been deleted or donated".
+Serving loops that construct a fresh ``y0`` per request (the intended
+pattern) never notice; set ``donate=False`` to keep caller buffers alive
+unconditionally.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .drivers import AutoDiffAdjoint, BacksolveAdjoint, _Driver
+from .solution import Solution
+from .static import freeze, frozen_setattr
+from .stepper import AbstractStepper
+from .terms import ODETerm
+
+
+def _spec(x) -> jax.ShapeDtypeStruct:
+    """Normalize a concrete array (or an existing spec) to a ShapeDtypeStruct."""
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    x = jnp.asarray(x) if not hasattr(x, "shape") else x
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _leaf_key(x):
+    """Hashable shape/dtype fingerprint of one dynamic leaf.
+
+    This is the per-call hot path, so it avoids ``jnp.asarray``/tree machinery
+    for the common cases.  Host scalars key by Python type -- jit assigns them
+    weak dtypes, so they must not share an entry with committed arrays."""
+    if x is None:
+        return None
+    if isinstance(x, (jax.Array, jax.ShapeDtypeStruct, np.ndarray, np.generic)):
+        return (tuple(x.shape), str(x.dtype), bool(getattr(x, "weak_type", False)))
+    if isinstance(x, (bool, int, float, complex)):
+        return type(x).__name__
+    return None  # pytree container: caller flattens
+
+
+def _tree_key(tree) -> tuple:
+    """Hashable (structure, avals) fingerprint of a dynamic argument pytree."""
+    k = _leaf_key(tree)
+    if k is not None or tree is None:
+        return k
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple(_leaf_key(x) for x in leaves))
+
+
+class CacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    currsize: int
+    maxsize: int
+
+
+def _f_key(f):
+    """Cache identity of the dynamics: ODETerms by value, bare callables by
+    object identity (cache entries close over ``f``, keeping it alive, so an
+    id can never be recycled while its entry exists)."""
+    return f if isinstance(f, ODETerm) else (type(f), id(f))
+
+
+class _KeyedLRU:
+    """The one keyed-LRU implementation behind both front-end caches
+    (``CompiledSolver`` and ``sharded_solve``): a fix to keying or eviction
+    applies to both or neither."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self.data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        entry = self.data.get(key)
+        if entry is not None:
+            self.hits += 1
+            self.data.move_to_end(key)
+        else:
+            self.misses += 1
+        return entry
+
+    def put(self, key, entry) -> None:
+        self.data[key] = entry
+        while len(self.data) > self.maxsize:
+            self.data.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def clear(self) -> None:
+        self.data.clear()
+
+
+class _CacheEntry:
+    """One (static config, shapes) point of the solve cache.
+
+    ``jitted`` is the jit-wrapped solve program: it traces exactly once (on
+    the first call or on ``lower``) and later calls dispatch through jit's
+    C++ fast path -- measurably faster than the Python call path of an
+    ``XlaExecutable``.  ``executable`` is the AOT-compiled artifact, built
+    lazily by ``CompiledSolver.compile``; once it exists, ``solve`` routes
+    through it so an AOT-then-solve sequence never traces a second time.
+    """
+
+    __slots__ = ("jitted", "executable", "driver_leaves", "tol_keys")
+
+    def __init__(self, jitted, driver_leaves):
+        self.jitted = jitted
+        self.executable = None
+        self.driver_leaves = driver_leaves
+        self.tol_keys = tuple(_leaf_key(x) for x in driver_leaves)
+
+    def call(self, y0, t_eval, t_start, t_end, dt0, args, rtol, atol) -> Solution:
+        tol_leaves = self.driver_leaves
+        fn = self.executable if self.executable is not None else self.jitted
+        if rtol is not None or atol is not None:
+            tol_leaves = list(tol_leaves)
+            if rtol is not None:
+                tol_leaves[0] = rtol
+            if atol is not None:
+                tol_leaves[1] = atol
+            # An override whose shape/dtype differs from the compiled
+            # tolerance leaves cannot go through the AOT executable (strict
+            # avals) -- route it through jit, which compiles the variant
+            # program on first use as documented.
+            if self.executable is not None and (
+                _leaf_key(tol_leaves[0]) != self.tol_keys[0]
+                or _leaf_key(tol_leaves[1]) != self.tol_keys[1]
+            ):
+                fn = self.jitted
+        return fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
+
+
+class CompiledSolve:
+    """A fully AOT-compiled solve program for one (static config, shapes)
+    point.  Calling it never traces: the arguments' shapes/dtypes must match
+    the specs it was compiled for (a mismatch raises instead of silently
+    recompiling -- that is the point)."""
+
+    def __init__(self, entry: _CacheEntry):
+        self._entry = entry
+
+    def __call__(
+        self,
+        y0,
+        t_eval=None,
+        *,
+        t_start=None,
+        t_end=None,
+        dt0=None,
+        args: Any = None,
+        rtol=None,
+        atol=None,
+    ) -> Solution:
+        return self._entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+
+    def as_text(self) -> str:
+        """The compiled program's HLO (donation shows up as input/output
+        aliasing on the ``y0`` parameter)."""
+        return self._entry.executable.as_text()
+
+
+class CompiledSolver:
+    """Zero-retrace front end over a loop driver.
+
+    Example (serving loop)::
+
+        solver = CompiledSolver(AutoDiffAdjoint(Stepper("dopri5")))
+        for batch in requests:                       # same (b, f) shapes
+            sol = solver.solve(f, batch.y0, t_eval)  # traces exactly once
+
+    ``solve`` arguments and semantics match ``AutoDiffAdjoint.solve``; add
+    per-call ``rtol``/``atol`` overrides (dynamic -- they never retrace when
+    they keep the driver tolerances' shape/dtype; an override with a *new*
+    shape, e.g. a per-instance vector over a scalar default, compiles one
+    variant program on first use).  The cache key is ``(driver static config,
+    f identity, shapes/dtypes of every dynamic argument)``; see the module
+    docstring for the full static/dynamic contract and the ``donate`` caveat.
+    """
+
+    __setattr__ = frozen_setattr
+
+    def __init__(
+        self,
+        solver: _Driver | AbstractStepper | str | None = None,
+        *,
+        donate: bool | str = "auto",
+        cache_size: int = 128,
+        **driver_kw,
+    ):
+        if donate not in (True, False, "auto"):
+            raise ValueError(f"donate must be True, False or 'auto', got {donate!r}")
+        if isinstance(solver, BacksolveAdjoint):
+            raise TypeError(
+                "CompiledSolver does not support BacksolveAdjoint: its "
+                "custom-VJP solve returns only the final state and takes no "
+                "t_eval. Wrap BacksolveAdjoint.solve in jax.jit directly, or "
+                "use AutoDiffAdjoint/ScanAdjoint here."
+            )
+        if isinstance(solver, _Driver):
+            if driver_kw:
+                raise TypeError("pass driver options to the driver, not CompiledSolver")
+            driver = solver
+        else:
+            driver = AutoDiffAdjoint(AbstractStepper.coerce(solver), **driver_kw)
+        self.driver = driver
+        self.donate = donate
+        self.cache_size = cache_size
+        self._cache = _KeyedLRU(cache_size)
+        # The driver is frozen config: flatten it once and reuse on every call.
+        leaves, treedef = jax.tree_util.tree_flatten(driver)
+        self._driver_leaves = leaves
+        self._driver_def = treedef
+        self._driver_key = (treedef, tuple(_leaf_key(x) for x in leaves))
+        freeze(self)
+
+    def cache_info(self) -> CacheInfo:
+        c = self._cache
+        return CacheInfo(c.hits, c.misses, len(c), self.cache_size)
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+
+    def _key(self, f, y0, t_eval, t_start, t_end, dt0, args) -> tuple:
+        return (
+            self._driver_key,
+            _f_key(f),
+            _tree_key(y0),
+            _tree_key(t_eval),
+            _tree_key(t_start),
+            _tree_key(t_end),
+            _tree_key(dt0),
+            _tree_key(args),
+        )
+
+    def _donate(self, t_eval) -> bool:
+        """Resolve the donation policy: 'auto' donates y0 exactly when the
+        solve tracks only the final state, the one case where an output buffer
+        (ys, shaped like y0) exists for XLA to alias into."""
+        if self.donate == "auto":
+            return t_eval is None
+        return self.donate
+
+    def _build(self, f, t_eval) -> _CacheEntry:
+        """Build the jit-wrapped solve program for one cache point."""
+        driver_def = self._driver_def
+
+        def fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args):
+            drv = jax.tree_util.tree_unflatten(driver_def, tol_leaves)
+            return drv.solve(
+                f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args
+            )
+
+        jitted = jax.jit(fn, donate_argnums=(0,) if self._donate(t_eval) else ())
+        return _CacheEntry(jitted, self._driver_leaves)
+
+    def _lookup(self, f, y0, t_eval, t_start, t_end, dt0, args) -> _CacheEntry:
+        key = self._key(f, y0, t_eval, t_start, t_end, dt0, args)
+        entry = self._cache.get(key)
+        if entry is None:
+            entry = self._build(f, t_eval)
+            self._cache.put(key, entry)
+        return entry
+
+    def compile(
+        self,
+        f,
+        y0,
+        t_eval=None,
+        *,
+        t_start=None,
+        t_end=None,
+        dt0=None,
+        args: Any = None,
+    ) -> CompiledSolve:
+        """AOT-compile for the given argument specs (``jax.ShapeDtypeStruct``
+        or example arrays) and return the callable executable handle.  The
+        entry is also installed in the cache, so a later ``solve`` with
+        matching shapes dispatches to the same executable without ever
+        tracing again."""
+        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args)
+        if entry.executable is None:
+            abstract = jax.tree_util.tree_map(
+                _spec, (y0, self._driver_leaves, t_eval, t_start, t_end, dt0, args)
+            )
+            entry.executable = entry.jitted.lower(*abstract).compile()
+        return CompiledSolve(entry)
+
+    def solve(
+        self,
+        f,
+        y0,
+        t_eval=None,
+        *,
+        t_start=None,
+        t_end=None,
+        dt0=None,
+        args: Any = None,
+        rtol=None,
+        atol=None,
+    ) -> Solution:
+        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args)
+        return entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+
+
+# --------------------------------------------------------------------------
+# Multi-device sharding: the batch axis across a mesh.
+
+_SHARDED_CACHE = _KeyedLRU(64)
+
+
+def _batch_spec(x, batch: int, axis_name: str):
+    """Shard any leaf whose leading dim is the batch axis; replicate the rest."""
+    from jax.sharding import PartitionSpec as P
+
+    s = _spec(x)
+    if len(s.shape) >= 1 and s.shape[0] == batch:
+        return P(axis_name)
+    return P()
+
+
+def sharded_solve(
+    mesh,
+    f,
+    y0,
+    t_eval=None,
+    *,
+    t_start=None,
+    t_end=None,
+    dt0=None,
+    args: Any = None,
+    solver: _Driver | None = None,
+    method: AbstractStepper | str | None = None,
+    rtol=None,
+    atol=None,
+    axis_name: str = "data",
+    **solver_kw,
+) -> Solution:
+    """Solve a batch of IVPs with the batch axis sharded across ``mesh``.
+
+    Instances are independent by the solver's core contract, so this is
+    embarrassingly parallel: each device runs the complete adaptive loop on
+    its ``b / n_devices`` shard, terminating on its *local* all-done
+    reduction (a device whose shard finishes early goes idle instead of
+    lock-stepping with the stragglers -- strictly less overhanging work than
+    the single-device program).  For explicit steppers, per-instance results,
+    statuses and stats are bitwise identical to the single-device ``jax.jit``
+    program.  Two caveats: whole-batch overhang accounting (``n_f_evals``)
+    can differ, because the dynamics stop being evaluated for a shard as soon
+    as that shard drains; and the implicit steppers' batched linear algebra
+    compiles to batch-size-dependent XLA fusions, so their agreement is at
+    rounding level rather than bitwise.
+
+    Sharding rule: ``y0`` leaves, ``(b,)``-shaped ``t_start``/``t_end``/
+    ``dt0``/tolerances, 2-D ``(b, n)`` ``t_eval`` and any ``args`` leaf whose
+    leading dim equals the batch size shard along ``axis_name``; everything
+    else is replicated (1-D ``t_eval`` is always replicated -- it is a shared
+    time grid, whatever its length).  The batch must divide evenly by the
+    mesh axis.
+
+    Pass a configured driver via ``solver=`` or let ``method``/``rtol``/
+    ``atol``/``solver_kw`` build an ``AutoDiffAdjoint``.  The shard-mapped
+    program is jitted and cached, so repeated same-shape calls do not retrace.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if solver is None:
+        solver = AutoDiffAdjoint(
+            AbstractStepper.coerce(method),
+            rtol=1e-3 if rtol is None else rtol,
+            atol=1e-6 if atol is None else atol,
+            **solver_kw,
+        )
+    elif method is not None or rtol is not None or atol is not None or solver_kw:
+        raise TypeError(
+            "pass solver options (method/rtol/atol/...) to the driver given "
+            "via solver=, not to sharded_solve"
+        )
+
+    # Commit every leaf to a device array: the sharding specs below are
+    # computed from concrete shapes, and host scalars must not split the key.
+    y0, t_eval, t_start, t_end, dt0, args = jax.tree_util.tree_map(
+        jnp.asarray, (y0, t_eval, t_start, t_end, dt0, args)
+    )
+    y0_leaves = jax.tree_util.tree_leaves(y0)
+    if not y0_leaves:
+        raise ValueError("y0 has no array leaves")
+    batch = y0_leaves[0].shape[0]
+    n_dev = mesh.shape[axis_name]
+    if batch % n_dev != 0:
+        raise ValueError(
+            f"batch {batch} does not divide evenly over mesh axis "
+            f"{axis_name!r} of size {n_dev}"
+        )
+
+    driver_leaves, driver_def = jax.tree_util.tree_flatten(solver)
+    inputs = (driver_leaves, y0, t_eval, t_start, t_end, dt0, args)
+
+    key = (
+        mesh, axis_name, driver_def, _f_key(f),
+        tuple(_tree_key(t) for t in inputs),
+    )
+    entry = _SHARDED_CACHE.get(key)
+    if entry is None:
+        def spec_for(tree):
+            if tree is t_eval and t_eval is not None and jnp.ndim(t_eval) == 1:
+                return P()  # shared time grid, even if its length equals the batch
+            return jax.tree_util.tree_map(
+                lambda x: _batch_spec(x, batch, axis_name), tree
+            )
+
+        in_specs = tuple(spec_for(tree) for tree in inputs)
+
+        def local(driver_leaves, y0, t_eval, t_start, t_end, dt0, args):
+            drv = jax.tree_util.tree_unflatten(driver_def, driver_leaves)
+            return drv.solve(
+                f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args
+            )
+
+        out_shape = jax.eval_shape(local, *inputs)
+        out_specs = jax.tree_util.tree_map(lambda _: P(axis_name), out_shape)
+        entry = jax.jit(
+            shard_map(
+                local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=False,
+            )
+        )
+        _SHARDED_CACHE.put(key, entry)
+    return entry(*inputs)

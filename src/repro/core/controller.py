@@ -22,6 +22,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .static import register_static
+
 
 class ControllerState(NamedTuple):
     # inverse error ratios of the previous two accepted steps (init 1.0)
@@ -40,12 +42,18 @@ class _ControllerStats:
         return {**stats, "n_accepted": stats["n_accepted"] + ctx.accept.astype(jnp.int32)}
 
 
+@register_static
 @dataclasses.dataclass(frozen=True)
 class PIDController(_ControllerStats):
     """General PID step controller; I/PI controllers are coefficient choices.
 
     Coefficients follow the convention of torchode / diffrax docs: they are
     divided by the controller order ``k`` internally.
+
+    A controller is static solver config -- a frozen, hashable coefficient
+    set, pytree-registered with zero leaves: its floats select the step-factor
+    *program*, so changing them retraces (per-instance tolerances are the
+    dynamic knob; see ``rtol``/``atol`` on the drivers).
     """
 
     pcoeff: float = 0.0
@@ -124,11 +132,15 @@ def pid_controller(**kw) -> PIDController:
     return PIDController(pcoeff=0.2, icoeff=0.3, dcoeff=0.1, **kw)
 
 
+@register_static
+@dataclasses.dataclass(frozen=True)
 class FixedController(_ControllerStats):
-    """Fixed-step 'controller': always accept, keep dt (euler/rk4 style)."""
+    """Fixed-step 'controller': always accept, keep dt (euler/rk4 style).
+    Frozen/hashable/static like ``PIDController`` (value-equal instances key
+    to the same compiled program)."""
 
-    dt_min = 0.0
-    dt_max = float("inf")
+    dt_min: float = 0.0
+    dt_max: float = float("inf")
 
     def init(self, batch: int, dtype) -> ControllerState:
         one = jnp.ones((batch,), dtype=dtype)

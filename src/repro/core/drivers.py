@@ -35,13 +35,24 @@ import jax.numpy as jnp
 
 from .events import Event, normalize_events
 from .solution import Solution
+from .static import freeze, frozen_setattr, register_config_pytree
 from .step import StepFunction
 from .stepper import AbstractStepper
 from .terms import ODETerm, as_term, ravel_state, ravel_term
 
 
 class _Driver:
-    """Shared construction + PyTree plumbing for the loop-based drivers."""
+    """Shared construction + PyTree plumbing for the loop-based drivers.
+
+    Drivers follow the same static/dynamic split as ``StepFunction``: frozen
+    after construction, pytree-registered with the tolerances as the only
+    leaves and the rest as hashable aux data.  A driver is therefore a valid
+    ``jax.jit`` argument, and value-equal drivers (same stepper, controller,
+    layout flags) key to the same compiled program -- the contract
+    ``CompiledSolver`` builds its zero-retrace cache on.
+    """
+
+    __setattr__ = frozen_setattr
 
     def __init__(
         self,
@@ -69,6 +80,7 @@ class _Driver:
         self.events = normalize_events(events)
         self.event_bisect_iters = event_bisect_iters
         self.extra_stats = tuple(extra_stats)
+        freeze(self)
 
     def _events_for(self, raveled) -> tuple[Event, ...]:
         """Events see the caller's state: for PyTree solves each per-instance
@@ -157,8 +169,8 @@ class ScanAdjoint(_Driver):
 
     def __init__(self, stepper=None, controller=None, *, max_steps: int = 256,
                  checkpoint_every: int = 0, **kw):
+        self.checkpoint_every = checkpoint_every  # before super() freezes
         super().__init__(stepper, controller, max_steps=max_steps, **kw)
-        self.checkpoint_every = checkpoint_every
 
     def solve(
         self,
@@ -192,8 +204,14 @@ class ScanAdjoint(_Driver):
         return self._finalize(step_fn.finish(state, consts), raveled)
 
 
+register_config_pytree(AutoDiffAdjoint, ("rtol", "atol"))
+register_config_pytree(ScanAdjoint, ("rtol", "atol"))
+
+
 class BacksolveAdjoint:
     """Adjoint-equation driver (optimize-then-discretize, O(1) memory).
+    Frozen and pytree-registered like the loop drivers (tolerances dynamic,
+    the rest static).
 
     Tracks only the final state; its VJP solves the augmented adjoint ODE
     backwards in time via ``core/adjoint.py``.  Returns the final state (an
@@ -202,6 +220,8 @@ class BacksolveAdjoint:
     output, so per-instance status/stats are unavailable here -- use
     ``adjoint_backsolve_problem`` to instrument the backward pass.
     """
+
+    __setattr__ = frozen_setattr
 
     def __init__(
         self,
@@ -232,6 +252,7 @@ class BacksolveAdjoint:
         self.atol = atol
         self.max_steps = max_steps
         self.mode = mode
+        freeze(self)
 
     def solve(self, f, y0, *, t_start, t_end, args: Any = None):
         from .adjoint import make_adjoint_solve  # deferred: adjoint imports loop
@@ -253,3 +274,6 @@ class BacksolveAdjoint:
         )
         ys = solve_fn(y0_flat, t_start, t_end, args)
         return raveled.unravel(ys) if raveled is not None else ys
+
+
+register_config_pytree(BacksolveAdjoint, ("rtol", "atol"))

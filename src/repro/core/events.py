@@ -47,11 +47,18 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from .static import register_static
 
 
+@register_static
 @dataclasses.dataclass(frozen=True)
 class Event:
     """A scalar zero-crossing condition on the solution.
+
+    An ``Event`` spec is static solver config: frozen, hashable (the
+    condition callable hashes by identity) and pytree-registered with zero
+    leaves so it crosses ``jax.jit`` boundaries unchanged.  Data the
+    condition needs at runtime flows through ``args``.
 
     ``batched=False`` (default): ``cond_fn(t, y, args) -> scalar`` is written
     for a single instance (scalar ``t``, ``(f,)`` -- or the user's PyTree --

@@ -13,6 +13,7 @@ new code should compose the components directly::
 
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 from .drivers import AutoDiffAdjoint, ScanAdjoint
@@ -40,9 +41,23 @@ def make_solver(
     event_bisect_iters: int = 30,
 ):
     """Build (init_fn, body_fn, finish_fn) shared by the while_loop and scan
-    drivers.  Compatibility shim over ``StepFunction``; ``max_steps`` is
-    accepted for signature stability but the iteration bound belongs to the
-    caller's loop."""
+    drivers.  Compatibility shim over ``StepFunction``.
+
+    ``max_steps`` is accepted for signature stability only: ``make_solver``
+    hands back the bare function triple and the *caller* owns the loop, so the
+    caller's loop bound is the only one that exists (compare
+    ``AutoDiffAdjoint(..., max_steps=...)``, where the driver owns the loop).
+    A non-default value would be silently ignored -- warn instead.
+    """
+    if max_steps != 10_000:
+        warnings.warn(
+            "make_solver ignores max_steps: it returns (init, step, finish) and "
+            "the iteration bound belongs to the caller's loop. Bound your own "
+            "while_loop/scan, or use solve_ivp / AutoDiffAdjoint(max_steps=...) "
+            "which own their loop.",
+            UserWarning,
+            stacklevel=2,
+        )
     del max_steps
     step_fn = StepFunction(
         as_term(f, batched=batched_term),

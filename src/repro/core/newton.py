@@ -19,12 +19,39 @@ they have ``ref`` and Pallas backends like every other solver hot spot.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from .static import register_static
+
+
+@register_static
+@dataclasses.dataclass(frozen=True)
+class NewtonConfig:
+    """The inner nonlinear solver's knobs as one hashable static-config
+    object: ``DiagonallyImplicitRK`` carries a ``NewtonConfig``, so the knobs
+    participate in the stepper's value hash (equal configs -> the same
+    compiled program) and cross ``jax.jit`` boundaries as compile-time
+    constants, which is what lets the iteration caps unroll into the traced
+    ``while_loop`` bound.
+
+    tol
+        Convergence threshold for the scaled RMS of the Newton update,
+        measured in the step's atol/rtol error units.
+    max_iters
+        Per-stage iteration cap; exhausting it marks the instance failed.
+    divergence_rate
+        Growth factor of the update norm between iterations that counts as
+        divergence.
+    """
+
+    tol: float = 1e-2
+    max_iters: int = 8
+    divergence_rate: float = 2.0
 
 
 class NewtonResult(NamedTuple):
@@ -54,6 +81,7 @@ def newton_solve(
     tol: float = 1e-2,
     max_iters: int = 8,
     divergence_rate: float = 2.0,
+    config: NewtonConfig | None = None,
 ) -> NewtonResult:
     """Solve ``k = eval_fn(k)`` per instance by masked chord-Newton iteration.
 
@@ -67,7 +95,11 @@ def newton_solve(
     ``divergence_rate`` between iterations -- deactivates the instance with
     ``diverged`` set; the stepper reports that through the controller's reject
     path rather than poisoning the whole batch.
+
+    A ``config`` bundle overrides the individual keyword knobs.
     """
+    if config is not None:
+        tol, max_iters, divergence_rate = config.tol, config.max_iters, config.divergence_rate
     b = k0.shape[0]
     inf = jnp.asarray(jnp.inf, k0.dtype)
 

@@ -1,0 +1,141 @@
+"""The static/dynamic split: solver components as hashable compile-time config.
+
+JAX separates every traced program into *static* structure (Python objects
+that select which program gets built; changing them retraces) and *dynamic*
+data (arrays that flow through a fixed program; changing them re-runs it).
+The solver stack draws that line explicitly:
+
+static
+    ``ODETerm`` (the vector-field callable), steppers and their tableaus
+    (coefficients are compile-time constants the kernels unroll), controllers
+    (filter coefficients select the step-factor program), ``Event`` specs and
+    layout choices (``dense``, ``dense_window``, ``max_steps``).
+dynamic
+    everything with a batch axis -- ``y0``, ``t_eval``/``t_start``/``t_end``,
+    ``args`` leaves, and the tolerances ``rtol``/``atol`` (scalars or
+    per-instance vectors; a tolerance change must never retrace).
+
+``register_static`` registers a class as a pytree with **zero leaves**: the
+object itself rides in the treedef as auxiliary data, so it can cross
+``jax.jit`` boundaries as an ordinary argument without ``static_argnums``
+bookkeeping -- JAX's tracing machinery hashes it into the compilation-cache
+key automatically.  That requires value-based ``__hash__``/``__eq__`` (two
+equal configs must hit the same executable) and immutability after
+construction (mutating an object that is already baked into a cached program
+would silently desynchronize config and executable) -- ``frozen_setattr``/
+``freeze`` enforce the latter.
+
+Containers with a dynamic tail (``StepFunction``, the drivers) register
+through ``register_config_pytree`` instead: their tolerance fields flatten to
+leaves, everything else to hashable aux data (derived caches excluded and
+rebuilt on unflatten).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def frozen_setattr(self, name: str, value: Any) -> None:
+    """``__setattr__`` for frozen-after-init classes (see ``freeze``)."""
+    if getattr(self, "_frozen", False):
+        raise AttributeError(
+            f"{type(self).__name__} is frozen: it is static solver config that "
+            "may already be baked into a compiled program. Construct a new "
+            "instance instead of mutating."
+        )
+    object.__setattr__(self, name, value)
+
+
+def freeze(obj: Any) -> None:
+    """Seal ``obj`` against further attribute assignment.  Call at the end of
+    ``__init__`` in classes whose ``__setattr__`` is ``frozen_setattr``."""
+    object.__setattr__(obj, "_frozen", True)
+
+
+def register_static(cls: type) -> type:
+    """Register ``cls`` as an all-static pytree: no leaves, the instance is
+    the aux data.  Usable as a decorator.  Instances must be hashable by
+    value and immutable."""
+
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda obj: ((), obj),
+        lambda obj, _children: obj,
+    )
+    return cls
+
+
+def static_items(obj: Any, exclude: tuple[str, ...] = ()) -> tuple:
+    """The instance's attributes as a sorted name/value tuple, skipping
+    ``exclude`` and the freeze marker -- the value identity used by the
+    ``__eq__``/``__hash__`` of static components and by pytree aux data."""
+    skip = set(exclude) | {"_frozen"}
+    return tuple(
+        (name, value) for name, value in sorted(vars(obj).items()) if name not in skip
+    )
+
+
+def value_eq(cls: type, exclude: tuple[str, ...] = ()) -> type:
+    """Give ``cls`` value-based ``__eq__``/``__hash__`` over its attributes
+    (minus ``exclude``), so equal configs key to the same compiled program."""
+
+    def __eq__(self, other):
+        if type(other) is not type(self):
+            return NotImplemented
+        return static_items(self, exclude) == static_items(other, exclude)
+
+    def __hash__(self):
+        return hash((cls.__name__, static_items(self, exclude)))
+
+    cls.__eq__ = __eq__
+    cls.__hash__ = __hash__
+    return cls
+
+
+def register_config_pytree(
+    cls: type,
+    dynamic_fields: tuple[str, ...],
+    derived_fields: tuple[str, ...] = (),
+) -> type:
+    """Register ``cls`` as a pytree whose ``dynamic_fields`` attributes are
+    leaves and whose remaining attributes are (hashable) aux data.
+
+    ``derived_fields`` are caches computed from the rest (they may hold
+    back-references to the instance itself); they are excluded from the aux
+    data and rebuilt on unflatten via the class's ``_rebuild_derived`` hook.
+    Unflattening bypasses ``__init__`` -- the aux carries already-normalized
+    attributes -- so flatten/unflatten round-trips are cheap enough for the
+    trace-time hot path and reconstruction cannot re-run validation on
+    tracers.
+    """
+
+    skip = tuple(dynamic_fields) + tuple(derived_fields)
+
+    def flatten_with_keys(obj):
+        children = tuple(
+            (jax.tree_util.GetAttrKey(name), getattr(obj, name))
+            for name in dynamic_fields
+        )
+        return children, static_items(obj, skip)
+
+    def flatten(obj):
+        children, aux = flatten_with_keys(obj)
+        return tuple(c for _, c in children), aux
+
+    def unflatten(aux, children):
+        obj = object.__new__(cls)
+        for name, value in aux:
+            object.__setattr__(obj, name, value)
+        for name, value in zip(dynamic_fields, children):
+            object.__setattr__(obj, name, value)
+        rebuild = getattr(obj, "_rebuild_derived", None)
+        if rebuild is not None:
+            rebuild()
+        object.__setattr__(obj, "_frozen", True)
+        return obj
+
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten, flatten)
+    return cls

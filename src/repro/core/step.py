@@ -55,6 +55,7 @@ from .controller import (
 from .events import advance as advance_events
 from .events import init_event_state, normalize_events
 from .solution import Solution, Status
+from .static import freeze, frozen_setattr, register_config_pytree
 from .stepper import AbstractStepper, Stepper
 from .terms import ODETerm, as_term
 
@@ -110,7 +111,19 @@ class StepFunction:
     PyTree states are ravelled *before* they reach this class (see
     ``terms.ravel_state`` / the drivers); the hot loop and the Pallas kernels
     only ever see flat arrays.
+
+    Static/dynamic split: a ``StepFunction`` is frozen after construction and
+    pytree-registered so ``init``/``step``/``finish`` are pure functions of
+    ``(static config, dynamic state)`` -- there is no mutable Python-object
+    state in the hot path.  Flattening yields exactly two leaves, ``rtol`` and
+    ``atol`` (scalars or per-instance vectors; free to vary without a
+    retrace); the term, stepper, controller, event specs and layout flags ride
+    in the treedef as hashable aux data, so passing a ``StepFunction`` (or a
+    driver holding one) through ``jax.jit`` keys the compilation cache on the
+    static config by value.
     """
+
+    __setattr__ = frozen_setattr
 
     def __init__(
         self,
@@ -137,14 +150,26 @@ class StepFunction:
         self.dense_window = dense_window
         self.events = normalize_events(events)
         self.event_bisect_iters = event_bisect_iters
-        # Registry order: component contributions first, loop bookkeeping last.
-        # Duck-typed controllers predating the registry (init/__call__ only)
-        # still get n_accepted recorded -- it was unconditional before and the
-        # Solution.stats contract promises it.
+        self.extra_stats = tuple(extra_stats)
+        self._rebuild_derived()
+        freeze(self)
+
+    def _rebuild_derived(self) -> None:
+        """Build the statistics-contributor tuple (also called when a pytree
+        unflatten reconstructs the instance: the tuple holds a back-reference
+        to ``self``, so it cannot ride in the aux data).
+
+        Registry order: component contributions first, loop bookkeeping last.
+        Duck-typed controllers predating the registry (init/__call__ only)
+        still get n_accepted recorded -- it was unconditional before and the
+        Solution.stats contract promises it."""
         controller_stats = (
             self.controller if hasattr(self.controller, "init_stats") else _ControllerStats()
         )
-        self.stat_contributors = (self.stepper, controller_stats, self, *extra_stats)
+        object.__setattr__(
+            self, "stat_contributors",
+            (self.stepper, controller_stats, self, *self.extra_stats),
+        )
 
     # --- the step function's own statistics contribution ---
     def init_stats(self, batch: int) -> dict[str, jax.Array]:
@@ -439,3 +464,8 @@ class StepFunction:
         # time on EVENT, and the last accepted time for early stops
         # (REACHED_DT_MIN / INFINITE / REACHED_MAX_STEPS).
         return Solution(ts=state.t, ys=state.y, status=status, stats=stats, **extra)
+
+
+# Leaves: the tolerances (dynamic -- per-instance vectors vary freely between
+# solves of one compiled program).  Aux: everything else, hashable by value.
+register_config_pytree(StepFunction, ("rtol", "atol"), ("stat_contributors",))

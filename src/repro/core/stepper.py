@@ -33,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
-from .newton import newton_solve
+from .newton import NewtonConfig, newton_solve
+from .static import freeze, frozen_setattr, register_static, value_eq
 from .tableau import ButcherTableau, get_tableau
 from .terms import ODETerm
 
@@ -146,9 +147,19 @@ class AbstractStepper:
     A stepper owns a tableau, is stateless across *construction* (all
     cross-step state lives in the loop-carried ``carry`` it proposes), and
     contributes named per-instance accumulators to the statistics registry.
+
+    Steppers are *static solver config*: frozen after ``__init__`` (the
+    tableau and every knob may be baked into a cached compiled program),
+    hashable by value (equal configs key to the same executable) and --
+    for the concrete subclasses below -- pytree-registered with zero leaves
+    so they cross ``jax.jit``/``vmap``/``shard_map`` boundaries as ordinary
+    arguments.  Subclasses must call ``freeze(self)`` at the end of their
+    ``__init__``.
     """
 
     tableau: ButcherTableau
+
+    __setattr__ = frozen_setattr
 
     @staticmethod
     def coerce(value: "AbstractStepper | str | ButcherTableau | None") -> "AbstractStepper":
@@ -249,6 +260,8 @@ class AbstractStepper:
         return f"{type(self).__name__}({self.tableau.name!r})"
 
 
+@register_static
+@value_eq
 class ExplicitRK(AbstractStepper):
     """Tableau + explicit RK step + interpolant; stateless across steps.
 
@@ -270,6 +283,7 @@ class ExplicitRK(AbstractStepper):
                 f"tableau {self.tableau.name!r} has implicit stages; "
                 "use DiagonallyImplicitRK"
             )
+        freeze(self)
 
     def step(self, term, t, dt, y, f0, args, carry=(), scale=None):
         return rk_step(term, self.tableau, t, dt, y, f0, args)
@@ -287,6 +301,8 @@ class DIRKCarry(NamedTuple):
     refresh: jax.Array  # (b,) bool
 
 
+@register_static
+@value_eq
 class DiagonallyImplicitRK(AbstractStepper):
     """SDIRK/ESDIRK stepper for stiff problems, batched-Newton inside.
 
@@ -329,9 +345,18 @@ class DiagonallyImplicitRK(AbstractStepper):
                 f"tableau {self.tableau.name!r} is explicit; use ExplicitRK"
             )
         self.gamma = self.tableau.diagonal  # validates the constant diagonal
-        self.newton_tol = newton_tol
-        self.max_newton_iters = max_newton_iters
+        self.newton = NewtonConfig(tol=newton_tol, max_iters=max_newton_iters)
         self.slow_iters = slow_iters if slow_iters is not None else max(2, max_newton_iters // 2)
+        freeze(self)
+
+    # The pre-NewtonConfig knob names, kept readable for callers/tests.
+    @property
+    def newton_tol(self) -> float:
+        return self.newton.tol
+
+    @property
+    def max_newton_iters(self) -> int:
+        return self.newton.max_iters
 
     def init_carry(self, term, t0, y0, f0, args) -> DIRKCarry:
         b, f = y0.shape
@@ -389,8 +414,7 @@ class DiagonallyImplicitRK(AbstractStepper):
                     # dt*a_ii*delta_k (state units), not the raw slope update,
                     # so the test matches the atol/rtol error scale.
                     scale / jnp.maximum(jnp.abs(dtg), jnp.finfo(dtype).tiny),
-                    tol=self.newton_tol,
-                    max_iters=self.max_newton_iters,
+                    config=self.newton,
                 )
                 ks.append(res.k)
                 failed = failed | ~res.converged

@@ -24,9 +24,31 @@ import dataclasses
 
 import numpy as np
 
+from .static import register_static
 
-@dataclasses.dataclass(frozen=True)
+
+def _readonly(arr: np.ndarray | None) -> np.ndarray | None:
+    if arr is None:
+        return None
+    arr = np.array(arr, copy=True)
+    arr.setflags(write=False)
+    return arr
+
+
+def _key(arr: np.ndarray | None):
+    return None if arr is None else (arr.shape, arr.dtype.str, arr.tobytes())
+
+
+@register_static
+@dataclasses.dataclass(frozen=True, eq=False)
 class ButcherTableau:
+    """A tableau is *static solver config*: its coefficients are host-side
+    numpy constants that the kernels unroll at compile time, never runtime
+    arrays.  It is hashable by value (so equal tableaus key to the same
+    compiled program), its arrays are frozen read-only copies, and it is
+    pytree-registered with zero leaves so it can cross ``jax.jit`` boundaries
+    as an ordinary argument."""
+
     name: str
     order: int  # order of the solution advance
     error_order: int  # order of the embedded (lower-order) estimate + 1 == controller k
@@ -37,6 +59,25 @@ class ButcherTableau:
     fsal: bool
     ssal: bool
     implicit: bool = False
+
+    def __post_init__(self):
+        for f in ("a", "b_sol", "b_err", "c"):
+            object.__setattr__(self, f, _readonly(getattr(self, f)))
+
+    def _identity(self) -> tuple:
+        return (
+            self.name, self.order, self.error_order,
+            _key(self.a), _key(self.b_sol), _key(self.b_err), _key(self.c),
+            self.fsal, self.ssal, self.implicit,
+        )
+
+    def __eq__(self, other):
+        if not isinstance(other, ButcherTableau):
+            return NotImplemented
+        return self._identity() == other._identity()
+
+    def __hash__(self):
+        return hash(self._identity())
 
     @property
     def stages(self) -> int:

@@ -23,10 +23,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from .static import register_static
 
+
+@register_static
 @dataclasses.dataclass(frozen=True)
 class ODETerm:
     """Wraps a vector field ``f(t, y, args) -> dy/dt``.
+
+    An ``ODETerm`` is *static solver config*: frozen, hashable (callables
+    hash by identity -- reuse the same function object across solves, or the
+    compilation cache retraces) and pytree-registered with zero leaves, so it
+    crosses ``jax.jit`` boundaries without ``static_argnums`` bookkeeping.
+    Anything the dynamics should read at runtime belongs in ``args`` (a
+    dynamic pytree), never closed over.
 
     ``batched=True`` (default): f already handles (b,) times and (b, f) states.
     ``batched=False``: f is written for a single instance (scalar t, (f,) y)

@@ -31,10 +31,16 @@ def backend() -> str:
     return _BACKEND
 
 
+_BACKENDS = ("ref", "pallas", "interpret")
+
+
 def set_backend(name: str) -> None:
-    """Override backend (tests use this to exercise interpret mode)."""
+    """Override backend (tests use this to exercise interpret mode).  Raises
+    ``ValueError`` on unknown names (an ``assert`` would vanish under
+    ``python -O`` and silently route every op through a bogus backend)."""
     global _BACKEND
-    assert name in ("ref", "pallas", "interpret")
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; expected one of {_BACKENDS}")
     _BACKEND = name
 
 
@@ -47,51 +53,41 @@ def _impl():
     return pallas_impl.interpret_impl() if b == "interpret" else pallas_impl.compiled_impl()
 
 
-def stage_accum(y, dt, K, coeffs):
-    if backend() == "ref":
-        return ref.stage_accum(y, dt, K, coeffs)
-    return _impl().stage_accum(y, dt, K, coeffs)
+# --- op registry -------------------------------------------------------------
+# Every hot-spot op dispatches identically: straight to ``ref`` on the ref
+# backend (skipping the pallas_impl import entirely), through ``_impl()``
+# otherwise.  The registry loop below stamps out one dispatcher per op name --
+# adding a backend op means adding its name here and implementing it in
+# ``ref.py`` / ``pallas_impl.py``, with no per-op boilerplate.
+
+_OP_NAMES = (
+    "stage_accum",
+    "fused_update",
+    "error_norm",
+    "interp_eval",
+    "batched_linsolve",
+    "masked_newton_update",
+    "masked_bisect_refine",
+)
 
 
-def fused_update(y, K, dt, b_sol, b_err):
-    if backend() == "ref":
-        return ref.fused_update(y, K, dt, b_sol, b_err)
-    return _impl().fused_update(y, K, dt, b_sol, b_err)
+def _make_dispatcher(name: str):
+    ref_fn = getattr(ref, name)
+
+    def dispatch(*args, **kwargs):
+        if backend() == "ref":
+            return ref_fn(*args, **kwargs)
+        return getattr(_impl(), name)(*args, **kwargs)
+
+    dispatch.__name__ = name
+    dispatch.__qualname__ = name
+    dispatch.__doc__ = ref_fn.__doc__
+    return dispatch
 
 
-def error_norm(err, y0, y1, atol, rtol):
-    if backend() == "ref":
-        return ref.error_norm(err, y0, y1, atol, rtol)
-    return _impl().error_norm(err, y0, y1, atol, rtol)
-
-
-def interp_eval(coeffs, x, mask, out):
-    if backend() == "ref":
-        return ref.interp_eval(coeffs, x, mask, out)
-    return _impl().interp_eval(coeffs, x, mask, out)
-
-
-def batched_linsolve(A, rhs):
-    """Batched dense solve A @ x = rhs: the Newton linear-algebra hot spot."""
-    if backend() == "ref":
-        return ref.batched_linsolve(A, rhs)
-    return _impl().batched_linsolve(A, rhs)
-
-
-def masked_newton_update(k, delta, active, scale):
-    """Fused masked Newton commit + per-instance scaled update norm."""
-    if backend() == "ref":
-        return ref.masked_newton_update(k, delta, active, scale)
-    return _impl().masked_newton_update(k, delta, active, scale)
-
-
-def masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active):
-    """One masked bisection step of the event localizer: halve the bracket
-    keeping the sign change inside, and evaluate the dense-output interpolant
-    at the new midpoint."""
-    if backend() == "ref":
-        return ref.masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active)
-    return _impl().masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active)
+for _name in _OP_NAMES:
+    globals()[_name] = _make_dispatcher(_name)
+del _name
 
 
 hermite_coeffs = ref.hermite_coeffs  # pure arithmetic; fused into callers by XLA
