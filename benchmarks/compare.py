@@ -1,0 +1,143 @@
+"""Benchmark-regression gate: diff fresh BENCH_*.json runs against baselines.
+
+  python -m benchmarks.compare BASELINE FRESH [BASELINE FRESH ...]
+      [--threshold 0.25] [--update]
+
+Every ``(suite, name)`` row present in both files is checked with a
+direction-aware rule:
+
+  *_time rows        lower is better: fail when fresh > base * (1 + threshold)
+  *per_sec rows      higher is better: fail when fresh < base / (1 + threshold)
+  everything else    informational only (counts, ratios, _suite_wall_s)
+
+The default threshold (25%, override with ``--threshold`` or the
+``BENCH_COMPARE_THRESHOLD`` env var) is deliberately loose: CI machines are
+noisy, and the gate exists to catch real regressions -- a dispatch-cache
+breakage turns a solves/sec row into a cliff, not a wobble.  Rows missing
+from the fresh run (or baselines with no comparable rows at all) fail the
+gate: a silently dropped metric must not read as green.
+
+``--update`` rewrites each baseline from its fresh run instead of comparing
+(use after an intentional perf change, then commit the new baselines).
+
+Exit code 0 = no regressions, 1 = regression or malformed input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+
+def _rows(payload: dict) -> dict[tuple[str, str], float]:
+    out = {}
+    for row in payload["rows"]:
+        name = row["name"]
+        if name.startswith("_"):
+            continue  # bookkeeping rows (wall time) are never gated
+        out[(row["suite"], name)] = float(row["value"])
+    return out
+
+
+def _direction(name: str) -> str | None:
+    """'lower' / 'higher' for gated rows, None for informational ones."""
+    if name.endswith("_time") or "_time/" in name:
+        return "lower"
+    if name.endswith("per_sec"):
+        return "higher"
+    return None
+
+
+def compare_rows(
+    base: dict[tuple[str, str], float],
+    fresh: dict[tuple[str, str], float],
+    threshold: float,
+) -> tuple[list[str], int]:
+    """Returns (failure messages, number of rows actually gated)."""
+    failures = []
+    n_gated = 0
+    for key, base_v in sorted(base.items()):
+        direction = _direction(key[1])
+        if direction is None:
+            continue
+        if key not in fresh:
+            failures.append(f"{key[0]}/{key[1]}: gated row missing from fresh run")
+            continue
+        n_gated += 1
+        fresh_v = fresh[key]
+        if base_v <= 0 or fresh_v <= 0:
+            failures.append(
+                f"{key[0]}/{key[1]}: non-positive value (base={base_v}, "
+                f"fresh={fresh_v})"
+            )
+            continue
+        if direction == "lower":
+            slowdown = fresh_v / base_v - 1.0
+        else:
+            slowdown = base_v / fresh_v - 1.0
+        if slowdown > threshold:
+            failures.append(
+                f"{key[0]}/{key[1]}: {slowdown * 100:.1f}% slowdown "
+                f"(base={base_v:.4g}, fresh={fresh_v:.4g}, "
+                f"{direction}-is-better, threshold {threshold * 100:.0f}%)"
+            )
+    return failures, n_gated
+
+
+def compare_files(base_path: str, fresh_path: str, threshold: float) -> list[str]:
+    try:
+        with open(base_path) as fh:
+            base = _rows(json.load(fh))
+        with open(fresh_path) as fh:
+            fresh = _rows(json.load(fh))
+    except (OSError, KeyError, ValueError, TypeError) as e:
+        return [f"{base_path} vs {fresh_path}: unreadable ({e!r})"]
+    failures, n_gated = compare_rows(base, fresh, threshold)
+    if n_gated == 0 and not failures:
+        return [f"{base_path} vs {fresh_path}: no gated rows in common -- "
+                "wrong file pairing?"]
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("pairs", nargs="+", metavar="BASELINE FRESH",
+                        help="baseline/fresh JSON file pairs")
+    parser.add_argument("--threshold", type=float,
+                        default=float(os.environ.get("BENCH_COMPARE_THRESHOLD",
+                                                     "0.25")),
+                        help="allowed fractional slowdown (default 0.25)")
+    parser.add_argument("--update", action="store_true",
+                        help="overwrite each BASELINE with its FRESH run")
+    opts = parser.parse_args(argv)
+    if len(opts.pairs) % 2 != 0:
+        parser.error("expected BASELINE FRESH pairs")
+
+    pairs = list(zip(opts.pairs[::2], opts.pairs[1::2]))
+    if opts.update:
+        for base_path, fresh_path in pairs:
+            shutil.copyfile(fresh_path, base_path)
+            print(f"updated {base_path} from {fresh_path}")
+        return 0
+
+    all_failures = []
+    for base_path, fresh_path in pairs:
+        failures = compare_files(base_path, fresh_path, opts.threshold)
+        status = "FAIL" if failures else "ok"
+        print(f"[{status}] {base_path} vs {fresh_path}")
+        for msg in failures:
+            print(f"    {msg}")
+        all_failures += failures
+    if all_failures:
+        print(f"{len(all_failures)} benchmark regression(s) above "
+              f"{opts.threshold * 100:.0f}%")
+        return 1
+    print("no benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [table3|table4|table5|fig1|fig2|stiff|all] [--json [PATH]]
+  python -m benchmarks.run [table3|table4|table5|fig1|fig2|stiff|events|dispatch|serving|all] [--json [PATH]]
 
 Prints ``name,value,derived`` CSV rows (value is microseconds for *_time
-rows).  ``--json`` additionally writes the rows to a JSON file (default
-``BENCH_solver.json``) so CI can track the perf trajectory across commits.
+rows).  ``--json`` additionally writes the rows to a JSON file so CI can
+track the perf trajectory across commits; without an explicit PATH each
+suite writes its own default (``BENCH_<suite>.json``, e.g. stiff ->
+``BENCH_stiff.json``; ``all``/``table3`` keep the historical
+``BENCH_solver.json``), so running several suites in one workspace never
+silently overwrites another suite's artifact.  ``benchmarks/compare.py``
+diffs these files against the committed baselines and gates CI on
+regressions.
 """
 
 from __future__ import annotations
@@ -13,16 +19,28 @@ import argparse
 import json
 import time
 
+_SUITE_CHOICES = ["all", "table3", "table4", "table5", "fig1", "fig2",
+                  "stiff", "events", "dispatch", "serving"]
+
+# Suite-named --json defaults; "all" and the historical headline suite keep
+# the BENCH_solver.json name CI has tracked since PR 1.
+_DEFAULT_JSON = {suite: f"BENCH_{suite}.json" for suite in _SUITE_CHOICES}
+_DEFAULT_JSON["all"] = "BENCH_solver.json"
+_DEFAULT_JSON["table3"] = "BENCH_solver.json"
+
+_JSON_AUTO = "__suite_default__"
+
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("suite", nargs="?", default="all",
-                        choices=["all", "table3", "table4", "table5", "fig1", "fig2",
-                                 "stiff", "events", "dispatch"])
-    parser.add_argument("--json", nargs="?", const="BENCH_solver.json", default=None,
-                        metavar="PATH", help="also write rows to a JSON file")
+    parser.add_argument("suite", nargs="?", default="all", choices=_SUITE_CHOICES)
+    parser.add_argument("--json", nargs="?", const=_JSON_AUTO, default=None,
+                        metavar="PATH",
+                        help="also write rows to a JSON file (default: "
+                             "BENCH_<suite>.json)")
     opts = parser.parse_args()
     which = opts.suite
+    json_path = _DEFAULT_JSON[which] if opts.json == _JSON_AUTO else opts.json
 
     suites = []
     if which in ("all", "table3"):
@@ -56,6 +74,12 @@ def main() -> None:
         from . import dispatch_bench
 
         suites.append(("dispatch", dispatch_bench.rows))
+    if which == "serving":
+        # Not part of "all": the per-request eager-jit baseline dispatches
+        # hundreds of b=1 solves by design.
+        from . import serving_bench
+
+        suites.append(("serving", serving_bench.rows))
     if which == "stiff":
         # Not part of "all": the explicit-solver baselines grind at their
         # stability limit by design (200k-step budgets).  Run explicitly, or
@@ -76,11 +100,11 @@ def main() -> None:
         records.append({"suite": tag, "name": "_suite_wall_s", "value": elapsed,
                         "derived": ""})
 
-    if opts.json:
-        payload = {"bench": "solver", "unit": "us for *_time rows", "rows": records}
-        with open(opts.json, "w") as fh:
+    if json_path:
+        payload = {"bench": which, "unit": "us for *_time rows", "rows": records}
+        with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2)
-        print(f"# wrote {len(records)} rows to {opts.json}", flush=True)
+        print(f"# wrote {len(records)} rows to {json_path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,162 @@
+"""Serving-throughput benchmark: coalesced buckets vs per-request dispatch.
+
+The workload is the ROADMAP's serving regime: a steady stream of
+single-instance solve requests with *mixed shapes* (feature sizes drawn from
+a small set, per-request spans and tolerances), where the integration itself
+is microseconds and dispatch + batching policy decide the throughput.  Two
+ways to serve the identical stream:
+
+  per_request  the naive baseline: each request solved alone, b=1, through a
+               per-shape ``jax.jit`` program (warmed before timing -- this
+               baseline pays Python dispatch per request, NOT retracing;
+               the retrace disaster is ``dispatch_bench``'s subject).
+  service      ``SolveService``: requests coalesced into power-of-two padded
+               buckets executed through prewarmed ``CompiledSolver``
+               programs, sliced back into per-request solutions.
+
+Reports steady-state solves/sec for both, the speedup (acceptance bar:
+>= 5x on CPU at max_batch=16), and the service's pad-waste fraction.
+
+Usage: python -m benchmarks.serving_bench [--json [PATH]] [--requests N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AutoDiffAdjoint,
+    SolveRequest,
+    SolveService,
+    Stepper,
+)
+
+FEATURES = (2, 4)
+MAX_BATCH = 16
+T1 = 1.0
+
+
+def _decay(t, y, args):
+    return -y * args
+
+
+def _stream(n: int, seed: int = 0) -> list[SolveRequest]:
+    """A reproducible mixed-shape request stream (round-robin features, so
+    both paths see the identical request sequence)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        feat = FEATURES[i % len(FEATURES)]
+        reqs.append(SolveRequest(
+            f=_decay,
+            y0=jnp.asarray(rng.uniform(0.5, 1.5, (feat,)), jnp.float32),
+            t0=0.0,
+            t1=float(rng.uniform(0.8, 1.2)),
+            args=jnp.asarray(rng.uniform(0.5, 2.0, (feat,)), jnp.float32),
+            rtol=float(rng.choice([1e-3, 1e-4])),
+        ))
+    return reqs
+
+
+def _per_request(reqs) -> float:
+    """Solves/sec serving each request alone at b=1 through jit."""
+
+    @jax.jit
+    def jitted(drv, y0, t0, t1, args):
+        return drv.solve(_decay, y0, None, t_start=t0, t_end=t1, args=args)
+
+    def run(req):
+        # The driver crosses jit as an ordinary argument: its per-request
+        # tolerance leaves are dynamic, so the program still compiles once
+        # per feature shape, not once per tolerance value.
+        drv = AutoDiffAdjoint(Stepper("dopri5"),
+                              rtol=jnp.asarray([req.rtol], jnp.float32),
+                              atol=jnp.asarray([1e-6], jnp.float32))
+        return jitted(drv, req.y0[None],
+                      jnp.asarray([req.t0], jnp.float32),
+                      jnp.asarray([req.t1], jnp.float32), req.args[None])
+
+    # Warm both feature-shape programs, then time the stream.
+    for req in reqs[: 2 * len(FEATURES)]:
+        jax.block_until_ready(run(req).ys)
+    t0 = time.perf_counter()
+    for req in reqs:
+        jax.block_until_ready(run(req).ys)
+    return len(reqs) / (time.perf_counter() - t0)
+
+
+def _service(reqs) -> tuple[float, dict]:
+    """Solves/sec through the coalescing service (prewarmed, steady state)."""
+    svc = SolveService(max_batch=MAX_BATCH, max_delay=None,
+                       default_method="dopri5")
+    for feat in FEATURES:
+        svc.prewarm(SolveRequest(
+            f=_decay, y0=jnp.ones((feat,), jnp.float32), t0=0.0, t1=T1,
+            args=jnp.ones((feat,), jnp.float32), rtol=1e-3,
+        ), batch_classes=[MAX_BATCH])
+    # One warm lap outside the timed window (mirrors the baseline's warmup).
+    for req in reqs[: 2 * MAX_BATCH]:
+        svc.submit(req)
+    svc.flush()
+    t0 = time.perf_counter()
+    futures = [svc.submit(req) for req in reqs]
+    svc.flush()
+    for fut in futures:
+        fut.result(flush=False)
+    rate = len(reqs) / (time.perf_counter() - t0)
+    return rate, svc.stats()
+
+
+def rows(requests: int = 512):
+    reqs = _stream(requests)
+    r_naive = _per_request(reqs)
+    r_svc, stats = _service(reqs)
+    speedup = r_svc / r_naive
+    mix = f"b<=16 f={'/'.join(map(str, FEATURES))} dopri5"
+    return [
+        ("per_request/solves_per_sec", r_naive, f"{mix} per-request jit b=1"),
+        ("service/solves_per_sec", r_svc,
+         f"{mix} prewarmed speedup_vs_per_request={speedup:.1f}x"),
+        ("service/speedup_vs_per_request", speedup,
+         "acceptance bar: >= 5x on CPU"),
+        ("service/pad_waste", stats["pad_waste"],
+         f"pad rows fraction over {stats['n_batches']} batches"),
+        ("service/cache_hit_rate",
+         stats["cache_hits"] / max(1, stats["cache_hits"] + stats["cache_misses"]),
+         f"hits={stats['cache_hits']} misses={stats['cache_misses']}"),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", nargs="?", const="BENCH_serving.json", default=None,
+                        metavar="PATH", help="also write rows to a JSON file")
+    parser.add_argument("--requests", type=int, default=512,
+                        help="timed requests in the stream")
+    opts = parser.parse_args()
+
+    records = []
+    print("name,value,derived")
+    t0 = time.time()
+    for name, v, extra in rows(opts.requests):
+        print(f"serving/{name},{v:.4f},{extra}", flush=True)
+        records.append({"suite": "serving", "name": name, "value": v,
+                        "derived": extra})
+    records.append({"suite": "serving", "name": "_suite_wall_s",
+                    "value": time.time() - t0, "derived": ""})
+
+    if opts.json:
+        payload = {"bench": "serving", "unit": "solves/sec", "rows": records}
+        with open(opts.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(records)} rows to {opts.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint
 from .events import Event, EventState
 from .loop import make_solver, solve_ivp, solve_ivp_scan
 from .newton import NewtonConfig, NewtonResult, newton_solve
+from .serving import SolveFuture, SolveRequest, SolveService, next_pow2
 from .solution import Solution, Status
 from .step import LoopState, StepContext, StepFunction
 from .stepper import (
@@ -61,6 +62,10 @@ __all__ = [
     "make_solver",
     "solve_ivp",
     "solve_ivp_scan",
+    "SolveFuture",
+    "SolveRequest",
+    "SolveService",
+    "next_pow2",
     "Solution",
     "Status",
     "LoopState",

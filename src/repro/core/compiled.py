@@ -51,15 +51,16 @@ unconditionally.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .drivers import AutoDiffAdjoint, BacksolveAdjoint, _Driver
 from .solution import Solution
 from .static import freeze, frozen_setattr
+from .static import leaf_key as _leaf_key
+from .static import tree_key as _tree_key
 from .stepper import AbstractStepper
 from .terms import ODETerm
 
@@ -70,30 +71,6 @@ def _spec(x) -> jax.ShapeDtypeStruct:
         return x
     x = jnp.asarray(x) if not hasattr(x, "shape") else x
     return jax.ShapeDtypeStruct(x.shape, x.dtype)
-
-
-def _leaf_key(x):
-    """Hashable shape/dtype fingerprint of one dynamic leaf.
-
-    This is the per-call hot path, so it avoids ``jnp.asarray``/tree machinery
-    for the common cases.  Host scalars key by Python type -- jit assigns them
-    weak dtypes, so they must not share an entry with committed arrays."""
-    if x is None:
-        return None
-    if isinstance(x, (jax.Array, jax.ShapeDtypeStruct, np.ndarray, np.generic)):
-        return (tuple(x.shape), str(x.dtype), bool(getattr(x, "weak_type", False)))
-    if isinstance(x, (bool, int, float, complex)):
-        return type(x).__name__
-    return None  # pytree container: caller flattens
-
-
-def _tree_key(tree) -> tuple:
-    """Hashable (structure, avals) fingerprint of a dynamic argument pytree."""
-    k = _leaf_key(tree)
-    if k is not None or tree is None:
-        return k
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return (treedef, tuple(_leaf_key(x) for x in leaves))
 
 
 class CacheInfo(NamedTuple):
@@ -151,15 +128,19 @@ class _CacheEntry:
     ``XlaExecutable``.  ``executable`` is the AOT-compiled artifact, built
     lazily by ``CompiledSolver.compile``; once it exists, ``solve`` routes
     through it so an AOT-then-solve sequence never traces a second time.
+
+    The cache key includes the tolerance-override shape class (see
+    ``CompiledSolver._key``), so every call routed to this entry carries
+    tolerance leaves matching the avals the entry was built for -- the
+    executable is always usable when present.
     """
 
-    __slots__ = ("jitted", "executable", "driver_leaves", "tol_keys")
+    __slots__ = ("jitted", "executable", "driver_leaves")
 
     def __init__(self, jitted, driver_leaves):
         self.jitted = jitted
         self.executable = None
         self.driver_leaves = driver_leaves
-        self.tol_keys = tuple(_leaf_key(x) for x in driver_leaves)
 
     def call(self, y0, t_eval, t_start, t_end, dt0, args, rtol, atol) -> Solution:
         tol_leaves = self.driver_leaves
@@ -170,15 +151,6 @@ class _CacheEntry:
                 tol_leaves[0] = rtol
             if atol is not None:
                 tol_leaves[1] = atol
-            # An override whose shape/dtype differs from the compiled
-            # tolerance leaves cannot go through the AOT executable (strict
-            # avals) -- route it through jit, which compiles the variant
-            # program on first use as documented.
-            if self.executable is not None and (
-                _leaf_key(tol_leaves[0]) != self.tol_keys[0]
-                or _leaf_key(tol_leaves[1]) != self.tol_keys[1]
-            ):
-                fn = self.jitted
         return fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
 
 
@@ -262,7 +234,8 @@ class CompiledSolver:
         leaves, treedef = jax.tree_util.tree_flatten(driver)
         self._driver_leaves = leaves
         self._driver_def = treedef
-        self._driver_key = (treedef, tuple(_leaf_key(x) for x in leaves))
+        self._driver_tol_keys = tuple(_leaf_key(x) for x in leaves)
+        self._driver_key = (treedef, self._driver_tol_keys)
         freeze(self)
 
     def cache_info(self) -> CacheInfo:
@@ -272,7 +245,18 @@ class CompiledSolver:
     def cache_clear(self) -> None:
         self._cache.clear()
 
-    def _key(self, f, y0, t_eval, t_start, t_end, dt0, args) -> tuple:
+    def _tol_key(self, x, i):
+        """Shape class of a tolerance override: ``None`` when absent *or*
+        when it matches the driver leaf's aval (same program either way --
+        tolerances are dynamic leaves), a distinct key otherwise (e.g. a
+        per-instance vector over a scalar default selects its own program
+        point, which ``compile`` can AOT-build)."""
+        if x is None:
+            return None
+        k = _leaf_key(x)
+        return None if k == self._driver_tol_keys[i] else k
+
+    def _key(self, f, y0, t_eval, t_start, t_end, dt0, args, rtol=None, atol=None) -> tuple:
         return (
             self._driver_key,
             _f_key(f),
@@ -282,7 +266,19 @@ class CompiledSolver:
             _tree_key(t_end),
             _tree_key(dt0),
             _tree_key(args),
+            self._tol_key(rtol, 0),
+            self._tol_key(atol, 1),
         )
+
+    def cache_key(self, f, y0, t_eval=None, *, t_start=None, t_end=None,
+                  dt0=None, args: Any = None, rtol=None, atol=None) -> tuple:
+        """The hashable identity of the compiled program a ``solve`` with
+        these arguments (or ``ShapeDtypeStruct`` specs) would dispatch to:
+        (driver static config, dynamics identity, every dynamic argument's
+        shape/dtype class).  Two argument sets with equal keys share one
+        executable.  The serving layer buckets requests by exactly this key,
+        so a bucket never straddles two programs."""
+        return self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
 
     def _donate(self, t_eval) -> bool:
         """Resolve the donation policy: 'auto' donates y0 exactly when the
@@ -305,8 +301,9 @@ class CompiledSolver:
         jitted = jax.jit(fn, donate_argnums=(0,) if self._donate(t_eval) else ())
         return _CacheEntry(jitted, self._driver_leaves)
 
-    def _lookup(self, f, y0, t_eval, t_start, t_end, dt0, args) -> _CacheEntry:
-        key = self._key(f, y0, t_eval, t_start, t_end, dt0, args)
+    def _lookup(self, f, y0, t_eval, t_start, t_end, dt0, args,
+                rtol=None, atol=None) -> _CacheEntry:
+        key = self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
         entry = self._cache.get(key)
         if entry is None:
             entry = self._build(f, t_eval)
@@ -323,19 +320,58 @@ class CompiledSolver:
         t_end=None,
         dt0=None,
         args: Any = None,
+        rtol=None,
+        atol=None,
     ) -> CompiledSolve:
         """AOT-compile for the given argument specs (``jax.ShapeDtypeStruct``
         or example arrays) and return the callable executable handle.  The
         entry is also installed in the cache, so a later ``solve`` with
         matching shapes dispatches to the same executable without ever
-        tracing again."""
-        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args)
+        tracing again.
+
+        ``rtol``/``atol`` specs select the tolerance shape class to build:
+        pass e.g. ``jax.ShapeDtypeStruct((b,), jnp.float32)`` to AOT-compile
+        the per-instance-tolerance variant a serving bucket will call with
+        (omitting them compiles the driver-default class)."""
+        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
         if entry.executable is None:
+            tol_leaves = list(self._driver_leaves)
+            if rtol is not None:
+                tol_leaves[0] = rtol
+            if atol is not None:
+                tol_leaves[1] = atol
             abstract = jax.tree_util.tree_map(
-                _spec, (y0, self._driver_leaves, t_eval, t_start, t_end, dt0, args)
+                _spec, (y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
             )
             entry.executable = entry.jitted.lower(*abstract).compile()
         return CompiledSolve(entry)
+
+    def prewarm(self, f, specs: "list[dict] | tuple[dict, ...]") -> int:
+        """AOT-compile a batch of program points before traffic arrives.
+
+        Each element of ``specs`` is a kwargs mapping for :meth:`compile`
+        minus ``f`` (so it must carry ``y0`` plus whichever of ``t_eval``/
+        ``t_start``/``t_end``/``dt0``/``args``/``rtol``/``atol`` the serving
+        call will pass), with ``jax.ShapeDtypeStruct`` leaves standing in for
+        the concrete arrays.  Returns the number of entries compiled for the
+        first time (already-warm points are skipped for free, so prewarming
+        is idempotent)."""
+        n_new = 0
+        for spec in specs:
+            spec = dict(spec)
+            kw = {k: spec.pop(k, None)
+                  for k in ("t_eval", "t_start", "t_end", "dt0", "args", "rtol", "atol")}
+            y0 = spec.pop("y0")
+            if spec:
+                raise TypeError(f"unknown prewarm spec keys: {sorted(spec)}")
+            key = self._key(f, y0, kw["t_eval"], kw["t_start"], kw["t_end"],
+                            kw["dt0"], kw["args"], kw["rtol"], kw["atol"])
+            entry = self._cache.data.get(key)
+            if entry is not None and entry.executable is not None:
+                continue
+            self.compile(f, y0, **kw)
+            n_new += 1
+        return n_new
 
     def solve(
         self,
@@ -350,7 +386,7 @@ class CompiledSolver:
         rtol=None,
         atol=None,
     ) -> Solution:
-        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args)
+        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
         return entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
 
 

@@ -1,0 +1,579 @@
+"""Shape-bucketed request coalescing: individual ODE solves served as batches.
+
+The paper's core economics -- amortize solver overhead by batching many
+independent IVPs into one program -- only pays off if something *builds*
+those batches.  A serving deployment sees the opposite shape of traffic: a
+stream of single-instance requests, each with its own initial state, time
+span, tolerances and solver configuration.  ``SolveService`` closes that gap:
+
+1.  ``submit(SolveRequest(...))`` normalizes a request and drops it into a
+    **bucket** keyed by everything that selects a compiled program: the
+    driver's static config (stepper/controller/layout, hashed through
+    ``static.tree_key``), the dynamics' identity, the state PyTree structure
+    and leaf shapes/dtypes, the padded eval-grid length class and the args
+    structure.  Requests in one bucket are exactly the requests that can
+    share one executable -- the bucket key is ``CompiledSolver.cache_key``
+    identity by construction.
+2.  A bucket flushes when it reaches ``max_batch`` requests (flush-on-size)
+    or when its oldest request has waited ``max_delay`` seconds
+    (flush-on-deadline, checked on every ``submit``/``poll``/``result`` --
+    the service is single-threaded and deterministic by design; drive
+    ``poll()`` from your event loop).  The total backlog is bounded by
+    ``max_queue``: a submit that would exceed it first drains every bucket.
+3.  Flushing pads the batch to a **power-of-two batch-size class** (so at
+    most ``log2(max_batch)+1`` programs exist per bucket, all prewarmable)
+    by replicating the first request's row, stacks rows into batched arrays,
+    and executes through a per-driver-config ``CompiledSolver`` -- repeated
+    flushes of a warm bucket never trace.
+4.  The batched ``Solution`` is sliced back into per-request solutions
+    (``Solution.slice_batch`` / ``truncate_eval``).  Padding can never
+    perturb real requests: instances do not interact (the batch-invariance
+    property the solver's test suite enforces), so a padded row only costs
+    the wasted FLOPs tracked in ``stats()['pad_waste']``.
+
+Padding policy:
+
+* batch axis -- padded up to the next power of two with copies of request 0;
+  sliced off at unpack.  For explicit steppers the realized per-request
+  results are bitwise identical to solving each request alone through
+  ``CompiledSolver`` in the final-state regime (and identical to rounding in
+  the dense regime, where XLA's batched interpolant contractions are
+  batch-size dependent).
+* eval grid -- each request's ``t_eval`` is padded to its power-of-two
+  length class by repeating the final time; the duplicate columns are pure
+  interpolant re-evaluations, cut off by ``truncate_eval``.
+* tolerances, ``t0``/``t1``, ``dt0`` -- per-request scalars stacked into
+  per-instance ``(b,)`` vectors (dynamic arguments: they never retrace).
+
+What requests may vary *within* one bucket: ``y0`` values, ``t0``/``t1``,
+``rtol``/``atol``, ``args`` values, eval-grid values (up to the length
+class).  What splits buckets: the vector field object, driver/stepper/
+controller config, state structure or leaf shapes/dtypes, eval-grid length
+class, args structure, presence of ``dt0``.
+
+The per-request vector-field contract is the library's usual one: requests
+carry *unbatched* states (1-D arrays or PyTrees of unbatched leaves) and the
+service stacks them, so a flat-state ``f`` sees ``(b,)`` times, ``(b, f)``
+states and args with a leading batch axis (per-request args are stacked).
+PyTree states go through the drivers' per-instance convention, where ``args``
+is passed through *shared* -- per-request args for PyTree states are
+therefore rejected (see ROADMAP: ragged/structured-args serving).
+
+Statistics: ``stats()`` exposes the serving counters (queue depth, batches,
+pad waste, solves/sec, compiled-program cache hits/misses) plus the summed
+per-instance accumulators of every ``Solution`` served, so anything a
+component contributes through the statistics registry (``n_steps``,
+``n_f_evals``, ``n_newton_iters``, user extras) aggregates across the
+service for free under ``solver/<name>``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compiled import CompiledSolver, _f_key
+from .drivers import AutoDiffAdjoint, _Driver
+from .solution import Solution
+from .static import tree_key
+from .stepper import AbstractStepper
+
+
+def next_pow2(n: int) -> int:
+    """The smallest power of two >= n (the batch/eval-grid size classes)."""
+    if n < 1:
+        raise ValueError(f"need a positive size, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One IVP to solve: a single instance, not a batch.
+
+    f:        the vector field (callable or ``ODETerm``).  Requests sharing a
+              bucket must reuse the *same object* -- identity is program
+              identity (as everywhere in the compiled front end).
+    y0:       unbatched initial state: a 1-D ``(f,)`` array, or a PyTree of
+              unbatched leaves (reshape bare matrix states to 1-D or nest
+              them in a PyTree).
+    t0, t1:   the integration span (scalars; backward spans allowed).
+    t_eval:   optional 1-D evaluation grid (its own length per request --
+              grids bucket by power-of-two length class).  ``None`` requests
+              only the final state.
+    args:     optional per-request dynamics arguments (PyTree; leaves are
+              stacked along a new leading batch axis across the bucket).
+    rtol, atol: per-request tolerances; default to the method's configuration.
+    method:   stepper name / ``AbstractStepper`` / configured driver; default
+              is the service's ``default_method``.
+    dt0:      optional fixed initial step size.
+    """
+
+    f: Any
+    y0: Any
+    t0: float
+    t1: float
+    t_eval: Any = None
+    args: Any = None
+    rtol: float | None = None
+    atol: float | None = None
+    method: Any = None
+    dt0: float | None = None
+
+
+class _Item:
+    """A normalized, validated request queued in a bucket."""
+
+    __slots__ = ("f", "y0", "t0", "t1", "t_eval", "n_eval", "args",
+                 "rtol", "atol", "dt0")
+
+    def __init__(self, f, y0, t0, t1, t_eval, n_eval, args, rtol, atol, dt0):
+        self.f = f
+        self.y0 = y0
+        self.t0 = t0
+        self.t1 = t1
+        self.t_eval = t_eval
+        self.n_eval = n_eval  # the request's true grid length (pre-padding)
+        self.args = args
+        self.rtol = rtol
+        self.atol = atol
+        self.dt0 = dt0
+
+
+class SolveFuture:
+    """Handle to one submitted request.
+
+    ``result()`` returns the request's ``Solution`` view (batch axis kept,
+    with exactly one instance: ``ys`` leaves are ``(1, ...)``, stats are
+    ``(1,)`` -- the same container contract as every other solve), with
+    fields delivered as host NumPy arrays: serving results leave the device
+    in one transfer per batch, and the per-request views are zero-copy
+    slices of it.  If the request is still queued, ``result()`` flushes its
+    bucket first (pass ``flush=False`` to get an error instead, e.g. from
+    latency-sensitive callers that only want completed work).
+    """
+
+    __slots__ = ("_service", "_bucket", "_solution", "_error")
+
+    def __init__(self, service: "SolveService", bucket: "_Bucket"):
+        self._service = service
+        self._bucket = bucket
+        self._solution: Solution | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._solution is not None or self._error is not None
+
+    def result(self, flush: bool = True) -> Solution:
+        if not self.done():
+            if not flush:
+                raise RuntimeError("request still queued; pass flush=True or "
+                                   "call SolveService.flush()/poll() first")
+            self._service._execute(self._bucket)
+        if self._error is not None:
+            raise self._error
+        return self._solution
+
+
+class _Bucket:
+    """All queued requests that can share one compiled program."""
+
+    __slots__ = ("key", "driver", "solver", "f", "time_dtype", "n_eval_class",
+                 "has_args", "has_dt0", "pending", "oldest")
+
+    def __init__(self, key, driver, solver, f, time_dtype, n_eval_class,
+                 has_args, has_dt0):
+        self.key = key
+        self.driver = driver
+        self.solver = solver
+        self.f = f
+        self.time_dtype = time_dtype
+        self.n_eval_class = n_eval_class  # padded grid length, or None
+        self.has_args = has_args
+        self.has_dt0 = has_dt0
+        self.pending: list[tuple[_Item, SolveFuture]] = []
+        self.oldest: float | None = None  # enqueue time of the oldest pending
+
+
+class SolveService:
+    """Request-coalescing front end over ``CompiledSolver``.
+
+    Example (serving loop)::
+
+        svc = SolveService(max_batch=16, max_delay=2e-3)
+        svc.prewarm(SolveRequest(f, y0_example, 0.0, 1.0))   # AOT, optional
+        futs = [svc.submit(SolveRequest(f, y0, t0, t1)) for ...]
+        svc.poll()                       # deadline-flush from your event loop
+        sols = [f.result() for f in futs]  # drains whatever is still queued
+
+    Parameters: ``max_batch`` (power of two; flush-on-size threshold and
+    padded-batch ceiling), ``max_delay`` (seconds a request may wait before
+    its bucket is flushed on the next ``submit``/``poll``; ``None`` disables
+    deadline flushing), ``max_queue`` (total backlog bound; exceeding it
+    drains every bucket), ``default_method`` (for requests without one),
+    ``donate``/``cache_size`` (forwarded to each ``CompiledSolver``) and
+    ``clock`` (injectable monotonic clock, for deterministic deadline tests).
+
+    Memory: compiled programs are LRU-bounded per driver config
+    (``cache_size``); bucket/driver/solver bookkeeping grows with the number
+    of *distinct configurations served* (shape classes x methods), which a
+    deployment bounds by construction -- the per-submit hot path only ever
+    touches the buckets that currently have work waiting.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batch: int = 16,
+        max_delay: float | None = 0.01,
+        max_queue: int = 4096,
+        default_method: Any = None,
+        donate: bool | str = "auto",
+        cache_size: int = 128,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if max_batch < 1 or (max_batch & (max_batch - 1)) != 0:
+            raise ValueError(f"max_batch must be a power of two, got {max_batch}")
+        if max_queue < max_batch:
+            raise ValueError("max_queue must be at least max_batch")
+        self.max_batch = max_batch
+        self.max_delay = max_delay
+        self.max_queue = max_queue
+        self.default_method = default_method
+        self.donate = donate
+        self.cache_size = cache_size
+        self.clock = clock
+        self._buckets: OrderedDict[tuple, _Bucket] = OrderedDict()
+        # Buckets with pending requests, in first-enqueue order: the deadline
+        # sweep runs on every submit, so it must scan the (few) waiting
+        # buckets, not every shape class the service has ever seen.
+        self._waiting: OrderedDict[tuple, _Bucket] = OrderedDict()
+        self._solvers: dict[Any, CompiledSolver] = {}
+        # Per-submit memos (the submit path is the serving hot loop: a fresh
+        # driver construction or pytree flatten per request would rival the
+        # amortized solve cost).  Entries keep their driver alive, so an id
+        # can never be recycled while its memo exists.
+        self._driver_memo: dict[Any, _Driver] = {}
+        self._driver_keys: dict[int, tuple] = {}
+        self._queue_depth = 0
+        self._counters = {
+            "n_requests": 0,
+            "n_completed": 0,
+            "n_batches": 0,
+            "n_rows": 0,
+            "n_pad_rows": 0,
+            "n_deadline_flushes": 0,
+            "n_size_flushes": 0,
+            "n_failed_batches": 0,
+        }
+        self._solver_totals: dict[str, float] = {}
+        self._busy_s = 0.0
+
+    # ------------------------------------------------------------------
+    # request normalization and bucketing
+
+    def _coerce_driver(self, method) -> _Driver:
+        if method is None:
+            method = self.default_method
+        if isinstance(method, _Driver):
+            return method
+        memo_key = method if isinstance(method, (str, type(None))) else id(method)
+        driver = self._driver_memo.get(memo_key)
+        if driver is None:
+            driver = AutoDiffAdjoint(AbstractStepper.coerce(method))
+            self._driver_memo[memo_key] = driver
+        return driver
+
+    def _driver_key_of(self, driver: _Driver):
+        entry = self._driver_keys.get(id(driver))
+        if entry is None:
+            entry = (driver, tree_key(driver))
+            self._driver_keys[id(driver)] = entry
+        return entry[1]
+
+    @staticmethod
+    def _as_array(x):
+        # jax arrays pass through untouched: jnp.asarray on an existing
+        # committed array still pays dtype canonicalization (~half the
+        # submit cost at serving rates).  Everything else becomes a NumPy
+        # array with its dtype pre-canonicalized (float64 -> float32 under
+        # default x64-off), so bucket keys and prewarm specs match what
+        # ``_pack``'s device transfer will actually produce -- a NumPy
+        # float64 request must share its bucket (and prewarmed program)
+        # with the float32 jnp request of the same logical shape.
+        if isinstance(x, jax.Array):
+            return x
+        x = np.asarray(x)
+        canonical = jax.dtypes.canonicalize_dtype(x.dtype)
+        return x if x.dtype == canonical else x.astype(canonical)
+
+    def _normalize(self, req: SolveRequest) -> tuple[_Item, _Driver]:
+        driver = self._coerce_driver(req.method)
+        y0 = (req.y0 if isinstance(req.y0, jax.Array)
+              else jax.tree_util.tree_map(self._as_array, req.y0))
+        flat = isinstance(y0, (jax.Array, np.ndarray))
+        if flat and y0.ndim != 1:
+            raise ValueError(
+                f"request y0 must be an unbatched 1-D state or a PyTree, got "
+                f"a bare array of shape {y0.shape}; reshape to 1-D or nest it"
+            )
+        leaves = jax.tree_util.tree_leaves(y0)
+        if not leaves:
+            raise ValueError("request y0 has no array leaves")
+        args = None
+        if req.args is not None:
+            if not flat:
+                raise NotImplementedError(
+                    "per-request args are not supported for PyTree states: "
+                    "the per-instance vector-field convention passes args "
+                    "through unstacked (see ROADMAP open items)"
+                )
+            args = (req.args if isinstance(req.args, jax.Array)
+                    else jax.tree_util.tree_map(self._as_array, req.args))
+        rtol = req.rtol if req.rtol is not None else driver.rtol
+        atol = req.atol if req.atol is not None else driver.atol
+        for name, tol in (("rtol", rtol), ("atol", atol)):
+            if jnp.ndim(tol) != 0:
+                raise ValueError(
+                    f"per-request {name} must be scalar (got shape "
+                    f"{jnp.shape(tol)}); per-feature tolerances do not fit "
+                    "the (b,)-vector packing"
+                )
+        t_eval, n_eval = None, None
+        if req.t_eval is not None:
+            t_eval = np.asarray(req.t_eval, dtype=np.float64)
+            if t_eval.ndim != 1 or t_eval.shape[0] < 1:
+                raise ValueError(
+                    f"request t_eval must be a non-empty 1-D grid, got shape "
+                    f"{t_eval.shape}"
+                )
+            n_eval = int(t_eval.shape[0])
+        item = _Item(req.f, y0, float(req.t0), float(req.t1), t_eval, n_eval,
+                     args, float(rtol), float(atol),
+                     None if req.dt0 is None else float(req.dt0))
+        return item, driver
+
+    def _bucket_for(self, item: _Item, driver: _Driver) -> _Bucket:
+        driver_key = self._driver_key_of(driver)
+        n_eval_class = None if item.n_eval is None else next_pow2(item.n_eval)
+        key = (
+            driver_key,
+            _f_key(item.f),
+            tree_key(item.y0),
+            n_eval_class,
+            tree_key(item.args),
+            item.dt0 is None,
+        )
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            solver = self._solvers.get(driver_key)
+            if solver is None:
+                solver = CompiledSolver(driver, donate=self.donate,
+                                        cache_size=self.cache_size)
+                self._solvers[driver_key] = solver
+            time_dtype = jnp.result_type(*[leaf.dtype for leaf in
+                                           jax.tree_util.tree_leaves(item.y0)])
+            bucket = _Bucket(key, driver, solver, item.f, time_dtype,
+                             n_eval_class, item.args is not None,
+                             item.dt0 is not None)
+            self._buckets[key] = bucket
+        return bucket
+
+    # ------------------------------------------------------------------
+    # queueing policies
+
+    def submit(self, req: SolveRequest) -> SolveFuture:
+        """Queue one request; returns its future.  May execute batches
+        synchronously: the request's own bucket on flush-on-size, expired
+        buckets on flush-on-deadline, everything on backlog overflow."""
+        self.poll()
+        if self._queue_depth >= self.max_queue:
+            self.flush()
+        item, driver = self._normalize(req)
+        bucket = self._bucket_for(item, driver)
+        fut = SolveFuture(self, bucket)
+        if not bucket.pending:
+            bucket.oldest = self.clock()
+            self._waiting[bucket.key] = bucket
+        bucket.pending.append((item, fut))
+        self._queue_depth += 1
+        self._counters["n_requests"] += 1
+        if len(bucket.pending) >= self.max_batch:
+            self._counters["n_size_flushes"] += 1
+            self._execute(bucket)
+        return fut
+
+    def poll(self) -> int:
+        """Flush every bucket whose oldest request has waited past
+        ``max_delay``.  Returns the number of batches executed."""
+        if self.max_delay is None or not self._waiting:
+            return 0
+        now = self.clock()
+        n = 0
+        for bucket in list(self._waiting.values()):
+            if bucket.pending and now - bucket.oldest >= self.max_delay:
+                self._counters["n_deadline_flushes"] += 1
+                self._execute(bucket)
+                n += 1
+        return n
+
+    def flush(self) -> int:
+        """Execute every non-empty bucket.  Returns the number of batches."""
+        n = 0
+        for bucket in list(self._waiting.values()):
+            if bucket.pending:
+                self._execute(bucket)
+                n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # packing and execution
+
+    def _pack(self, bucket: _Bucket, items: list[_Item]) -> dict:
+        """Stack per-request rows into the bucket's padded batch arguments.
+
+        Stacking happens host-side (one NumPy stack + one transfer per
+        field) rather than per-row on the device: at serving batch sizes the
+        per-op dispatch of b x ``jnp.stack`` costs several times the solve
+        itself."""
+        b = min(next_pow2(len(items)), self.max_batch)
+        rows = items + [items[0]] * (b - len(items))
+        td = bucket.time_dtype
+        host_stack = lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs]))
+        kw = dict(
+            y0=jax.tree_util.tree_map(host_stack, *[r.y0 for r in rows]),
+            t_eval=None,
+            t_start=jnp.asarray(np.array([r.t0 for r in rows]), dtype=td),
+            t_end=jnp.asarray(np.array([r.t1 for r in rows]), dtype=td),
+            dt0=None,
+            args=None,
+            rtol=jnp.asarray(np.array([r.rtol for r in rows]), dtype=td),
+            atol=jnp.asarray(np.array([r.atol for r in rows]), dtype=td),
+        )
+        if bucket.n_eval_class is not None:
+            n_class = bucket.n_eval_class
+            grids = [np.concatenate([r.t_eval,
+                                     np.full(n_class - r.n_eval, r.t_eval[-1])])
+                     for r in rows]
+            kw["t_eval"] = jnp.asarray(np.stack(grids), dtype=td)
+        if bucket.has_args:
+            kw["args"] = jax.tree_util.tree_map(host_stack, *[r.args for r in rows])
+        if bucket.has_dt0:
+            kw["dt0"] = jnp.asarray(np.array([r.dt0 for r in rows]), dtype=td)
+        return kw
+
+    def _execute(self, bucket: _Bucket) -> None:
+        if not bucket.pending:
+            return
+        batch = bucket.pending
+        bucket.pending = []
+        bucket.oldest = None
+        self._waiting.pop(bucket.key, None)
+        self._queue_depth -= len(batch)
+        items = [item for item, _ in batch]
+        kw = self._pack(bucket, items)
+        b = jax.tree_util.tree_leaves(kw["y0"])[0].shape[0]
+        try:
+            t0 = time.perf_counter()
+            sol = bucket.solver.solve(bucket.f, **kw)
+            # One device->host transfer per field; the per-request views are
+            # then zero-copy NumPy slices (device-side slicing would pay b
+            # dispatches per field and dominate the batch -- results are
+            # host-delivered by design).
+            sol = jax.tree_util.tree_map(np.asarray, sol)
+            self._busy_s += time.perf_counter() - t0
+        except Exception as e:  # deliver to the owners, keep the service up
+            self._counters["n_failed_batches"] += 1
+            for _, fut in batch:
+                fut._error = e
+            return
+        self._counters["n_batches"] += 1
+        self._counters["n_rows"] += b
+        self._counters["n_pad_rows"] += b - len(batch)
+        self._counters["n_completed"] += len(batch)
+        for name, acc in sol.stats.items():
+            self._solver_totals[name] = (
+                self._solver_totals.get(name, 0.0) + float(acc[: len(batch)].sum())
+            )
+        for i, (item, fut) in enumerate(batch):
+            view = sol.slice_batch(slice(i, i + 1))
+            if item.n_eval is not None and item.n_eval < bucket.n_eval_class:
+                view = view.truncate_eval(item.n_eval)
+            fut._solution = view
+
+    # ------------------------------------------------------------------
+    # prewarming and stats
+
+    def prewarm(self, example: SolveRequest, batch_classes=None) -> int:
+        """AOT-compile the programs ``example``-shaped requests will hit, one
+        per power-of-two batch-size class (default: every class up to
+        ``max_batch``), before any traffic arrives.  Returns the number of
+        programs newly compiled; warm classes are skipped, so prewarming is
+        idempotent.  Uses ``CompiledSolver.prewarm`` under the hood -- a
+        subsequent flush of a matching bucket is a pure cache hit and never
+        traces."""
+        item, driver = self._normalize(example)
+        bucket = self._bucket_for(item, driver)
+        if batch_classes is None:
+            batch_classes = [1 << i for i in range(self.max_batch.bit_length())]
+        td = bucket.time_dtype
+        specs = []
+        for b in batch_classes:
+            if b < 1 or b > self.max_batch or (b & (b - 1)) != 0:
+                raise ValueError(
+                    f"batch class {b} is not a power of two within max_batch="
+                    f"{self.max_batch}"
+                )
+            vec = jax.ShapeDtypeStruct((b,), td)
+            spec = dict(
+                y0=jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct((b,) + x.shape, x.dtype),
+                    item.y0,
+                ),
+                t_start=vec, t_end=vec, rtol=vec, atol=vec,
+            )
+            if bucket.n_eval_class is not None:
+                spec["t_eval"] = jax.ShapeDtypeStruct((b, bucket.n_eval_class), td)
+            if bucket.has_args:
+                spec["args"] = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct((b,) + x.shape, x.dtype),
+                    item.args,
+                )
+            if bucket.has_dt0:
+                spec["dt0"] = vec
+            specs.append(spec)
+        return bucket.solver.prewarm(bucket.f, specs)
+
+    def stats(self) -> dict[str, Any]:
+        """Snapshot of the serving surface: queue/bucket state, padding
+        waste, realized solves/sec (completed requests over accumulated
+        device-busy time), compiled-program cache counters summed over the
+        per-config ``CompiledSolver`` instances, and the aggregated solver
+        statistics registry under ``solver/<name>``."""
+        hits = misses = programs = 0
+        for solver in self._solvers.values():
+            info = solver.cache_info()
+            hits += info.hits
+            misses += info.misses
+            programs += info.currsize
+        c = self._counters
+        out: dict[str, Any] = {
+            "queue_depth": self._queue_depth,
+            "n_buckets": len(self._buckets),
+            **c,
+            "pad_waste": (c["n_pad_rows"] / c["n_rows"]) if c["n_rows"] else 0.0,
+            "solves_per_sec": (c["n_completed"] / self._busy_s)
+            if self._busy_s > 0 else 0.0,
+            "busy_s": self._busy_s,
+            "cache_hits": hits,
+            "cache_misses": misses,
+            "n_programs": programs,
+        }
+        for name, total in sorted(self._solver_totals.items()):
+            out[f"solver/{name}"] = total
+        return out

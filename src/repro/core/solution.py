@@ -7,6 +7,7 @@ import enum
 from typing import Any
 
 import jax
+import numpy as np
 
 
 class Status(enum.IntEnum):
@@ -62,3 +63,58 @@ class Solution:
         stopped by a terminal event (scipy's solve_ivp convention -- an event
         termination is the *intended* outcome, not a failure)."""
         return (self.status == Status.SUCCESS.value) | (self.status == Status.EVENT.value)
+
+    def slice_batch(self, index) -> "Solution":
+        """View of a subset of instances: every field sliced along the batch
+        axis by ``index`` (a ``slice``, int array or index list -- anything
+        numpy-style that preserves the leading axis).
+
+        This is the unpacking primitive of the serving layer: a padded bucket
+        solve slices back into per-request solutions, and because instances
+        never interact (the solver's core batch-invariance contract), a
+        sliced view is exactly what solving those instances alone would have
+        produced.  Works on PyTree ``ys``/``event_y`` (every leaf carries the
+        batch as its leading axis) and slices each stats accumulator.
+        """
+        take = lambda x: x[index]
+        if isinstance(self.ys, (np.ndarray, jax.Array)) and self.event_t is None:
+            # Fast path for flat-state, event-free solutions: direct indexing,
+            # no tree machinery (this is the serving unpack hot loop).
+            return Solution(
+                ts=self.ts[index],
+                ys=self.ys[index],
+                status=self.status[index],
+                stats={k: v[index] for k, v in self.stats.items()},
+            )
+        maybe = lambda x: None if x is None else jax.tree_util.tree_map(take, x)
+        return dataclasses.replace(
+            self,
+            ts=take(self.ts),
+            ys=jax.tree_util.tree_map(take, self.ys),
+            status=take(self.status),
+            stats={k: jax.tree_util.tree_map(take, v) for k, v in self.stats.items()},
+            event_t=maybe(self.event_t),
+            event_y=maybe(self.event_y),
+            event_mask=maybe(self.event_mask),
+        )
+
+    def truncate_eval(self, n: int) -> "Solution":
+        """Drop evaluation points past the first ``n``: ``ts`` becomes
+        ``(b, n)`` and every ``ys`` leaf ``(b, n, ...)``.
+
+        The unpad view for eval-grid padding: the serving layer pads each
+        request's ``t_eval`` to a power-of-two length class by repeating the
+        final time, and the repeated columns -- pure interpolant re-evaluations,
+        never solver state -- are cut off here.  ``stats`` are left untouched
+        and so count the padded grid (``n_initialized`` in particular).
+        """
+        if self.ts.ndim < 2:
+            raise ValueError(
+                "truncate_eval needs a dense-output solution (ts of shape "
+                f"(b, n)); this one tracks only final states (ts {self.ts.shape})"
+            )
+        return dataclasses.replace(
+            self,
+            ts=self.ts[:, :n],
+            ys=jax.tree_util.tree_map(lambda x: x[:, :n], self.ys),
+        )

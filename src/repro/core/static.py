@@ -36,6 +36,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 
 
 def frozen_setattr(self, name: str, value: Any) -> None:
@@ -93,6 +94,41 @@ def value_eq(cls: type, exclude: tuple[str, ...] = ()) -> type:
     cls.__eq__ = __eq__
     cls.__hash__ = __hash__
     return cls
+
+
+def leaf_key(x) -> Any:
+    """Hashable shape/dtype fingerprint of one dynamic leaf.
+
+    This is the per-call hot path of the compiled front end and the serving
+    batcher, so it avoids ``jnp.asarray``/tree machinery for the common
+    cases.  Host scalars key by Python type -- jit assigns them weak dtypes,
+    so they must not share an entry with committed arrays."""
+    if x is None:
+        return None
+    if isinstance(x, (jax.Array, jax.ShapeDtypeStruct, np.ndarray, np.generic)):
+        # np.dtype objects hash/compare by value and avoid the str() cost
+        # (this runs per leaf per request at serving rates).
+        return (tuple(x.shape), np.dtype(x.dtype), bool(getattr(x, "weak_type", False)))
+    if isinstance(x, (bool, int, float, complex)):
+        return type(x).__name__
+    return None  # pytree container: caller flattens
+
+
+def tree_key(tree) -> Any:
+    """Hashable (structure, avals) fingerprint of a dynamic argument pytree.
+
+    Two trees share a key exactly when they compile to the same program
+    point: same treedef (which hashes any static config riding in aux data,
+    e.g. a driver's stepper/controller/layout) and same per-leaf
+    shape/dtype/weak-type.  This is the identity ``CompiledSolver`` keys its
+    executable cache on and the serving layer keys request buckets on -- a
+    request maps to a bucket iff it would hit the same compiled program.
+    """
+    k = leaf_key(tree)
+    if k is not None or tree is None:
+        return k
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple(leaf_key(x) for x in leaves))
 
 
 def register_config_pytree(

@@ -56,7 +56,7 @@ from .events import advance as advance_events
 from .events import init_event_state, normalize_events
 from .solution import Solution, Status
 from .static import freeze, frozen_setattr, register_config_pytree
-from .stepper import AbstractStepper, Stepper
+from .stepper import AbstractStepper
 from .terms import ODETerm, as_term
 
 

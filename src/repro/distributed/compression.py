@@ -12,11 +12,8 @@ the other mesh axes left automatic, so it composes with the jit train step.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-
 
 BLOCK = 256
 

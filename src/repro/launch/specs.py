@@ -8,7 +8,6 @@ import jax.numpy as jnp
 
 from ..models import init_cache, init_params
 from ..models.config import SHAPES, ArchConfig
-from ..optim import adamw_init
 
 
 def abstract_train_state(cfg: ArchConfig, optimizer: str = "adamw"):

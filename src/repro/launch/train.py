@@ -16,7 +16,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from ..checkpoint import CheckpointManager, latest_step, restore
 from ..configs import get_config

@@ -17,6 +17,7 @@ __all__ = [
     "forward",
     "init_cache",
     "init_params",
+    "pad_cache",
     "param_count",
     "prefill",
 ]

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..distributed.constraints import current_mesh, logical_axes, tp_size
+from ..distributed.constraints import current_mesh, logical_axes
 from .common import dense_init, split_keys
 
 

@@ -22,7 +22,6 @@ from .common import dense_init, split_keys
 def mamba_params(key, cfg, dtype):
     d, di, N, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_, cfg.ssm_conv
     ks = split_keys(key, 7)
-    import numpy as np
 
     return {
         "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
@@ -65,7 +64,6 @@ def _causal_conv(p, u, K):
 
 def mamba_forward(cfg, p, x):
     """Parallel (training/prefill) path. x: (b, s, d) -> (b, s, d)."""
-    N = cfg.ssm_state
     A = -jnp.exp(p["A_log"])  # (di, N)
     xi, z = _ssm_inputs(cfg, p, x)
     u = _causal_conv(p, xi, cfg.ssm_conv)  # (b, s, di)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from ..models import decode_step as model_decode
-from ..models import forward, init_cache, init_params, prefill
+from ..models import forward, init_params, prefill
 from ..optim import adamw_init, adamw_update, clip_by_global_norm
 from ..optim.adamw import AdamWConfig
 from ..optim.quantized import qadamw_init, qadamw_update

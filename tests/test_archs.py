@@ -15,7 +15,6 @@ from repro.models import (
     init_cache,
     init_params,
     pad_cache,
-    param_count,
     prefill,
 )
 from repro.models.frontends import fake_audio_embeds, fake_img_embeds

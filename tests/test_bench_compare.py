@@ -1,0 +1,133 @@
+"""The CI benchmark-regression gate (benchmarks/compare.py) must actually
+gate: an injected 2x regression fails, noise inside the threshold passes,
+and malformed/missing inputs fail loudly rather than reading as green."""
+
+import json
+
+import pytest
+
+from benchmarks.compare import compare_files, compare_rows, main
+
+
+def _payload(rows):
+    return {"bench": "test", "unit": "us",
+            "rows": [{"suite": s, "name": n, "value": v, "derived": ""}
+                     for (s, n), v in rows.items()]}
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(_payload(rows)))
+    return str(p)
+
+
+BASE = {
+    ("vdp", "b16/loop_time"): 100.0,
+    ("dispatch", "compiled/solves_per_sec"): 1000.0,
+    ("vdp", "joint_vs_parallel_step_ratio"): 5.0,  # informational
+    ("vdp", "_suite_wall_s"): 30.0,  # bookkeeping
+}
+
+
+class TestRules:
+    def test_within_threshold_passes(self):
+        fresh = {
+            ("vdp", "b16/loop_time"): 120.0,  # +20% < 25%
+            ("dispatch", "compiled/solves_per_sec"): 850.0,  # -15%
+            ("vdp", "joint_vs_parallel_step_ratio"): 500.0,  # ungated
+        }
+        failures, n_gated = compare_rows(BASE, fresh, 0.25)
+        assert failures == []
+        assert n_gated == 2
+
+    def test_injected_2x_regression_fails(self):
+        fresh = {
+            ("vdp", "b16/loop_time"): 200.0,  # 2x slower
+            ("dispatch", "compiled/solves_per_sec"): 1000.0,
+        }
+        failures, _ = compare_rows(BASE, fresh, 0.25)
+        assert len(failures) == 1
+        assert "loop_time" in failures[0] and "100.0% slowdown" in failures[0]
+
+    def test_throughput_halved_fails(self):
+        fresh = {
+            ("vdp", "b16/loop_time"): 100.0,
+            ("dispatch", "compiled/solves_per_sec"): 500.0,  # 2x fewer
+        }
+        failures, _ = compare_rows(BASE, fresh, 0.25)
+        assert len(failures) == 1
+        assert "solves_per_sec" in failures[0]
+
+    def test_direction_awareness(self):
+        """Getting *faster* must never fail, in either row family."""
+        fresh = {
+            ("vdp", "b16/loop_time"): 1.0,
+            ("dispatch", "compiled/solves_per_sec"): 1e6,
+        }
+        failures, _ = compare_rows(BASE, fresh, 0.25)
+        assert failures == []
+
+    def test_missing_gated_row_fails(self):
+        fresh = {("vdp", "b16/loop_time"): 100.0}
+        failures, _ = compare_rows(BASE, fresh, 0.25)
+        assert any("missing" in f for f in failures)
+
+    def test_nonpositive_value_fails(self):
+        failures, _ = compare_rows(
+            {("s", "x_time"): 10.0}, {("s", "x_time"): 0.0}, 0.25)
+        assert any("non-positive" in f for f in failures)
+
+
+class TestFilesAndCli:
+    def test_file_pair_roundtrip(self, tmp_path):
+        base = _write(tmp_path, "base.json", BASE)
+        good = _write(tmp_path, "good.json", BASE)
+        assert compare_files(base, good, 0.25) == []
+
+    def test_cli_exit_codes(self, tmp_path):
+        base = _write(tmp_path, "base.json", BASE)
+        good = _write(tmp_path, "good.json", BASE)
+        bad = _write(tmp_path, "bad.json",
+                     {**BASE, ("vdp", "b16/loop_time"): 200.0})
+        assert main([base, good]) == 0
+        assert main([base, bad]) == 1
+        # threshold is adjustable: 2x passes a 150% gate
+        assert main([base, bad, "--threshold", "1.5"]) == 0
+
+    def test_cli_update_rewrites_baseline(self, tmp_path):
+        base = _write(tmp_path, "base.json", BASE)
+        bad = _write(tmp_path, "bad.json",
+                     {**BASE, ("vdp", "b16/loop_time"): 200.0})
+        assert main([base, bad]) == 1
+        assert main([base, bad, "--update"]) == 0
+        assert main([base, bad]) == 0
+
+    def test_unreadable_and_unrelated_files_fail(self, tmp_path):
+        base = _write(tmp_path, "base.json", BASE)
+        missing = str(tmp_path / "nope.json")
+        assert compare_files(base, missing, 0.25) != []
+        # two files with no gated rows in common must not silently pass
+        other = _write(tmp_path, "other.json",
+                       {("x", "some_count"): 1.0})
+        fails = compare_files(other, other, 0.25)
+        assert any("no gated rows" in f for f in fails)
+
+    def test_odd_pair_count_rejected(self, tmp_path):
+        base = _write(tmp_path, "base.json", BASE)
+        with pytest.raises(SystemExit):
+            main([base])
+
+
+class TestRunnerJsonDefaults:
+    def test_suite_named_defaults_do_not_collide(self):
+        from benchmarks.run import _DEFAULT_JSON, _SUITE_CHOICES
+
+        assert set(_DEFAULT_JSON) == set(_SUITE_CHOICES)
+        # the historical headline name is kept for all/table3...
+        assert _DEFAULT_JSON["all"] == _DEFAULT_JSON["table3"] == "BENCH_solver.json"
+        # ...and every other suite gets its own artifact
+        others = {s: p for s, p in _DEFAULT_JSON.items()
+                  if s not in ("all", "table3")}
+        assert all(p == f"BENCH_{s}.json" for s, p in others.items())
+        assert len(set(others.values())) == len(others)
+        assert "serving" in _SUITE_CHOICES

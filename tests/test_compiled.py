@@ -32,7 +32,6 @@ from repro.core import (
     make_solver,
     pid_controller,
     sharded_solve,
-    solve_ivp,
 )
 
 
@@ -377,7 +376,7 @@ class TestCompiledPropertyHypothesis:
     x batch shape x tolerance mix (runs when hypothesis is installed)."""
 
     def test_property(self):
-        hypothesis = pytest.importorskip("hypothesis")
+        pytest.importorskip("hypothesis")
         from hypothesis import given, settings, strategies as st
 
         configs = _mixed_configs()

@@ -8,7 +8,6 @@ import pytest
 from repro.core import (
     AutoDiffAdjoint,
     BacksolveAdjoint,
-    FixedController,
     ODETerm,
     ScanAdjoint,
     Status,

@@ -15,7 +15,6 @@ from repro.core import (
     AutoDiffAdjoint,
     BacksolveAdjoint,
     Event,
-    ScanAdjoint,
     Status,
     make_solver,
     solve_ivp,

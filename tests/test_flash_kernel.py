@@ -1,7 +1,6 @@
 """Pallas flash-attention forward kernel vs the quadratic jnp oracle
 (interpret mode -- the TPU-target kernel's correctness gate)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Per-kernel allclose validation: Pallas (interpret mode) vs the pure-jnp
 oracles in kernels/ref.py, with shape/dtype sweeps and hypothesis properties."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

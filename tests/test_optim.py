@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
 from repro.optim.quantized import (

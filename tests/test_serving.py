@@ -1,0 +1,410 @@
+"""The shape-bucketed solve service: batching must be a pure optimization.
+
+The serving layer's one correctness obligation: a request's result must be
+exactly what solving that request alone would have produced -- padding,
+bucketing, batch composition and flush timing are invisible.  Explicit
+steppers make that testable bitwise in the final-state regime (the solver's
+batch-invariance contract); the dense regime agrees to rounding (XLA's
+batched interpolant contractions are batch-size dependent).  Plus the
+queueing policies: flush-on-size, flush-on-deadline, bounded backlog,
+out-of-order completion across buckets, prewarmed cache accounting.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoDiffAdjoint,
+    CompiledSolver,
+    SolveRequest,
+    SolveService,
+    Solution,
+    Status,
+    Stepper,
+    next_pow2,
+    solve_ivp,
+)
+
+
+def decay(t, y, args):
+    return -y * args
+
+
+def make_requests(n, rng, feat=3, n_eval=None, f=decay, method=None):
+    """n mixed-value requests of one shape class."""
+    reqs = []
+    for _ in range(n):
+        reqs.append(SolveRequest(
+            f=f,
+            y0=jnp.asarray(rng.uniform(0.5, 1.5, (feat,)), jnp.float32),
+            t0=float(rng.uniform(0.0, 0.2)),
+            t1=float(rng.uniform(0.8, 1.2)),
+            t_eval=(None if n_eval is None
+                    else np.linspace(0.1, 0.7, n_eval, dtype=np.float32)),
+            args=jnp.asarray(rng.uniform(0.5, 2.0, (feat,)), jnp.float32),
+            rtol=float(rng.choice([1e-3, 1e-4, 1e-5])),
+            method=method,
+        ))
+    return reqs
+
+
+def solve_direct(req, t_eval_padded=None, dense=False):
+    """The reference: this request alone, b=1, through CompiledSolver."""
+    solver = CompiledSolver(AutoDiffAdjoint(Stepper("dopri5")), donate=False)
+    f32 = jnp.float32
+    kw = dict(
+        t_start=jnp.asarray([req.t0], f32),
+        t_end=jnp.asarray([req.t1], f32),
+        args=None if req.args is None else req.args[None],
+        rtol=jnp.asarray([req.rtol if req.rtol is not None else 1e-3], f32),
+        atol=jnp.asarray([req.atol if req.atol is not None else 1e-6], f32),
+    )
+    t_eval = None
+    if dense:
+        grid = req.t_eval if t_eval_padded is None else t_eval_padded
+        t_eval = jnp.asarray(grid, f32)[None]
+    return solver.solve(req.f, req.y0[None], t_eval, **kw)
+
+
+class TestBitwiseAgainstDirectSolves:
+    def test_padded_bucket_matches_direct_bitwise_final_state(self):
+        """5 mixed requests pad to a bucket of 8; every per-request result is
+        bit-for-bit the solo CompiledSolver solve (explicit stepper)."""
+        rng = np.random.default_rng(0)
+        svc = SolveService(max_batch=8, max_delay=None, default_method="dopri5")
+        reqs = make_requests(5, rng)
+        futures = [svc.submit(r) for r in reqs]
+        svc.flush()
+        assert svc.stats()["n_pad_rows"] == 3
+        for req, fut in zip(reqs, futures):
+            got = fut.result()
+            ref = solve_direct(req)
+            np.testing.assert_array_equal(np.asarray(got.ys), np.asarray(ref.ys))
+            np.testing.assert_array_equal(np.asarray(got.ts), np.asarray(ref.ts))
+            np.testing.assert_array_equal(np.asarray(got.status),
+                                          np.asarray(ref.status))
+            # n_f_evals is whole-batch overhang accounting (instances that
+            # finish early keep counting while bucket-mates run) and is
+            # composition-dependent by design; the per-instance-masked
+            # counters must match exactly.
+            for name in ("n_steps", "n_accepted"):
+                np.testing.assert_array_equal(np.asarray(got.stats[name]),
+                                              np.asarray(ref.stats[name]))
+
+    def test_dense_bucket_matches_direct_to_rounding(self):
+        """Dense-output requests with *different grid lengths* share a padded
+        length class; values agree with solo solves to rounding and the step
+        pattern exactly (the trajectory is identical, only the interpolant
+        contraction layout differs with batch size)."""
+        rng = np.random.default_rng(1)
+        svc = SolveService(max_batch=8, max_delay=None, default_method="dopri5")
+        reqs = [make_requests(1, rng, n_eval=n)[0] for n in (3, 5, 6, 8)]
+        futures = [svc.submit(r) for r in reqs]
+        svc.flush()
+        for req, fut in zip(reqs, futures):
+            got = fut.result()
+            n = req.t_eval.shape[0]
+            assert got.ts.shape == (1, n)
+            assert got.ys.shape == (1, n, 3)
+            np.testing.assert_array_equal(np.asarray(got.ts)[0], req.t_eval)
+            # the same request solved alone on its *padded* grid
+            cls = next_pow2(n)
+            padded = np.concatenate(
+                [req.t_eval, np.full(cls - n, req.t_eval[-1], np.float32)])
+            ref = solve_direct(req, t_eval_padded=padded, dense=True)
+            np.testing.assert_allclose(np.asarray(got.ys),
+                                       np.asarray(ref.ys)[:, :n],
+                                       rtol=1e-6, atol=1e-7)
+            np.testing.assert_array_equal(np.asarray(got.stats["n_steps"]),
+                                          np.asarray(ref.stats["n_steps"]))
+
+    def test_pytree_state_requests(self):
+        """PyTree y0 round-trips: the served solution keeps the caller's
+        structure and matches the batched driver solve."""
+        def f(t, y, args):
+            return {"a": -y["a"], "b": 2.0 * y["b"]}
+
+        rng = np.random.default_rng(2)
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        y0s = [{"a": jnp.asarray(rng.uniform(1, 2, (2,)), jnp.float32),
+                "b": jnp.asarray(rng.uniform(1, 2), jnp.float32)}
+               for _ in range(3)]
+        futures = [svc.submit(SolveRequest(f=f, y0=y0, t0=0.0, t1=1.0))
+                   for y0 in y0s]
+        svc.flush()
+        for y0, fut in zip(y0s, futures):
+            sol = fut.result()
+            assert set(sol.ys) == {"a", "b"}
+            assert sol.ys["a"].shape == (1, 2)
+            assert sol.ys["b"].shape == (1,)
+            ref = solve_ivp(f, {"a": y0["a"][None], "b": y0["b"][None]}, None,
+                            t_start=0.0, t_end=1.0, method="dopri5")
+            np.testing.assert_allclose(sol.ys["a"], np.asarray(ref.ys["a"]),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(sol.ys["b"], np.asarray(ref.ys["b"]),
+                                       rtol=1e-6)
+
+
+class TestQueueingPolicies:
+    def test_flush_on_size(self):
+        rng = np.random.default_rng(3)
+        svc = SolveService(max_batch=4, max_delay=None)
+        futures = [svc.submit(r) for r in make_requests(4, rng, method="dopri5")]
+        # the 4th submit hit max_batch: executed synchronously, nothing queued
+        assert all(f.done() for f in futures)
+        st = svc.stats()
+        assert st["queue_depth"] == 0
+        assert st["n_size_flushes"] == 1
+        assert st["n_batches"] == 1
+        assert st["n_pad_rows"] == 0
+
+    def test_out_of_order_completion_across_buckets(self):
+        """A bucket that fills flushes immediately even while an older,
+        unrelated bucket is still queued."""
+        rng = np.random.default_rng(4)
+        svc = SolveService(max_batch=2, max_delay=None)
+        slow = svc.submit(make_requests(1, rng, feat=5, method="dopri5")[0])
+        fast = [svc.submit(r) for r in make_requests(2, rng, feat=2,
+                                                     method="dopri5")]
+        assert all(f.done() for f in fast), "full bucket must flush eagerly"
+        assert not slow.done(), "half-full bucket must keep waiting"
+        svc.flush()
+        assert slow.done()
+        assert bool(slow.result().success.all())
+
+    def test_flush_on_deadline(self):
+        now = [0.0]
+        rng = np.random.default_rng(5)
+        svc = SolveService(max_batch=8, max_delay=1.0, clock=lambda: now[0])
+        fut = svc.submit(make_requests(1, rng, method="dopri5")[0])
+        assert svc.poll() == 0 and not fut.done()
+        now[0] = 0.99
+        assert svc.poll() == 0 and not fut.done()
+        now[0] = 1.0
+        assert svc.poll() == 1 and fut.done()
+        assert svc.stats()["n_deadline_flushes"] == 1
+        # a later submit triggers the deadline sweep itself
+        f2 = svc.submit(make_requests(1, rng, method="dopri5")[0])
+        now[0] = 2.5
+        f3 = svc.submit(make_requests(1, rng, feat=7, method="dopri5")[0])
+        assert f2.done(), "submit must deadline-flush other buckets"
+        assert not f3.done()
+
+    def test_bounded_queue_drains(self):
+        rng = np.random.default_rng(6)
+        svc = SolveService(max_batch=8, max_delay=None, max_queue=8)
+        futures = [svc.submit(r) for r in make_requests(7, rng, method="dopri5")]
+        f8 = svc.submit(make_requests(1, rng, feat=2, method="dopri5")[0])
+        assert not f8.done() and svc.stats()["queue_depth"] == 8
+        # the 9th submit finds the backlog full and drains everything first
+        f9 = svc.submit(make_requests(1, rng, feat=4, method="dopri5")[0])
+        assert all(f.done() for f in futures) and f8.done()
+        assert not f9.done()
+        assert svc.stats()["queue_depth"] == 1
+
+    def test_deadline_sweep_only_scans_waiting_buckets(self):
+        """The per-submit deadline sweep must not grow with the number of
+        shape classes ever served -- only buckets with queued work are
+        scanned (a long-lived service sees a long tail of drained classes)."""
+        rng = np.random.default_rng(12)
+        svc = SolveService(max_batch=2, max_delay=1.0, clock=lambda: 0.0)
+        for feat in range(2, 8):  # six classes, each filled and drained
+            [svc.submit(r) for r in make_requests(2, rng, feat=feat,
+                                                  method="dopri5")]
+        assert svc.stats()["n_buckets"] == 6
+        assert len(svc._waiting) == 0, "drained buckets must leave the sweep set"
+        pending = svc.submit(make_requests(1, rng, feat=2, method="dopri5")[0])
+        assert list(svc._waiting) == [pending._bucket.key]
+        svc.flush()
+        assert len(svc._waiting) == 0 and pending.done()
+
+    def test_result_flush_semantics(self):
+        rng = np.random.default_rng(7)
+        svc = SolveService(max_batch=8, max_delay=None)
+        fut = svc.submit(make_requests(1, rng, method="dopri5")[0])
+        with pytest.raises(RuntimeError, match="still queued"):
+            fut.result(flush=False)
+        sol = fut.result()  # flushes its own bucket
+        assert bool(sol.success.all())
+
+    def test_failed_batch_delivers_error_and_service_survives(self):
+        def bad(t, y, args):
+            raise RuntimeError("boom")  # dies at trace time
+
+        rng = np.random.default_rng(8)
+        svc = SolveService(max_batch=4, max_delay=None)
+        fut = svc.submit(SolveRequest(f=bad, y0=jnp.ones((3,), jnp.float32),
+                                      t0=0.0, t1=1.0))
+        with pytest.raises(Exception):
+            fut.result()
+        assert svc.stats()["n_failed_batches"] == 1
+        ok = svc.submit(make_requests(1, rng, method="dopri5")[0])
+        assert bool(ok.result().success.all())
+
+
+class TestPrewarm:
+    def test_prewarm_compiles_every_class_and_flushes_hit(self):
+        rng = np.random.default_rng(9)
+        svc = SolveService(max_batch=8, max_delay=None)
+        example = make_requests(1, rng, method="dopri5")[0]
+        assert svc.prewarm(example) == 4  # classes 1, 2, 4, 8
+        assert svc.prewarm(example) == 0  # idempotent
+        base = svc.stats()
+        assert base["cache_misses"] == 4 and base["cache_hits"] == 0
+
+        for n in (1, 2, 3, 8):  # classes 1, 2, 4 (padded), 8
+            futures = [svc.submit(r) for r in make_requests(n, rng,
+                                                            method="dopri5")]
+            svc.flush()
+            assert all(bool(f.result().success.all()) for f in futures)
+        st = svc.stats()
+        assert st["cache_misses"] == 4, "prewarmed traffic must never compile"
+        assert st["cache_hits"] == 4
+        assert st["n_programs"] == 4
+
+    def test_numpy_requests_share_buckets_and_prewarm_with_jnp(self):
+        """Dtypes canonicalize at submit: a NumPy float64 request (NumPy's
+        default dtype) must hit the same bucket -- and the same prewarmed
+        program -- as the float32 jnp request of the same logical shape,
+        because the packed batch is float32 either way (x64 off)."""
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        np_req = SolveRequest(f=decay, y0=np.ones(3), t0=0.0, t1=1.0,
+                              args=np.full(3, 0.5))
+        assert svc.prewarm(np_req, batch_classes=[2]) == 1
+        f1 = svc.submit(np_req)
+        f2 = svc.submit(SolveRequest(f=decay, y0=jnp.ones((3,), jnp.float32),
+                                     t0=0.0, t1=1.0,
+                                     args=jnp.full((3,), 0.5, jnp.float32)))
+        svc.flush()
+        st = svc.stats()
+        assert st["n_buckets"] == 1, "dtype canonicalization must not split buckets"
+        assert st["cache_misses"] == 1 and st["cache_hits"] == 1, \
+            "the prewarmed program must serve the flush without tracing"
+        np.testing.assert_array_equal(np.asarray(f1.result().ys),
+                                      np.asarray(f2.result().ys))
+        assert f1.result().ys.dtype == np.float32
+
+    def test_unwarmed_class_counts_a_miss(self):
+        rng = np.random.default_rng(10)
+        svc = SolveService(max_batch=8, max_delay=None)
+        example = make_requests(1, rng, method="dopri5")[0]
+        svc.prewarm(example, batch_classes=[4])
+        [svc.submit(r) for r in make_requests(2, rng, method="dopri5")]
+        svc.flush()
+        st = svc.stats()
+        assert st["cache_misses"] == 2  # prewarm(b=4) + cold b=2 class
+        with pytest.raises(ValueError, match="batch class"):
+            svc.prewarm(example, batch_classes=[3])
+
+
+class TestValidationAndStats:
+    def test_request_validation(self):
+        svc = SolveService(max_batch=4, max_delay=None)
+        with pytest.raises(ValueError, match="1-D"):
+            svc.submit(SolveRequest(f=decay, y0=jnp.ones((2, 2)), t0=0, t1=1))
+        with pytest.raises(NotImplementedError, match="PyTree"):
+            svc.submit(SolveRequest(f=decay, y0={"a": jnp.ones((2,))},
+                                    t0=0, t1=1, args=jnp.ones(())))
+        with pytest.raises(ValueError, match="rtol must be scalar"):
+            svc.submit(SolveRequest(f=decay, y0=jnp.ones((2,)), t0=0, t1=1,
+                                    rtol=np.ones((2,))))
+        with pytest.raises(ValueError, match="1-D grid"):
+            svc.submit(SolveRequest(f=decay, y0=jnp.ones((2,)), t0=0, t1=1,
+                                    t_eval=np.zeros((2, 2))))
+        with pytest.raises(ValueError, match="power of two"):
+            SolveService(max_batch=6)
+
+    def test_stats_surface_builds_on_registry(self):
+        """The service aggregates whatever the per-instance statistics
+        registry recorded -- padding rows excluded."""
+        rng = np.random.default_rng(11)
+        svc = SolveService(max_batch=4, max_delay=None)
+        reqs = make_requests(3, rng, method="dopri5")
+        futures = [svc.submit(r) for r in reqs]
+        svc.flush()
+        st = svc.stats()
+        assert st["pad_waste"] == pytest.approx(0.25)
+        assert st["solves_per_sec"] > 0
+        expected_steps = sum(float(f.result().stats["n_steps"].sum())
+                             for f in futures)
+        assert st["solver/n_steps"] == expected_steps
+        assert st["solver/n_f_evals"] > 0
+
+    def test_next_pow2(self):
+        assert [next_pow2(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+        with pytest.raises(ValueError):
+            next_pow2(0)
+
+
+class TestSolutionViews:
+    def test_slice_batch_with_events(self):
+        from repro.core import Event
+
+        def fall(t, y, args):
+            return jnp.stack((y[..., 1], jnp.full_like(y[..., 1], -9.81)),
+                             axis=-1)
+
+        y0 = jnp.asarray([[10.0, 0.0], [20.0, 0.0], [5.0, 1.0]], jnp.float32)
+        ev = Event(lambda t, y, args: y[0], terminal=True, direction=-1.0)
+        sol = solve_ivp(fall, y0, None, t_start=0.0, t_end=10.0, events=ev)
+        part = sol.slice_batch(slice(1, 3))
+        assert part.ys.shape == (2, 2)
+        assert part.event_t.shape == (2, 1)
+        np.testing.assert_array_equal(np.asarray(part.event_t),
+                                      np.asarray(sol.event_t)[1:3])
+        np.testing.assert_array_equal(np.asarray(part.stats["n_steps"]),
+                                      np.asarray(sol.stats["n_steps"])[1:3])
+
+    def test_truncate_eval_rejects_final_state(self):
+        sol = solve_ivp(decay, jnp.ones((2, 2)), None, t_start=0.0, t_end=1.0,
+                        args=1.0)
+        with pytest.raises(ValueError, match="dense-output"):
+            sol.truncate_eval(1)
+
+    def test_views_are_plain_dataclass_copies(self):
+        sol = solve_ivp(decay, jnp.ones((3, 2)), jnp.linspace(0, 1, 6),
+                        args=1.0)
+        view = sol.slice_batch(slice(0, 2)).truncate_eval(4)
+        assert isinstance(view, Solution)
+        assert view.ys.shape == (2, 4, 2)
+        assert dataclasses.is_dataclass(view)
+        np.testing.assert_array_equal(np.asarray(view.ys),
+                                      np.asarray(sol.ys)[:2, :4])
+
+
+class TestRandomRequestMixes:
+    """Hypothesis property: any mix of shapes/values/flush order serves every
+    request with its solo solution."""
+
+    def test_random_mix_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=10, deadline=None)
+        @given(seed=st.integers(0, 2**30),
+               n=st.integers(1, 12),
+               max_batch=st.sampled_from([2, 4, 8]))
+        def run(seed, n, max_batch):
+            rng = np.random.default_rng(seed)
+            svc = SolveService(max_batch=max_batch, max_delay=None,
+                               default_method="dopri5")
+            reqs = [make_requests(1, rng,
+                                  feat=int(rng.choice([2, 3, 4])))[0]
+                    for _ in range(n)]
+            futures = [svc.submit(r) for r in reqs]
+            svc.flush()
+            for req, fut in zip(reqs, futures):
+                got = fut.result()
+                ref = solve_direct(req)
+                assert np.all(np.asarray(got.status)
+                              == Status.SUCCESS.value)
+                np.testing.assert_array_equal(np.asarray(got.ys),
+                                              np.asarray(ref.ys))
+                np.testing.assert_array_equal(
+                    np.asarray(got.stats["n_steps"]),
+                    np.asarray(ref.stats["n_steps"]))
+
+        run()

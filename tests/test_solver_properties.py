@@ -1,6 +1,5 @@
 """Hypothesis property tests on solver invariants (system-level)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

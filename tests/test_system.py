@@ -3,7 +3,6 @@ tolerance, gradient compression, the HLO cost analyzer, and a short real
 training run that must reduce loss."""
 
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -176,10 +175,22 @@ class TestTraining:
         from repro.launch.train import run
 
         class A:  # argparse stand-in
-            arch = "stablelm-3b"; reduced = True; steps = 14; batch = 4; seq = 64
-            lr = 1e-3; seed = 0; model_parallel = 1; fsdp = False; remat = False
-            ode_depth = False; ckpt_dir = str(tmp_path); ckpt_every = 5
-            step_timeout = 600.0; log_every = 100; max_restarts = 0
+            arch = "stablelm-3b"
+            reduced = True
+            steps = 14
+            batch = 4
+            seq = 64
+            lr = 1e-3
+            seed = 0
+            model_parallel = 1
+            fsdp = False
+            remat = False
+            ode_depth = False
+            ckpt_dir = str(tmp_path)
+            ckpt_every = 5
+            step_timeout = 600.0
+            log_every = 100
+            max_restarts = 0
 
         out1 = run(A())
         assert out1["losses"][-1] < out1["losses"][0]
