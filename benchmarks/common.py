@@ -37,6 +37,28 @@ def timed(fn, *args, repeats=3, warmup=1):
     return float(np.mean(ts)), float(np.std(ts))
 
 
+def calibration_us(repeats: int = 5) -> float:
+    """Wall time (microseconds) of a fixed jitted reference workload.
+
+    Stored alongside every benchmark payload so ``compare.py`` can normalize
+    a fresh run against a baseline recorded on a DIFFERENT machine: the gate
+    compares ``fresh / (fresh_cal / base_cal)`` instead of raw wall time, so
+    a uniformly slower CI box does not trip the regression threshold.  The
+    workload (a chain of small matmuls) is deliberately solver-free: it moves
+    with the machine/XLA, not with this repo's code under test.
+    """
+    x = jnp.eye(64, dtype=jnp.float32) + 0.01
+
+    @jax.jit
+    def work(m):
+        for _ in range(32):
+            m = jnp.tanh(m @ m) + 0.1
+        return m
+
+    mean_s, _ = timed(work, x, repeats=repeats, warmup=2)
+    return float(mean_s * 1e6)
+
+
 def joint_wrap(f, batch, feat):
     """Wrap batched dynamics f into a SINGLE-instance joint problem
     (torchdiffeq-style: shared step size and error estimate)."""

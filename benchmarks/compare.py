@@ -1,7 +1,7 @@
 """Benchmark-regression gate: diff fresh BENCH_*.json runs against baselines.
 
   python -m benchmarks.compare BASELINE FRESH [BASELINE FRESH ...]
-      [--threshold 0.25] [--update]
+      [--threshold 0.25] [--normalize] [--update]
 
 Every ``(suite, name)`` row present in both files is checked with a
 direction-aware rule:
@@ -16,6 +16,14 @@ noisy, and the gate exists to catch real regressions -- a dispatch-cache
 breakage turns a solves/sec row into a cliff, not a wobble.  Rows missing
 from the fresh run (or baselines with no comparable rows at all) fail the
 gate: a silently dropped metric must not read as green.
+
+``--normalize`` (or ``BENCH_COMPARE_NORMALIZE=1``) divides the fresh wall
+times by the ratio of the two payloads' ``calibration_us`` fields (a fixed
+solver-free jitted workload recorded at ``--json`` time; see
+``benchmarks.common.calibration_us``) before gating, so a baseline committed
+from one machine can gate runs on uniformly faster/slower hardware.  Pairs
+where either payload lacks the field fall back to raw comparison with a
+warning -- normalization must never silently weaken the gate.
 
 ``--update`` rewrites each baseline from its fresh run instead of comparing
 (use after an intentional perf change, then commit the new baselines).
@@ -55,8 +63,14 @@ def compare_rows(
     base: dict[tuple[str, str], float],
     fresh: dict[tuple[str, str], float],
     threshold: float,
+    scale: float = 1.0,
 ) -> tuple[list[str], int]:
-    """Returns (failure messages, number of rows actually gated)."""
+    """Returns (failure messages, number of rows actually gated).
+
+    ``scale`` is the machine-speed ratio fresh_cal/base_cal: fresh wall times
+    are divided by it (and fresh throughputs multiplied) before gating, so a
+    uniformly slower fresh machine compares fairly against the baseline.
+    ``scale=1.0`` (the default) is the raw comparison."""
     failures = []
     n_gated = 0
     for key, base_v in sorted(base.items()):
@@ -75,27 +89,58 @@ def compare_rows(
             )
             continue
         if direction == "lower":
-            slowdown = fresh_v / base_v - 1.0
+            slowdown = (fresh_v / scale) / base_v - 1.0
         else:
-            slowdown = base_v / fresh_v - 1.0
+            slowdown = base_v / (fresh_v * scale) - 1.0
         if slowdown > threshold:
             failures.append(
                 f"{key[0]}/{key[1]}: {slowdown * 100:.1f}% slowdown "
                 f"(base={base_v:.4g}, fresh={fresh_v:.4g}, "
-                f"{direction}-is-better, threshold {threshold * 100:.0f}%)"
+                f"{direction}-is-better, threshold {threshold * 100:.0f}%"
+                + (f", machine scale {scale:.3f}" if scale != 1.0 else "")
+                + ")"
             )
     return failures, n_gated
 
 
-def compare_files(base_path: str, fresh_path: str, threshold: float) -> list[str]:
+def calibration_scale(base_payload: dict, fresh_payload: dict) -> tuple[float, str | None]:
+    """The machine-speed ratio fresh/base from the payloads' calibration
+    fields, clamped to a sane band.  Returns ``(scale, warning_or_None)``;
+    on any problem the scale is 1.0 (raw comparison) with a warning."""
+    base_cal = base_payload.get("calibration_us")
+    fresh_cal = fresh_payload.get("calibration_us")
+    if base_cal is None or fresh_cal is None:
+        return 1.0, "calibration_us missing from payload; comparing raw values"
+    try:
+        scale = float(fresh_cal) / float(base_cal)
+    except (TypeError, ValueError, ZeroDivisionError):
+        return 1.0, "calibration_us malformed; comparing raw values"
+    if not (0.05 <= scale <= 20.0):
+        # A 20x "machine speed" difference is not a machine: it's a broken
+        # calibration run.  Refuse to normalize rather than wash out a
+        # genuine cliff.
+        return 1.0, f"calibration ratio {scale:.3g} out of range; comparing raw values"
+    return scale, None
+
+
+def compare_files(
+    base_path: str, fresh_path: str, threshold: float, normalize: bool = False
+) -> list[str]:
     try:
         with open(base_path) as fh:
-            base = _rows(json.load(fh))
+            base_payload = json.load(fh)
         with open(fresh_path) as fh:
-            fresh = _rows(json.load(fh))
+            fresh_payload = json.load(fh)
+        base = _rows(base_payload)
+        fresh = _rows(fresh_payload)
     except (OSError, KeyError, ValueError, TypeError) as e:
         return [f"{base_path} vs {fresh_path}: unreadable ({e!r})"]
-    failures, n_gated = compare_rows(base, fresh, threshold)
+    scale = 1.0
+    if normalize:
+        scale, warning = calibration_scale(base_payload, fresh_payload)
+        if warning:
+            print(f"    warning: {base_path} vs {fresh_path}: {warning}")
+    failures, n_gated = compare_rows(base, fresh, threshold, scale=scale)
     if n_gated == 0 and not failures:
         return [f"{base_path} vs {fresh_path}: no gated rows in common -- "
                 "wrong file pairing?"]
@@ -110,6 +155,10 @@ def main(argv=None) -> int:
                         default=float(os.environ.get("BENCH_COMPARE_THRESHOLD",
                                                      "0.25")),
                         help="allowed fractional slowdown (default 0.25)")
+    parser.add_argument("--normalize", action="store_true",
+                        default=os.environ.get("BENCH_COMPARE_NORMALIZE", "") == "1",
+                        help="normalize fresh values by the calibration_us "
+                             "ratio of the two payloads (cross-machine gate)")
     parser.add_argument("--update", action="store_true",
                         help="overwrite each BASELINE with its FRESH run")
     opts = parser.parse_args(argv)
@@ -125,7 +174,8 @@ def main(argv=None) -> int:
 
     all_failures = []
     for base_path, fresh_path in pairs:
-        failures = compare_files(base_path, fresh_path, opts.threshold)
+        failures = compare_files(base_path, fresh_path, opts.threshold,
+                                 normalize=opts.normalize)
         status = "FAIL" if failures else "ok"
         print(f"[{status}] {base_path} vs {fresh_path}")
         for msg in failures:

@@ -20,7 +20,7 @@ import json
 import time
 
 _SUITE_CHOICES = ["all", "table3", "table4", "table5", "fig1", "fig2",
-                  "stiff", "events", "dispatch", "serving"]
+                  "stiff", "events", "dispatch", "serving", "step"]
 
 # Suite-named --json defaults; "all" and the historical headline suite keep
 # the BENCH_solver.json name CI has tracked since PR 1.
@@ -80,6 +80,13 @@ def main() -> None:
         from . import serving_bench
 
         suites.append(("serving", serving_bench.rows))
+    if which == "step":
+        # Not part of "all": compares the fused step megakernel against the
+        # unfused op-per-op path across backends; the interpret-backend rows
+        # are launch-count proxies and take a while.
+        from . import step_bench
+
+        suites.append(("step", step_bench.rows))
     if which == "stiff":
         # Not part of "all": the explicit-solver baselines grind at their
         # stability limit by design (200k-step budgets).  Run explicitly, or
@@ -101,7 +108,12 @@ def main() -> None:
                         "derived": ""})
 
     if json_path:
-        payload = {"bench": which, "unit": "us for *_time rows", "rows": records}
+        from .common import calibration_us
+
+        # Machine-speed fingerprint: lets compare.py normalize this payload
+        # against a baseline recorded on different hardware (--normalize).
+        payload = {"bench": which, "unit": "us for *_time rows",
+                   "calibration_us": calibration_us(), "rows": records}
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {len(records)} rows to {json_path}", flush=True)

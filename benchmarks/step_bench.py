@@ -1,0 +1,127 @@
+"""Fused-megakernel step benchmark: per-step wall time, fused vs unfused.
+
+The regime is the paper's launch-overhead argument (Sec. 4) taken to the
+kernel level: for small/medium problems the solver loop is bound by *op
+dispatch* -- each unfused step attempt issues ~8 separate registry ops
+(stage accumulations, b_sol/b_err combine, error norm, controller update,
+masked commits, interpolation coefficients), while the fused path issues ONE
+``fused_step_poly`` megakernel per attempt (zero vf launches: the linear
+dynamics fuse into the kernel as a closed-form polynomial).
+
+Two backends, same numerics:
+
+  ref        pure-jnp ops inside one jitted loop.  XLA:CPU already fuses
+             across op boundaries, so fused ~ unfused here (sanity rows).
+  interpret  every registry op is a Pallas call in interpret mode, so per-op
+             invocation overhead dominates exactly like kernel-launch
+             overhead does on an accelerator.  The fused/unfused ratio on
+             these rows is the launch-count proxy the tentpole targets
+             (acceptance bar: >= 2x steps/sec on at least one point).
+
+Problem: exponential decay ``dy/dt = -y`` via ``polynomial_term``, dopri5 +
+PID controller, final-state regime (dense output off), jitted end to end.
+
+Usage: python -m benchmarks.step_bench [--json [PATH]]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AutoDiffAdjoint, Stepper, pid_controller, polynomial_term
+from repro.kernels import ops
+
+from .common import timed
+
+# (backend, batch, features): the ref rows sweep the paper's small-problem
+# grid; the interpret rows stay small because interpret mode is slow by
+# design (it is the launch-overhead proxy, not a production path).
+POINTS = (
+    ("ref", 16, 16),
+    ("ref", 64, 64),
+    ("ref", 256, 256),
+    ("interpret", 16, 16),
+)
+
+
+def _make_solve(fused: bool):
+    solver = AutoDiffAdjoint(
+        Stepper("dopri5"), pid_controller(),
+        rtol=1e-4, atol=1e-6, dense=False, fused=fused,
+    )
+    term = polynomial_term(0.0, -1.0)
+
+    @jax.jit
+    def run(y0):
+        return solver.solve(term, y0, t_start=0.0, t_end=2.0)
+
+    return run
+
+
+def _bench_point(backend: str, b: int, f: int, fused: bool, repeats: int):
+    ops.set_backend(backend)
+    run = _make_solve(fused)
+    y0 = jnp.asarray(
+        np.linspace(0.5, 1.5, b * f, dtype=np.float32).reshape(b, f)
+    )
+    sol = jax.block_until_ready(run(y0))
+    # Loop iterations: the batch steps in lockstep, so the longest-running
+    # instance's step count is the number of loop bodies executed.
+    n_loop = int(np.max(np.asarray(sol.stats["n_steps"])))
+    if fused:
+        assert "n_fused_steps" in sol.stats, "fused path did not engage"
+    mean_s, _ = timed(run, y0, repeats=repeats)
+    step_us = mean_s / n_loop * 1e6
+    return step_us, n_loop / mean_s, n_loop
+
+
+def rows(repeats: int = 3):
+    prev = ops.backend()
+    try:
+        for backend, b, f in POINTS:
+            tag = f"{backend}_b{b}_f{f}"
+            per_sec = {}
+            for fused in (False, True):
+                label = "fused" if fused else "unfused"
+                step_us, sps, n_loop = _bench_point(backend, b, f, fused, repeats)
+                per_sec[label] = sps
+                yield f"{tag}_{label}_step_time", step_us, f"{n_loop} loop steps"
+                yield f"{tag}_{label}_steps_per_sec", sps, ""
+            yield (
+                f"{tag}_fused_speedup", per_sec["fused"] / per_sec["unfused"],
+                "steps/sec ratio, fused over unfused",
+            )
+    finally:
+        ops.set_backend(prev)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", nargs="?", const="BENCH_step.json", default=None,
+                        metavar="PATH")
+    parser.add_argument("--repeats", type=int, default=3)
+    opts = parser.parse_args()
+
+    records = []
+    print("name,value,derived")
+    for name, v, extra in rows(repeats=opts.repeats):
+        print(f"step/{name},{v},{extra}", flush=True)
+        records.append({"suite": "step", "name": name, "value": v, "derived": extra})
+
+    if opts.json:
+        from .common import calibration_us
+
+        payload = {"bench": "step", "unit": "us for *_time rows",
+                   "calibration_us": calibration_us(), "rows": records}
+        with open(opts.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(records)} rows to {opts.json}")
+
+
+if __name__ == "__main__":
+    main()

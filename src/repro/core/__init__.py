@@ -36,7 +36,15 @@ from .stepper import (
     rk_step,
 )
 from .tableau import TABLEAUS, ButcherTableau, get_tableau
-from .terms import ODETerm, RaveledState, as_term, ravel_state, ravel_term
+from .terms import (
+    ODETerm,
+    PolynomialTerm,
+    RaveledState,
+    as_term,
+    polynomial_term,
+    ravel_state,
+    ravel_term,
+)
 
 __all__ = [
     "AbstractStepper",
@@ -79,8 +87,10 @@ __all__ = [
     "ButcherTableau",
     "get_tableau",
     "ODETerm",
+    "PolynomialTerm",
     "RaveledState",
     "as_term",
+    "polynomial_term",
     "ravel_state",
     "ravel_term",
 ]

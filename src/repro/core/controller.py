@@ -22,6 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops
 from .static import register_static
 
 
@@ -76,6 +77,13 @@ class PIDController(_ControllerStats):
         b3 = self.dcoeff / k
         return b1, b2, b3
 
+    def filter_params(self, k: int) -> tuple[float, ...]:
+        """The controller's static coefficient tuple ``(b1, b2, b3, safety,
+        factor_min, factor_max, dt_min, dt_max)`` -- the compile-time constants
+        the fused step megakernel unrolls into its accept/next-dt tail."""
+        return (*self.betas(k), self.safety, self.factor_min, self.factor_max,
+                self.dt_min, self.dt_max)
+
     def __call__(
         self,
         err_ratio: jax.Array,  # (b,) weighted RMS error ratio of this step
@@ -83,38 +91,20 @@ class PIDController(_ControllerStats):
         state: ControllerState,
         k: int,  # error-estimator order + 1
     ) -> tuple[jax.Array, jax.Array, ControllerState]:
-        """Returns (accept (b,) bool, dt_next (b,) signed, new state)."""
-        dtype = dt.dtype
+        """Returns (accept (b,) bool, dt_next (b,) signed, new state).
+
+        Delegates to ``ops.pid_update``: the SAME expression sequence the
+        fused step megakernel bakes in, so fused and unfused solves make
+        bitwise-identical accept/next-dt decisions.
+        """
         b1, b2, b3 = self.betas(k)
-        # Guard: err_ratio == 0 (exact solve) -> use factor_max.
-        finite = jnp.isfinite(err_ratio)
-        safe_ratio = jnp.where(finite & (err_ratio > 0.0), err_ratio, 1.0)
-        inv = 1.0 / safe_ratio
-
-        factor = (
-            self.safety
-            * inv**b1
-            * state.prev_inv_ratio**b2
-            * state.prev2_inv_ratio**b3
+        accept, dt_next, new_inv, new_inv2 = ops.pid_update(
+            err_ratio, dt, state.prev_inv_ratio, state.prev2_inv_ratio,
+            b1=b1, b2=b2, b3=b3, safety=self.safety,
+            factor_min=self.factor_min, factor_max=self.factor_max,
+            dt_min=self.dt_min, dt_max=self.dt_max,
         )
-        factor = jnp.where(err_ratio == 0.0, self.factor_max, factor)
-        # Non-finite error estimate: treat as a hard reject, halve the step.
-        factor = jnp.where(finite, factor, 0.5)
-        factor = jnp.clip(factor, self.factor_min, self.factor_max)
-
-        accept = finite & (err_ratio <= 1.0)
-        # On rejection never grow the step.
-        factor = jnp.where(accept, factor, jnp.minimum(factor, 1.0))
-
-        mag = jnp.clip(jnp.abs(dt) * factor.astype(dtype), self.dt_min, self.dt_max)
-        dt_next = jnp.sign(dt) * mag
-
-        # Error history advances only on accepted steps (torchode semantics).
-        new_state = ControllerState(
-            prev_inv_ratio=jnp.where(accept, inv, state.prev_inv_ratio),
-            prev2_inv_ratio=jnp.where(accept, state.prev_inv_ratio, state.prev2_inv_ratio),
-        )
-        return accept, dt_next, new_state
+        return accept, dt_next, ControllerState(new_inv, new_inv2)
 
 
 def integral_controller(**kw) -> PIDController:

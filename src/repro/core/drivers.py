@@ -68,6 +68,7 @@ class _Driver:
         events=None,
         event_bisect_iters: int = 30,
         extra_stats: tuple = (),
+        fused: bool = False,
     ):
         self.stepper = AbstractStepper.coerce(stepper)
         self.controller = controller
@@ -80,6 +81,7 @@ class _Driver:
         self.events = normalize_events(events)
         self.event_bisect_iters = event_bisect_iters
         self.extra_stats = tuple(extra_stats)
+        self.fused = bool(fused)
         freeze(self)
 
     def _events_for(self, raveled) -> tuple[Event, ...]:
@@ -120,6 +122,7 @@ class _Driver:
             events=self._events_for(raveled),
             event_bisect_iters=self.event_bisect_iters,
             extra_stats=self.extra_stats,
+            fused=self.fused,
         )
         return step_fn, y0_flat, raveled
 

@@ -39,6 +39,7 @@ def make_solver(
     dense_window: int = 0,
     events=None,
     event_bisect_iters: int = 30,
+    fused: bool = False,
 ):
     """Build (init_fn, body_fn, finish_fn) shared by the while_loop and scan
     drivers.  Compatibility shim over ``StepFunction``.
@@ -69,6 +70,7 @@ def make_solver(
         dense_window=dense_window,
         events=events,
         event_bisect_iters=event_bisect_iters,
+        fused=fused,
     )
     return step_fn.init, step_fn.step, step_fn.finish
 
@@ -92,6 +94,7 @@ def solve_ivp(
     dense_window: int = 0,
     events=None,
     event_bisect_iters: int = 30,
+    fused: bool = False,
 ) -> Solution:
     """Solve a batch of IVPs in parallel with independent per-instance state.
 
@@ -113,6 +116,12 @@ def solve_ivp(
             instance independently at its localized crossing time
             (``Status.EVENT``), and the Solution carries per-instance
             ``event_t`` / ``event_y`` / ``event_mask``.
+    fused:  opt into the fused step megakernel fast path (one kernel-registry
+            op per step attempt around the vf calls, zero vf launches for
+            ``polynomial_term`` dynamics).  Engages for adaptive FSAL
+            explicit methods with PID-family controllers and falls back
+            transparently otherwise; ``stats["n_fused_steps"]`` reports
+            whether it ran.
 
     Returns a ``Solution`` with per-instance status and statistics.
     """
@@ -127,6 +136,7 @@ def solve_ivp(
         batched_term=batched_term,
         events=events,
         event_bisect_iters=event_bisect_iters,
+        fused=fused,
     )
     return driver.solve(f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args)
 
@@ -151,6 +161,7 @@ def solve_ivp_scan(
     checkpoint_every: int = 0,
     events=None,
     event_bisect_iters: int = 30,
+    fused: bool = False,
 ) -> Solution:
     """Reverse-mode-differentiable variant: a bounded ``lax.scan`` over
     ``max_steps`` iterations with masked no-op steps after termination
@@ -169,5 +180,6 @@ def solve_ivp_scan(
         checkpoint_every=checkpoint_every,
         events=events,
         event_bisect_iters=event_bisect_iters,
+        fused=fused,
     )
     return driver.solve(f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args)

@@ -54,9 +54,10 @@ from .controller import (
 )
 from .events import advance as advance_events
 from .events import init_event_state, normalize_events
+from .controller import PIDController
 from .solution import Solution, Status
 from .static import freeze, frozen_setattr, register_config_pytree
-from .stepper import AbstractStepper
+from .stepper import AbstractStepper, ExplicitRK
 from .terms import ODETerm, as_term
 
 
@@ -138,6 +139,7 @@ class StepFunction:
         events=None,
         event_bisect_iters: int = 30,
         extra_stats: tuple = (),
+        fused: bool = False,
     ):
         self.term = as_term(term)
         stepper = self.stepper = AbstractStepper.coerce(stepper)
@@ -151,6 +153,20 @@ class StepFunction:
         self.events = normalize_events(events)
         self.event_bisect_iters = event_bisect_iters
         self.extra_stats = tuple(extra_stats)
+        self.fused = bool(fused)
+        # The fused megakernel fast path engages only where its contract
+        # holds: an adaptive FSAL explicit tableau (the last stage IS f1, so
+        # no post-kernel vf call is needed) driven by a PID-family controller
+        # (whose accept/next-dt program the kernel bakes in).  Everything
+        # else falls back to the unfused path transparently -- same results,
+        # one launch per op instead of one per step.
+        self._fused_path = (
+            self.fused
+            and type(stepper) is ExplicitRK
+            and stepper.is_adaptive
+            and stepper.tableau.fsal
+            and isinstance(self.controller, PIDController)
+        )
         self._rebuild_derived()
         freeze(self)
 
@@ -177,6 +193,10 @@ class StepFunction:
         out = {"n_steps": zeros, "n_initialized": zeros}
         if self.events:
             out["n_events"] = zeros
+        if self._fused_path:
+            # Counts steps taken through the megakernel; equals n_steps while
+            # the fast path is engaged (the observable proof it actually ran).
+            out["n_fused_steps"] = zeros
         return out
 
     def update_stats(self, stats: dict, ctx: StepContext) -> dict:
@@ -272,7 +292,66 @@ class StepFunction:
         )
         return state, (t_eval, t_start, t_end, direction)
 
+    def _propose(self, state: LoopState, consts):
+        """The per-instance step proposal -- the shared prologue of the fused
+        and unfused paths.  Returns ``(dt_prop, cursor, t_win, W)``; the last
+        three are ``(None, None, 0)`` unless windowed dense output is active
+        (``t_win is not None`` is the windowed-mode flag downstream).
+
+        Windowed dense output (beyond-torchode optimization): only a static
+        window of W eval points at the per-instance cursor is touched per
+        step, instead of masking over ALL n points.  The attempt is clamped
+        so a step never crosses beyond the window's last point (costs extra
+        steps only when the solver could cross >W points at once).  See
+        EXPERIMENTS.md SSPerf (solver)."""
+        t_eval, t_start, t_end, direction = consts
+        if not (self.dense and t_eval is not None and self.dense_window > 0):
+            return state.dt, None, None, 0
+        n_pts = t_eval.shape[1]
+        W = min(self.dense_window, n_pts)
+        cursor = jnp.minimum(state.stats["n_initialized"], n_pts - W)  # (b,)
+        t_win = jax.vmap(
+            lambda te, c: jax.lax.dynamic_slice(te, (c,), (W,))
+        )(t_eval, cursor)
+        has_beyond = (state.stats["n_initialized"] + W) < n_pts
+        lim = jnp.where(has_beyond, t_win[:, -1] - state.t, t_end - state.t)
+        clamp = has_beyond & (direction * lim > 0) & (jnp.abs(lim) < jnp.abs(state.dt))
+        return jnp.where(clamp, lim, state.dt), cursor, t_win, W
+
+    def _write_dense(self, state, consts, coeffs, accept, t_stop, safe_dt, cursor, t_win, W):
+        """Write every eval point passed by this step into the dense-output
+        buffer (windowed or full-mask; shared by the fused and unfused
+        paths).  Returns ``(ys, n_written)``."""
+        t_eval, t_start, t_end, direction = consts
+        ys = state.ys
+        n_written = jnp.zeros_like(state.running, dtype=jnp.int32)
+        if t_win is not None:
+            xw = jnp.clip((t_win - state.t[:, None]) / safe_dt[:, None], 0.0, 1.0)
+            after_t = direction[:, None] * (t_win - state.t[:, None]) > 0.0
+            upto_new = direction[:, None] * (t_win - t_stop[:, None]) <= 0.0
+            maskw = accept[:, None] & after_t & upto_new
+            feat = ys.shape[-1]
+            cur = jax.vmap(
+                lambda row, c: jax.lax.dynamic_slice(row, (c, 0), (W, feat))
+            )(ys, cursor)
+            merged = ops.interp_eval(coeffs, xw, maskw, cur)
+            ys = jax.vmap(
+                lambda row, m, c: jax.lax.dynamic_update_slice(row, m, (c, 0))
+            )(ys, merged, cursor)
+            n_written = maskw.sum(axis=1).astype(jnp.int32)
+        elif self.dense and t_eval is not None:
+            x = (t_eval - state.t[:, None]) / safe_dt[:, None]
+            x = jnp.clip(x, 0.0, 1.0)  # masked points stay finite (grad-safe)
+            after_t = direction[:, None] * (t_eval - state.t[:, None]) > 0.0
+            upto_new = direction[:, None] * (t_eval - t_stop[:, None]) <= 0.0
+            mask = accept[:, None] & after_t & upto_new
+            ys = ops.interp_eval(coeffs, x, mask, ys)
+            n_written = mask.sum(axis=1).astype(jnp.int32)
+        return ys, n_written
+
     def step(self, state: LoopState, consts, args) -> LoopState:
+        if self._fused_path:
+            return self._step_fused(state, consts, args)
         term, stepper, controller = self.term, self.stepper, self.controller
         k = stepper.error_order
         t_eval, t_start, t_end, direction = consts
@@ -281,26 +360,7 @@ class StepFunction:
 
         any_running = jnp.any(state.running)
 
-        windowed = self.dense and t_eval is not None and self.dense_window > 0
-        if windowed:
-            # --- windowed dense output (beyond-torchode optimization): only a
-            # static window of W eval points at the per-instance cursor is
-            # touched per step, instead of masking over ALL n points.  The
-            # attempt is clamped so a step never crosses beyond the window's
-            # last point (costs extra steps only when the solver could cross
-            # >W points at once).  See EXPERIMENTS.md SSPerf (solver).
-            n_pts = t_eval.shape[1]
-            W = min(self.dense_window, n_pts)
-            cursor = jnp.minimum(state.stats["n_initialized"], n_pts - W)  # (b,)
-            t_win = jax.vmap(
-                lambda te, c: jax.lax.dynamic_slice(te, (c,), (W,))
-            )(t_eval, cursor)
-            has_beyond = (state.stats["n_initialized"] + W) < n_pts
-            lim = jnp.where(has_beyond, t_win[:, -1] - state.t, t_end - state.t)
-            clamp = has_beyond & (direction * lim > 0) & (jnp.abs(lim) < jnp.abs(state.dt))
-            dt_prop = jnp.where(clamp, lim, state.dt)
-        else:
-            dt_prop = state.dt
+        dt_prop, cursor, t_win, W = self._propose(state, consts)
 
         # --- clamp the attempt so the final step lands exactly on t_end ---
         rem = t_end - state.t
@@ -362,30 +422,10 @@ class StepFunction:
             t_stop = t_new
 
         # --- dense output: write every eval point passed by this step ---
-        ys = state.ys
-        n_written = jnp.zeros_like(state.running, dtype=jnp.int32)
-        if windowed:
-            xw = jnp.clip((t_win - state.t[:, None]) / safe_dt[:, None], 0.0, 1.0)
-            after_t = direction[:, None] * (t_win - state.t[:, None]) > 0.0
-            upto_new = direction[:, None] * (t_win - t_stop[:, None]) <= 0.0
-            maskw = accept[:, None] & after_t & upto_new
-            feat = ys.shape[-1]
-            cur = jax.vmap(
-                lambda row, c: jax.lax.dynamic_slice(row, (c, 0), (W, feat))
-            )(ys, cursor)
-            merged = ops.interp_eval(coeffs, xw, maskw, cur)
-            ys = jax.vmap(
-                lambda row, m, c: jax.lax.dynamic_update_slice(row, m, (c, 0))
-            )(ys, merged, cursor)
-            n_written = maskw.sum(axis=1).astype(jnp.int32)
-        elif dense_now:
-            x = (t_eval - state.t[:, None]) / safe_dt[:, None]
-            x = jnp.clip(x, 0.0, 1.0)  # masked points stay finite (grad-safe)
-            after_t = direction[:, None] * (t_eval - state.t[:, None]) > 0.0
-            upto_new = direction[:, None] * (t_eval - t_stop[:, None]) <= 0.0
-            mask = accept[:, None] & after_t & upto_new
-            ys = ops.interp_eval(coeffs, x, mask, ys)
-            n_written = mask.sum(axis=1).astype(jnp.int32)
+        ys, n_written = self._write_dense(
+            state, consts, coeffs if (dense_now or self.events) else None,
+            accept, t_stop, safe_dt, cursor, t_win, W,
+        )
 
         # --- masked commit ---
         acc_f = accept[:, None]
@@ -435,6 +475,142 @@ class StepFunction:
             scarry=stepper.commit_carry(state.scarry, res.carry, accept, state.running),
             # Every controller returns its own next state (masking non-advances
             # internally), so the loop threads it uniformly -- no special cases.
+            cstate=cstate_new,
+            running=running,
+            status=status,
+            stats=stats,
+            ys=ys,
+            it=state.it + inc,
+            estate=estate,
+        )
+
+    def _step_fused(self, state: LoopState, consts, args) -> LoopState:
+        """The fused fast path: everything between the stage evaluations and
+        the loop-state rebuild -- b_sol/b_err combination, WRMS error norm,
+        PI controller accept/next-dt, masked commit of (t, y, f) against the
+        ``running`` mask, and the Hermite coefficient build -- is ONE
+        kernel-registry op (``ops.fused_step``).  For ``PolynomialTerm``
+        dynamics the stage evaluations fuse too (``ops.fused_step_poly``):
+        the whole step attempt is a single launch with zero vf dispatches.
+
+        Mirrors ``step`` expression-for-expression (the ref-backend op is
+        composed of the same primitives in the same order, so fused and
+        unfused solves are bitwise-identical there); only engaged when
+        ``_fused_path`` holds (adaptive FSAL ``ExplicitRK`` + PID-family
+        controller), so there is no solver-failure path to handle here.
+        """
+        term, stepper, controller = self.term, self.stepper, self.controller
+        t_eval, t_start, t_end, direction = consts
+        tiny = jnp.asarray(jnp.finfo(state.y.dtype).tiny, state.y.dtype)
+        eps = jnp.asarray(jnp.finfo(state.y.dtype).eps, state.y.dtype)
+
+        any_running = jnp.any(state.running)
+        dt_prop, cursor, t_win, W = self._propose(state, consts)
+
+        rem = t_end - state.t
+        will_finish = jnp.abs(dt_prop) >= jnp.abs(rem)
+        dt_used = jnp.where(will_finish, rem, dt_prop)
+        safe_dt = jnp.where(jnp.abs(dt_used) > tiny, dt_used, jnp.ones_like(dt_used))
+        t_new = jnp.where(will_finish, t_end, state.t + dt_used)
+
+        dense_now = self.dense and t_eval is not None
+        want_coeffs = bool(dense_now or self.events)
+        tab = stepper.tableau
+        ctrl = controller.filter_params(stepper.error_order)
+        common = (
+            state.t, t_new, state.dt, safe_dt, state.running,
+            state.cstate.prev_inv_ratio, state.cstate.prev2_inv_ratio,
+            self.atol, self.rtol,
+        )
+        poly = getattr(term, "poly_coeffs", ())
+        if poly:
+            out = ops.fused_step_poly(
+                state.y, state.f0, *common,
+                a=tab.a, c=tab.c, b_sol=tab.b_sol, b_err=tab.b_err,
+                poly=poly, ctrl=ctrl, want_coeffs=want_coeffs,
+            )
+            # The in-kernel stage evaluations count exactly like the unfused
+            # vf calls they replace (FSAL: the first stage is the cache).
+            n_f_evals = tab.stages - 1
+        else:
+            K, n_f_evals = stepper.stage_derivatives(
+                term, state.t, safe_dt, state.y, state.f0, args
+            )
+            out = ops.fused_step(
+                state.y, K, K[-1], *common,
+                b_sol=tab.b_sol, b_err=tab.b_err, ctrl=ctrl,
+                want_coeffs=want_coeffs,
+            )
+        (y1, err_ratio, accept, y_out, f_out, t_out, dt_out,
+         new_inv, new_inv2, coeffs) = out
+        cstate_new = ControllerState(new_inv, new_inv2)
+
+        done_now = accept & will_finish
+        dt_floor = 8.0 * eps * jnp.maximum(jnp.abs(state.t), jnp.abs(t_end))
+        nonfinite_y = ~jnp.all(jnp.isfinite(y1), axis=-1)
+        # Where ``running`` holds, dt_out IS the controller's dt_next (the
+        # kernel commits dt_next under the same mask the unfused path uses).
+        stopped = state.running & ~accept & (jnp.abs(dt_out) <= dt_floor)
+
+        if self.events:
+            adv = advance_events(
+                self.events, state.estate, coeffs, state.t, safe_dt, t_new,
+                y1, accept, args, self.event_bisect_iters,
+            )
+            estate, event_stop = adv.estate, adv.stop
+            t_stop = jnp.where(event_stop, adv.t_stop, t_new)
+        else:
+            adv, estate = None, state.estate
+            event_stop = jnp.zeros_like(accept)
+            t_stop = t_new
+
+        ys, n_written = self._write_dense(
+            state, consts, coeffs, accept, t_stop, safe_dt, cursor, t_win, W
+        )
+
+        # --- masked commit: already done in-kernel; events override on top ---
+        y, f0, t, dt = y_out, f_out, t_out, dt_out
+        if self.events:
+            y = jnp.where(event_stop[:, None], adv.y_stop, y)
+            t = jnp.where(event_stop, t_stop, t)
+
+        running = state.running & ~done_now & ~stopped & ~event_stop
+        status = jnp.where(
+            event_stop,
+            Status.EVENT.value,
+            jnp.where(
+                done_now,
+                Status.SUCCESS.value,
+                jnp.where(
+                    stopped,
+                    jnp.where(nonfinite_y, Status.INFINITE.value, Status.REACHED_DT_MIN.value),
+                    state.status,
+                ),
+            ),
+        ).astype(jnp.int32)
+
+        inc = jnp.where(any_running, 1, 0).astype(jnp.int32)
+        ctx = StepContext(
+            running=state.running,
+            accept=accept,
+            step_active=inc,
+            n_f_evals=n_f_evals,
+            n_written=n_written,
+            err_ratio=err_ratio,
+            aux=None,
+            n_events=adv.n_new if adv is not None else None,
+        )
+        stats = self._apply_stat_updates(dict(state.stats), ctx)
+        stats["n_fused_steps"] = (
+            stats["n_fused_steps"] + inc * state.running.astype(jnp.int32)
+        )
+
+        return LoopState(
+            t=t,
+            dt=dt,
+            y=y,
+            f0=f0,
+            scarry=state.scarry,  # explicit steppers carry () across steps
             cstate=cstate_new,
             running=running,
             status=status,

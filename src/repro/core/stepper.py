@@ -288,6 +288,22 @@ class ExplicitRK(AbstractStepper):
     def step(self, term, t, dt, y, f0, args, carry=(), scale=None):
         return rk_step(term, self.tableau, t, dt, y, f0, args)
 
+    def stage_derivatives(self, term, t, dt, y, f0, args):
+        """The stacked stage slopes K (s, b, f) WITHOUT the b_sol/b_err
+        combination -- the fused-step fast path hands K to the megakernel,
+        which does the combine/norm/controller/commit in one launch.
+        Bitwise-identical stage recursion to ``rk_step`` (same ops, same
+        order).  Returns ``(K, n_f_evals)``."""
+        tab = self.tableau
+        a, c, _, _ = _tableau_arrays(tab, y.dtype)
+        ks = [f0]
+        n_evals = 0
+        for i in range(1, tab.stages):
+            yi = ops.stage_accum(y, dt, jnp.stack(ks), a[i, :i])
+            ks.append(term.vf(t + c[i] * dt, yi, args))
+            n_evals += 1
+        return jnp.stack(ks), n_evals
+
 
 # Compatibility alias: the pre-hierarchy name of the explicit stepper.
 Stepper = ExplicitRK

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from ..kernels import ops
 from .static import register_static
 
 
@@ -92,6 +93,53 @@ class ODETerm:
 
         cols = jax.vmap(column)(jnp.eye(y.shape[1], dtype=y.dtype))  # (f_in, b, f_out)
         return jnp.moveaxis(cols, 0, -1)
+
+
+@register_static
+@dataclasses.dataclass(frozen=True)
+class PolynomialTerm(ODETerm):
+    """An ``ODETerm`` whose vector field is a closed-form elementwise
+    polynomial ``dy_i/dt = sum_d poly_coeffs[d] * y_i**d``.
+
+    The coefficients are *static config* (a tuple of floats, or of length-f
+    float tuples for per-feature coefficients), which is what lets the fused
+    step megakernel inline the stage evaluations: an entire explicit-RK step
+    attempt becomes ONE kernel launch with zero vector-field dispatches (the
+    torchode regime's launch-bound limit).  Covers linear/affine dynamics
+    (exponential decay, relaxation), logistic growth, and any scalar
+    polynomial reaction term.  Construct via ``polynomial_term``.
+    """
+
+    poly_coeffs: tuple = ()
+
+
+def polynomial_term(*coeffs) -> PolynomialTerm:
+    """Build a ``PolynomialTerm`` for ``dy/dt = sum_d coeffs[d] * y**d``.
+
+    Each positional coefficient is scalar (shared across features) or a
+    length-f sequence (per-feature), low -> high degree::
+
+        polynomial_term(0.0, -1.0)        # dy/dt = -y        (exp decay)
+        polynomial_term(0.0, 1.0, -1.0)   # dy/dt = y - y**2  (logistic)
+
+    The term solves identically through every code path; with the fused step
+    fast path enabled it additionally lowers the stage evaluations into the
+    megakernel (see ``StepFunction``).
+    """
+    if not coeffs:
+        raise ValueError("polynomial_term needs at least one coefficient")
+    norm = tuple(
+        float(c)
+        if np.ndim(c) == 0
+        else tuple(float(x) for x in np.asarray(c).reshape(-1))
+        for c in coeffs
+    )
+
+    def f(t, y, args):
+        del t, args  # autonomous by construction
+        return ops.poly_eval(y, norm)
+
+    return PolynomialTerm(f=f, batched=True, with_args=True, poly_coeffs=norm)
 
 
 def as_term(f: Callable | ODETerm, *, batched: bool = True, with_args: bool | None = None) -> ODETerm:

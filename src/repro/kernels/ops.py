@@ -44,6 +44,22 @@ def set_backend(name: str) -> None:
     _BACKEND = name
 
 
+def reset_backend() -> None:
+    """Drop the cached backend choice so the next dispatch re-reads
+    ``REPRO_KERNEL_BACKEND``.
+
+    ``backend()`` latches its choice on the FIRST op dispatch; before this
+    hook existed, setting the env var afterwards was silently ignored --
+    processes that configure the environment late (notebooks, test fixtures,
+    forked workers inheriting a stale parent choice) got whatever backend the
+    first dispatch saw.  Note the JAX compilation cache is keyed on the traced
+    program, so already-jitted solver programs keep the backend they were
+    traced with; re-trace (new shapes/config) to pick up the change.
+    """
+    global _BACKEND
+    _BACKEND = None
+
+
 def _impl():
     b = backend()
     if b == "ref":
@@ -68,6 +84,8 @@ _OP_NAMES = (
     "batched_linsolve",
     "masked_newton_update",
     "masked_bisect_refine",
+    "fused_step",
+    "fused_step_poly",
 )
 
 
@@ -93,3 +111,5 @@ del _name
 hermite_coeffs = ref.hermite_coeffs  # pure arithmetic; fused into callers by XLA
 rms_norm = ref.rms_norm  # init-time only (step-size selection); never in the hot loop
 broadcast_tolerances = ref.broadcast_tolerances  # the shared tolerance-shape contract
+pid_update = ref.pid_update  # the ONE controller program (PIDController + fused kernels)
+poly_eval = ref.poly_eval  # the ONE polynomial-vf program (PolynomialTerm + megakernel)

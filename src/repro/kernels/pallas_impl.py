@@ -448,6 +448,285 @@ def masked_newton_update(k, delta, active, scale, *, interpret=False):
     return k_new[:b, :f], res[:b, 0]
 
 
+# -------------------------------------------------------------- fused RK step
+#
+# The megakernel: one kernel launch per explicit-RK step attempt.  One grid
+# program owns a BB-row batch tile with the FULL feature axis resident in
+# VMEM ((s + ~8) * BB * fp * 4 bytes -- comfortably inside VMEM for the
+# torchode regime f <= ~256 and far beyond), so the cross-feature error-norm
+# reduction, the (b,)-shaped controller decision and the (b, f) commits all
+# happen in-register without a second pass or a cross-tile accumulator.
+
+
+def _ctrl_commit(
+    y, y1, err, f0, f1, t, t_new, dt_cur, run, pi1, pi2, atol, rtol, sdt,
+    *, ctrl, n_feat,
+):
+    """Shared kernel tail: WRMS norm -> PID decision -> masked commit ->
+    Hermite coefficients, on one (BB, fp) tile.  Mirrors ``ref.pid_update`` +
+    the commit/coeff expressions exactly."""
+    b1, b2, b3, safety, factor_min, factor_max, dt_min, dt_max = ctrl
+    scale = atol + rtol * jnp.maximum(jnp.abs(y), jnp.abs(y1))
+    r = err / scale
+    ratio = jnp.sqrt(jnp.sum(r * r, axis=1, keepdims=True) / n_feat)  # (BB, 1)
+
+    finite = jnp.isfinite(ratio)
+    safe_ratio = jnp.where(finite & (ratio > 0.0), ratio, 1.0)
+    inv = 1.0 / safe_ratio
+    factor = safety * inv**b1 * pi1**b2 * pi2**b3
+    factor = jnp.where(ratio == 0.0, factor_max, factor)
+    factor = jnp.where(finite, factor, 0.5)
+    factor = jnp.clip(factor, factor_min, factor_max)
+    accept = finite & (ratio <= 1.0)
+    factor = jnp.where(accept, factor, jnp.minimum(factor, 1.0))
+    mag = jnp.clip(jnp.abs(dt_cur) * factor.astype(dt_cur.dtype), dt_min, dt_max)
+    dt_next = jnp.sign(dt_cur) * mag
+    new_inv = jnp.where(accept, inv, pi1)
+    new_inv2 = jnp.where(accept, pi1, pi2)
+
+    accept = accept & run
+    y_out = jnp.where(accept, y1, y)
+    f_out = jnp.where(accept, f1, f0)
+    t_out = jnp.where(accept, t_new, t)
+    dt_out = jnp.where(run, dt_next, dt_cur)
+
+    c1 = sdt * f0
+    c2 = 3.0 * (y1 - y) - sdt * (2.0 * f0 + f1)
+    c3 = 2.0 * (y - y1) + sdt * (f0 + f1)
+    return ratio, accept, y_out, f_out, t_out, dt_out, new_inv, new_inv2, (c1, c2, c3)
+
+
+def _fused_step_kernel(
+    y_ref, k_ref, f1_ref, t_ref, tnew_ref, dtc_ref, sdt_ref, run_ref,
+    pi1_ref, pi2_ref, atol_ref, rtol_ref,
+    y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
+    i1_out, i2_out, c1_out, c2_out, c3_out,
+    *, b_sol, b_err, ctrl, n_feat,
+):
+    y = y_ref[...]
+    sdt = sdt_ref[...]  # (BB, 1)
+    acc_sol = jnp.zeros_like(y)
+    acc_err = jnp.zeros_like(y)
+    for j in range(k_ref.shape[0]):  # unrolled: s is 1..7
+        k = k_ref[j]
+        if b_sol[j] != 0.0:
+            acc_sol = acc_sol + b_sol[j] * k
+        if b_err[j] != 0.0:
+            acc_err = acc_err + b_err[j] * k
+    y1 = y + sdt * acc_sol
+    err = sdt * acc_err
+
+    ratio, accept, y_out, f_out, t_out, dt_out, i1, i2, (c1, c2, c3) = _ctrl_commit(
+        y, y1, err, k_ref[0], f1_ref[...], t_ref[...], tnew_ref[...], dtc_ref[...],
+        run_ref[...], pi1_ref[...], pi2_ref[...], atol_ref[...], rtol_ref[...], sdt,
+        ctrl=ctrl, n_feat=n_feat,
+    )
+    y1_out[...] = y1
+    ratio_out[...] = ratio
+    acc_out[...] = accept.astype(jnp.int32)
+    yo_out[...] = y_out
+    fo_out[...] = f_out
+    to_out[...] = t_out
+    dto_out[...] = dt_out
+    i1_out[...] = i1
+    i2_out[...] = i2
+    c1_out[...] = c1
+    c2_out[...] = c2
+    c3_out[...] = c3
+
+
+def _fused_step_poly_kernel(
+    y_ref, f0_ref, poly_ref, t_ref, tnew_ref, dtc_ref, sdt_ref, run_ref,
+    pi1_ref, pi2_ref, atol_ref, rtol_ref,
+    y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
+    i1_out, i2_out, c1_out, c2_out, c3_out,
+    *, a, b_sol, b_err, ctrl, n_feat,
+):
+    y = y_ref[...]
+    sdt = sdt_ref[...]
+
+    def vf(yi):  # Horner over the (deg+1, fp) coefficient rows
+        acc = jnp.broadcast_to(poly_ref[poly_ref.shape[0] - 1][None, :], yi.shape)
+        for d in range(poly_ref.shape[0] - 2, -1, -1):
+            acc = acc * yi + poly_ref[d][None, :]
+        return acc
+
+    s = len(b_sol)
+    ks = [f0_ref[...]]
+    for i in range(1, s):  # fully unrolled stage recursion, zero vf launches
+        acc = jnp.zeros_like(y)
+        for j in range(i):
+            if a[i][j] != 0.0:
+                acc = acc + a[i][j] * ks[j]
+        ks.append(vf(y + sdt * acc))
+
+    acc_sol = jnp.zeros_like(y)
+    acc_err = jnp.zeros_like(y)
+    for j in range(s):
+        if b_sol[j] != 0.0:
+            acc_sol = acc_sol + b_sol[j] * ks[j]
+        if b_err[j] != 0.0:
+            acc_err = acc_err + b_err[j] * ks[j]
+    y1 = y + sdt * acc_sol
+    err = sdt * acc_err
+
+    ratio, accept, y_out, f_out, t_out, dt_out, i1, i2, (c1, c2, c3) = _ctrl_commit(
+        y, y1, err, ks[0], ks[-1], t_ref[...], tnew_ref[...], dtc_ref[...],
+        run_ref[...], pi1_ref[...], pi2_ref[...], atol_ref[...], rtol_ref[...], sdt,
+        ctrl=ctrl, n_feat=n_feat,
+    )
+    y1_out[...] = y1
+    ratio_out[...] = ratio
+    acc_out[...] = accept.astype(jnp.int32)
+    yo_out[...] = y_out
+    fo_out[...] = f_out
+    to_out[...] = t_out
+    dto_out[...] = dt_out
+    i1_out[...] = i1
+    i2_out[...] = i2
+    c1_out[...] = c1
+    c2_out[...] = c2
+    c3_out[...] = c3
+
+
+def _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype):
+    """Tolerance blocks for the fused kernels, mirroring ``error_norm``'s
+    shape contract: scalar/(b,) stream cheap (BB, 1) blocks, genuine (b, f)
+    tolerances pay for full rows.  Padded cells are 1 so padded err cells
+    (always 0) contribute 0/positive = 0 to the norm."""
+    atol, rtol = ref.broadcast_tolerances(atol, rtol, dtype)
+    per_feature = atol.ndim == 2 and atol.shape[1] > 1 or rtol.ndim == 2 and rtol.shape[1] > 1
+    if per_feature:
+        atolp = _pad_to(_pad_to(jnp.broadcast_to(atol, (b, f)), 0, BB, value=1), 1, BF, value=1)
+        rtolp = _pad_to(_pad_to(jnp.broadcast_to(rtol, (b, f)), 0, BB, value=1), 1, BF, value=1)
+        spec = pl.BlockSpec((BB, fp), lambda i: (i, 0))
+    else:
+        atolp = _pad_to(jnp.broadcast_to(atol.reshape((-1, 1)) if atol.ndim else atol, (b, 1)),
+                        0, BB, value=1)
+        rtolp = _pad_to(jnp.broadcast_to(rtol.reshape((-1, 1)) if rtol.ndim else rtol, (b, 1)),
+                        0, BB, value=1)
+        spec = pl.BlockSpec((BB, 1), lambda i: (i, 0))
+    return atolp, rtolp, spec
+
+
+def _fused_out_specs(bp, fp, dtype):
+    row = pl.BlockSpec((BB, fp), lambda i: (i, 0))
+    col = pl.BlockSpec((BB, 1), lambda i: (i, 0))
+    specs = [row, col, col, row, row, col, col, col, col, row, row, row]
+    shapes = [
+        jax.ShapeDtypeStruct((bp, fp), dtype),  # y1
+        jax.ShapeDtypeStruct((bp, 1), dtype),   # err_ratio
+        jax.ShapeDtypeStruct((bp, 1), jnp.int32),  # accept
+        jax.ShapeDtypeStruct((bp, fp), dtype),  # y_out
+        jax.ShapeDtypeStruct((bp, fp), dtype),  # f_out
+        jax.ShapeDtypeStruct((bp, 1), dtype),   # t_out
+        jax.ShapeDtypeStruct((bp, 1), dtype),   # dt_out
+        jax.ShapeDtypeStruct((bp, 1), dtype),   # new_inv
+        jax.ShapeDtypeStruct((bp, 1), dtype),   # new_inv2
+        jax.ShapeDtypeStruct((bp, fp), dtype),  # c1
+        jax.ShapeDtypeStruct((bp, fp), dtype),  # c2
+        jax.ShapeDtypeStruct((bp, fp), dtype),  # c3
+    ]
+    return specs, shapes
+
+
+def _fused_returns(outs, y, b, f, want_coeffs):
+    y1, ratio, accept, y_out, f_out, t_out, dt_out, i1, i2, c1, c2, c3 = outs
+    coeffs = None
+    if want_coeffs:
+        # c0 is the (unpadded) input state itself -- no kernel output needed.
+        coeffs = (y, c1[:b, :f], c2[:b, :f], c3[:b, :f])
+    return (
+        y1[:b, :f], ratio[:b, 0], accept[:b, 0].astype(bool),
+        y_out[:b, :f], f_out[:b, :f], t_out[:b, 0], dt_out[:b, 0],
+        i1[:b, 0], i2[:b, 0], coeffs,
+    )
+
+
+def fused_step(
+    y, K, f1, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
+    atol, rtol, *, b_sol, b_err, ctrl, want_coeffs, interpret=False,
+):
+    b, f = y.shape
+    s = K.shape[0]
+    dtype = y.dtype
+    # Feature padding: y pads with 1 and K/f1 with 0, so padded err cells are
+    # 0 and the norm is exact (divide by the TRUE feature count below).
+    yp = _pad_to(_pad_to(y, 0, BB, value=1), 1, BF, value=1)
+    Kp = _pad_to(_pad_to(K, 1, BB), 2, BF)
+    f1p = _pad_to(_pad_to(f1, 0, BB), 1, BF)
+    bp, fp = yp.shape
+    atolp, rtolp, tol_spec = _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype)
+    cols = [t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv]
+    colp = [_pad_to(x[:, None], 0, BB) for x in cols]
+    row = pl.BlockSpec((BB, fp), lambda i: (i, 0))
+    col = pl.BlockSpec((BB, 1), lambda i: (i, 0))
+    out_specs, out_shapes = _fused_out_specs(bp, fp, dtype)
+    outs = pl.pallas_call(
+        functools.partial(
+            _fused_step_kernel, b_sol=tuple(b_sol), b_err=tuple(b_err),
+            ctrl=tuple(ctrl), n_feat=float(f),
+        ),
+        grid=(bp // BB,),
+        in_specs=[
+            row,
+            pl.BlockSpec((s, BB, fp), lambda i: (0, i, 0)),
+            row,
+            col, col, col, col, col, col, col,  # t, t_new, dt_cur, sdt, run, pi1, pi2
+            tol_spec, tol_spec,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(yp, Kp, f1p, colp[0], colp[1], colp[2], colp[3], colp[4], colp[5], colp[6],
+      atolp, rtolp)
+    return _fused_returns(outs, y, b, f, want_coeffs)
+
+
+def fused_step_poly(
+    y, f0, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
+    atol, rtol, *, a, c, b_sol, b_err, poly, ctrl, want_coeffs, interpret=False,
+):
+    del c  # autonomous polynomial dynamics
+    b, f = y.shape
+    dtype = y.dtype
+    yp = _pad_to(_pad_to(y, 0, BB, value=1), 1, BF, value=1)
+    f0p = _pad_to(_pad_to(f0, 0, BB), 1, BF)
+    bp, fp = yp.shape
+    # Static polynomial coefficients materialize as one small (deg+1, fp)
+    # input streamed to every program (scalars broadcast across features).
+    poly_rows = np.stack(
+        [np.broadcast_to(np.asarray(cd, dtype=dtype), (f,)) for cd in poly]
+    )
+    polyp = _pad_to(jnp.asarray(poly_rows), 1, BF)
+    atolp, rtolp, tol_spec = _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype)
+    cols = [t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv]
+    colp = [_pad_to(x[:, None], 0, BB) for x in cols]
+    row = pl.BlockSpec((BB, fp), lambda i: (i, 0))
+    col = pl.BlockSpec((BB, 1), lambda i: (i, 0))
+    out_specs, out_shapes = _fused_out_specs(bp, fp, dtype)
+    outs = pl.pallas_call(
+        functools.partial(
+            _fused_step_poly_kernel,
+            a=tuple(tuple(r) for r in a), b_sol=tuple(b_sol), b_err=tuple(b_err),
+            ctrl=tuple(ctrl), n_feat=float(f),
+        ),
+        grid=(bp // BB,),
+        in_specs=[
+            row,
+            row,
+            pl.BlockSpec((len(poly), fp), lambda i: (0, 0)),
+            col, col, col, col, col, col, col,
+            tol_spec, tol_spec,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(yp, f0p, polyp, colp[0], colp[1], colp[2], colp[3], colp[4], colp[5], colp[6],
+      atolp, rtolp)
+    return _fused_returns(outs, y, b, f, want_coeffs)
+
+
 # ------------------------------------------------------------- impl namespaces
 
 
@@ -475,6 +754,12 @@ class _Impl:
 
     def masked_bisect_refine(self, coeffs, lo, hi, v_lo, v_mid, active):
         return masked_bisect_refine(coeffs, lo, hi, v_lo, v_mid, active, interpret=self._i)
+
+    def fused_step(self, *args, **kwargs):
+        return fused_step(*args, **kwargs, interpret=self._i)
+
+    def fused_step_poly(self, *args, **kwargs):
+        return fused_step_poly(*args, **kwargs, interpret=self._i)
 
 
 _INTERPRET = _Impl(True)

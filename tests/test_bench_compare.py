@@ -131,3 +131,70 @@ class TestRunnerJsonDefaults:
         assert all(p == f"BENCH_{s}.json" for s, p in others.items())
         assert len(set(others.values())) == len(others)
         assert "serving" in _SUITE_CHOICES
+
+
+class TestCalibrationNormalization:
+    def _payload_cal(self, rows, cal):
+        p = _payload(rows)
+        if cal is not None:
+            p["calibration_us"] = cal
+        return p
+
+    def _write_cal(self, tmp_path, name, rows, cal):
+        p = tmp_path / name
+        p.write_text(json.dumps(self._payload_cal(rows, cal)))
+        return str(p)
+
+    def test_scale_divides_times_and_multiplies_throughput(self):
+        # A machine 2x slower across the board: raw values regress 2x, but
+        # scale=2 normalizes both row families back to parity.
+        fresh = {
+            ("vdp", "b16/loop_time"): 200.0,
+            ("dispatch", "compiled/solves_per_sec"): 500.0,
+        }
+        failures, n = compare_rows(BASE, fresh, 0.25, scale=2.0)
+        assert failures == [] and n == 2
+        # ...and a REAL regression still fails through the normalization.
+        fresh[("vdp", "b16/loop_time")] = 600.0  # 3x beyond machine speed
+        failures, _ = compare_rows(BASE, fresh, 0.25, scale=2.0)
+        assert len(failures) == 1 and "loop_time" in failures[0]
+
+    def test_default_scale_is_raw_comparison(self):
+        fresh = {
+            ("vdp", "b16/loop_time"): 200.0,
+            ("dispatch", "compiled/solves_per_sec"): 1000.0,
+        }
+        failures, _ = compare_rows(BASE, fresh, 0.25)  # positional back-compat
+        assert len(failures) == 1
+
+    def test_calibration_scale_extraction(self):
+        from benchmarks.compare import calibration_scale
+
+        scale, warn = calibration_scale({"calibration_us": 100.0},
+                                        {"calibration_us": 250.0})
+        assert scale == 2.5 and warn is None
+        # missing / malformed / absurd ratios refuse to normalize (scale 1)
+        for base, fresh in (({}, {"calibration_us": 1.0}),
+                            ({"calibration_us": "x"}, {"calibration_us": 1.0}),
+                            ({"calibration_us": 1.0}, {"calibration_us": 1e4})):
+            scale, warn = calibration_scale(base, fresh)
+            assert scale == 1.0 and warn is not None
+
+    def test_normalized_file_gate(self, tmp_path):
+        base = self._write_cal(tmp_path, "base.json", BASE, 100.0)
+        slow = self._write_cal(
+            tmp_path, "slow.json",
+            {("vdp", "b16/loop_time"): 200.0,
+             ("dispatch", "compiled/solves_per_sec"): 500.0,
+             ("vdp", "joint_vs_parallel_step_ratio"): 5.0},
+            200.0)
+        assert compare_files(base, slow, 0.25) != []          # raw: fails
+        assert compare_files(base, slow, 0.25, normalize=True) == []
+        assert main([base, slow, "--normalize"]) == 0
+        assert main([base, slow]) == 1
+
+    def test_runner_payload_carries_calibration(self):
+        from benchmarks.common import calibration_us
+
+        cal = calibration_us(repeats=1)
+        assert cal > 0.0

@@ -1,0 +1,228 @@
+"""Fused step megakernel: interpret-mode parity vs the ref oracle, the
+bitwise fused-vs-unfused solve contract, the running-mask freeze, and the
+``reset_backend`` regression.  Deliberately hypothesis-free so this file runs
+even where ``test_kernels.py``'s property tests are skipped."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PolynomialTerm,
+    pid_controller,
+    polynomial_term,
+    solve_ivp,
+)
+from repro.core.stepper import _tableau_arrays
+from repro.core.tableau import TABLEAUS
+from repro.kernels import ops, pallas_impl as pi, ref
+
+EXPLICIT = [n for n, tab in TABLEAUS.items() if not tab.implicit]
+EXPLICIT_FSAL = [
+    n for n in EXPLICIT if TABLEAUS[n].fsal and TABLEAUS[n].b_err is not None
+]
+CTRL = pid_controller()
+
+
+class TestResetBackend:
+    def test_reset_backend_rereads_env(self, monkeypatch):
+        # Regression: backend() used to latch its choice on the FIRST dispatch
+        # forever -- REPRO_KERNEL_BACKEND set afterwards was silently ignored.
+        # reset_backend() must drop the latch and re-read the environment.
+        old = ops.backend()
+        target = "interpret" if old != "interpret" else "ref"
+        try:
+            monkeypatch.setenv("REPRO_KERNEL_BACKEND", target)
+            assert ops.backend() == old  # still latched: env change invisible
+            ops.reset_backend()
+            assert ops.backend() == target  # re-read after reset
+        finally:
+            ops.set_backend(old)
+
+
+def _fused_inputs(seed, b, f, s, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.uniform(0.5, 1.5, (b, f)), dtype)
+    K = jnp.asarray(rng.standard_normal((s, b, f)), dtype)
+    t = jnp.asarray(rng.uniform(0.0, 1.0, b), dtype)
+    dt_cur = jnp.asarray(rng.uniform(0.05, 0.2, b), dtype)
+    safe_dt = dt_cur * 0.9
+    t_new = t + safe_dt
+    running = jnp.asarray(rng.uniform(size=b) > 0.25)
+    prev_inv = jnp.asarray(rng.uniform(0.5, 2.0, b), dtype)
+    prev2_inv = jnp.asarray(rng.uniform(0.5, 2.0, b), dtype)
+    return y, K, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv
+
+
+class TestFusedStepOp:
+    """Interpret-mode megakernel vs the ref oracle, every explicit tableau."""
+
+    @pytest.mark.parametrize("name", EXPLICIT)
+    def test_matches_ref(self, name):
+        tab = TABLEAUS[name]
+        b, f, s = 9, 37, tab.stages
+        (y, K, t, t_new, dt_cur, safe_dt,
+         running, prev_inv, prev2_inv) = _fused_inputs(hash(name) % 1000, b, f, s)
+        _, _, b_sol, b_err = _tableau_arrays(tab, np.float32)
+        kw = dict(b_sol=tuple(b_sol.tolist()), b_err=tuple(b_err.tolist()),
+                  ctrl=CTRL.filter_params(tab.error_order), want_coeffs=True)
+        # Pick atol so the batch's error ratios straddle 1 (mixed
+        # accept/reject): scale is atol-dominated here, so ratio ~ 1/atol.
+        probe = np.asarray(ref.fused_step(
+            y, K, K[-1], t, t_new, dt_cur, safe_dt, running,
+            prev_inv, prev2_inv, 0.05, 1e-3, **kw)[1])
+        atol = float(0.05 * np.median(probe)) if probe.any() else 0.05
+        r = ref.fused_step(y, K, K[-1], t, t_new, dt_cur, safe_dt, running,
+                           prev_inv, prev2_inv, atol, 1e-3, **kw)
+        p = pi.fused_step(y, K, K[-1], t, t_new, dt_cur, safe_dt, running,
+                          prev_inv, prev2_inv, atol, 1e-3, interpret=True, **kw)
+        if tab.b_err is not None:
+            accept = np.asarray(r[2])[np.asarray(running)]
+            assert accept.any() and (~accept).any(), "want a mixed batch"
+        for rr, pp in zip(r[:9], p[:9]):
+            np.testing.assert_allclose(np.asarray(rr), np.asarray(pp),
+                                       rtol=3e-5, atol=1e-5)
+        for rc, pc in zip(r[9], p[9]):
+            np.testing.assert_allclose(np.asarray(rc), np.asarray(pc),
+                                       rtol=3e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", EXPLICIT_FSAL)
+    def test_poly_matches_ref(self, name):
+        tab = TABLEAUS[name]
+        b, f = 6, 19
+        (y, _, t, t_new, dt_cur, safe_dt,
+         running, prev_inv, prev2_inv) = _fused_inputs(3, b, f, tab.stages)
+        # Moderate dt keeps the error estimate well above float32 cancellation
+        # noise (a tiny estimate is the difference of O(1) stage slopes).
+        dt_cur = dt_cur * 4.0
+        safe_dt = dt_cur * 0.9
+        t_new = t + safe_dt
+        poly = (0.0, 1.0, -1.0)  # logistic: dy/dt = y - y^2
+        f0 = ref.poly_eval(y, poly)
+        a, c, b_sol, b_err = _tableau_arrays(tab, np.float32)
+        kw = dict(a=tuple(map(tuple, a.tolist())), c=tuple(c.tolist()),
+                  b_sol=tuple(b_sol.tolist()), b_err=tuple(b_err.tolist()),
+                  poly=poly, ctrl=CTRL.filter_params(tab.error_order),
+                  want_coeffs=True)
+        r = ref.fused_step_poly(y, f0, t, t_new, dt_cur, safe_dt, running,
+                                prev_inv, prev2_inv, 1e-4, 1e-3, **kw)
+        p = pi.fused_step_poly(y, f0, t, t_new, dt_cur, safe_dt, running,
+                               prev_inv, prev2_inv, 1e-4, 1e-3,
+                               interpret=True, **kw)
+        # State outputs are tight; the error estimate b_err@K is a CANCELLING
+        # combination of O(1) stage slopes, so the controller outputs derived
+        # from it (err_ratio, dt_out, new_inv*) carry percent-level float32
+        # summation-order noise for high-order tableaus -- gate them loosely.
+        tight, loose = (0, 3, 4, 5), (1, 6, 7, 8)
+        for i in tight:
+            np.testing.assert_allclose(np.asarray(r[i]), np.asarray(p[i]),
+                                       rtol=2e-4, atol=1e-5)
+        for i in loose:
+            np.testing.assert_allclose(np.asarray(r[i]), np.asarray(p[i]),
+                                       rtol=3e-2, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(r[2]), np.asarray(p[2]))
+        for rc, pc in zip(r[9], p[9]):
+            np.testing.assert_allclose(np.asarray(rc), np.asarray(pc),
+                                       rtol=2e-4, atol=1e-5)
+
+    def test_running_mask_freezes_state(self):
+        # The contract the loop relies on: a non-running instance commits
+        # NOTHING -- y, f, t keep their inputs and dt keeps the standing
+        # proposal, regardless of what the controller would have decided.
+        b, f, s = 8, 12, 7
+        (y, K, t, t_new, dt_cur, safe_dt,
+         running, prev_inv, prev2_inv) = _fused_inputs(11, b, f, s)
+        running = jnp.asarray([True, False] * 4)
+        _, _, b_sol, b_err = _tableau_arrays(TABLEAUS["dopri5"], np.float32)
+        kw = dict(b_sol=tuple(b_sol.tolist()), b_err=tuple(b_err.tolist()),
+                  ctrl=CTRL.filter_params(5), want_coeffs=False)
+        for impl, extra in ((ref.fused_step, {}), (pi.fused_step, {"interpret": True})):
+            (y1, ratio, accept, y_out, f_out, t_out, dt_out,
+             i1, i2, coeffs) = impl(
+                y, K, K[-1], t, t_new, dt_cur, safe_dt, running,
+                prev_inv, prev2_inv, 1e-2, 1e-3, **kw, **extra)
+            frozen = ~np.asarray(running)
+            assert not np.asarray(accept)[frozen].any()
+            np.testing.assert_array_equal(np.asarray(y_out)[frozen], np.asarray(y)[frozen])
+            np.testing.assert_array_equal(np.asarray(f_out)[frozen], np.asarray(K)[0][frozen])
+            np.testing.assert_array_equal(np.asarray(t_out)[frozen], np.asarray(t)[frozen])
+            np.testing.assert_array_equal(np.asarray(dt_out)[frozen], np.asarray(dt_cur)[frozen])
+            assert coeffs is None
+
+
+class TestFusedSolve:
+    """The fused=True fast path end to end against the unfused solver."""
+
+    def _solve(self, term, y0, fused, method="dopri5", dense=True, **kw):
+        te = jnp.linspace(0.0, 2.0, 9) if dense else None
+        return solve_ivp(term, y0, te, t_start=0.0, t_end=2.0, dense=dense,
+                         method=method, controller=pid_controller(),
+                         rtol=1e-4, atol=1e-7, fused=fused, **kw)
+
+    @pytest.mark.parametrize("method", EXPLICIT_FSAL)
+    @pytest.mark.parametrize("dense", [False, True])
+    def test_bitwise_equal_on_ref_backend(self, method, dense):
+        old = ops.backend()
+        ops.set_backend("ref")
+        try:
+            y0 = jnp.asarray(np.random.default_rng(5).uniform(0.5, 1.5, (6, 8)),
+                             jnp.float32)
+            term = lambda t, y, args: -y + 0.1 * jnp.sin(y)
+            a = self._solve(term, y0, False, method=method, dense=dense)
+            c = self._solve(term, y0, True, method=method, dense=dense)
+            np.testing.assert_array_equal(np.asarray(a.ys), np.asarray(c.ys))
+            np.testing.assert_array_equal(np.asarray(a.ts), np.asarray(c.ts))
+            np.testing.assert_array_equal(np.asarray(a.status), np.asarray(c.status))
+            for key in ("n_steps", "n_accepted", "n_f_evals"):
+                np.testing.assert_array_equal(
+                    np.asarray(a.stats[key]), np.asarray(c.stats[key]), err_msg=key)
+            # The counter proves the megakernel path actually ran every step.
+            np.testing.assert_array_equal(np.asarray(c.stats["n_fused_steps"]),
+                                          np.asarray(c.stats["n_steps"]))
+            assert "n_fused_steps" not in a.stats
+        finally:
+            ops.set_backend(old)
+
+    def test_polynomial_term_bitwise_and_fused(self):
+        old = ops.backend()
+        ops.set_backend("ref")
+        try:
+            y0 = jnp.asarray(np.random.default_rng(6).uniform(0.5, 1.5, (5, 7)),
+                             jnp.float32)
+            term = polynomial_term(0.0, 1.0, -1.0)  # logistic
+            assert isinstance(term, PolynomialTerm)
+            a = self._solve(term, y0, False)
+            c = self._solve(term, y0, True)
+            np.testing.assert_array_equal(np.asarray(a.ys), np.asarray(c.ys))
+            np.testing.assert_array_equal(np.asarray(a.stats["n_f_evals"]),
+                                          np.asarray(c.stats["n_f_evals"]))
+            np.testing.assert_array_equal(np.asarray(c.stats["n_fused_steps"]),
+                                          np.asarray(c.stats["n_steps"]))
+        finally:
+            ops.set_backend(old)
+
+    def test_interpret_backend_fused_solve(self):
+        old = ops.backend()
+        ops.set_backend("interpret")
+        try:
+            y0 = jnp.ones((3, 4), jnp.float32)
+            sol = self._solve(polynomial_term(0.0, -1.0), y0, True, method="tsit5")
+            exp = np.exp(-np.asarray(sol.ts))[..., None] * np.ones((1, 1, 4))
+            np.testing.assert_allclose(np.asarray(sol.ys), exp, rtol=1e-3, atol=1e-5)
+            assert "n_fused_steps" in sol.stats
+        finally:
+            ops.set_backend(old)
+
+    @pytest.mark.parametrize("method", ["heun", "rk4"])
+    def test_fallback_for_non_fsal_methods(self, method):
+        # Non-FSAL (heun) and fixed-step (rk4) tableaus must fall back to the
+        # unfused path transparently: same results as fused=False, no counter.
+        y0 = jnp.ones((2, 3), jnp.float32)
+        term = polynomial_term(0.0, -1.0)
+        kw = {} if method == "heun" else {"dt0": 0.05}
+        a = solve_ivp(term, y0, jnp.linspace(0.0, 1.0, 5), method=method,
+                      fused=False, **kw)
+        c = solve_ivp(term, y0, jnp.linspace(0.0, 1.0, 5), method=method,
+                      fused=True, **kw)
+        np.testing.assert_array_equal(np.asarray(a.ys), np.asarray(c.ys))
+        assert "n_fused_steps" not in c.stats
