@@ -17,6 +17,17 @@ ways to serve the identical stream:
 Reports steady-state solves/sec for both, the speedup (acceptance bar:
 >= 5x on CPU at max_batch=16), and the service's pad-waste fraction.
 
+Two further suites cover the async engine:
+
+  async_overlap  the identical pack-bound stream served blocking
+                 (``max_inflight=0``: launch + harvest inline, the pre-async
+                 service) vs async (``max_inflight=4``): non-blocking
+                 dispatch overlaps host packing of bucket N+1 with device
+                 execution of bucket N.  Acceptance bar: >= 1.3x solves/sec
+                 at max_batch=16.
+  ragged_shard   ``sharded_solve`` on a batch that does not divide the mesh
+                 (padded per shard) -- the serve-time uneven-shard path.
+
 Usage: python -m benchmarks.serving_bench [--json [PATH]] [--requests N]
 """
 
@@ -82,35 +93,160 @@ def _per_request(reqs) -> float:
                       jnp.asarray([req.t0], jnp.float32),
                       jnp.asarray([req.t1], jnp.float32), req.args[None])
 
-    # Warm both feature-shape programs, then time the stream.
+    # Warm both feature-shape programs, then time the stream (best of 2
+    # laps: the gate compares absolute rates, so per-lap scheduler noise
+    # must not leak into the committed baseline).
     for req in reqs[: 2 * len(FEATURES)]:
         jax.block_until_ready(run(req).ys)
-    t0 = time.perf_counter()
-    for req in reqs:
-        jax.block_until_ready(run(req).ys)
-    return len(reqs) / (time.perf_counter() - t0)
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        for req in reqs:
+            jax.block_until_ready(run(req).ys)
+        best = min(best, time.perf_counter() - t0)
+    return len(reqs) / best
 
 
-def _service(reqs) -> tuple[float, dict]:
-    """Solves/sec through the coalescing service (prewarmed, steady state)."""
+def _service(reqs, *, features=FEATURES, max_inflight=4) -> tuple[float, dict]:
+    """Solves/sec through the coalescing service (prewarmed, steady state).
+
+    ``max_inflight=0`` is the blocking pre-async service (harvest inline);
+    any other value runs the non-blocking pipeline."""
     svc = SolveService(max_batch=MAX_BATCH, max_delay=None,
-                       default_method="dopri5")
-    for feat in FEATURES:
+                       default_method="dopri5", max_inflight=max_inflight)
+    for feat in features:
         svc.prewarm(SolveRequest(
             f=_decay, y0=jnp.ones((feat,), jnp.float32), t0=0.0, t1=T1,
             args=jnp.ones((feat,), jnp.float32), rtol=1e-3,
         ), batch_classes=[MAX_BATCH])
-    # One warm lap outside the timed window (mirrors the baseline's warmup).
+    # One warm lap outside the timed window (mirrors the baseline's warmup),
+    # then best of 3 timed laps over the same stream.
     for req in reqs[: 2 * MAX_BATCH]:
         svc.submit(req)
     svc.flush()
-    t0 = time.perf_counter()
-    futures = [svc.submit(req) for req in reqs]
+    svc.drain()
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        futures = [svc.submit(req) for req in reqs]
+        svc.flush()
+        svc.drain()
+        for fut in futures:
+            fut.result(flush=False)
+        best = min(best, time.perf_counter() - t0)
+    return len(reqs) / best, svc.stats()
+
+
+ASYNC_FEATURES = (48, 64)
+ASYNC_RTOL = 1e-6
+ASYNC_SPAN = (2.0, 4.0)
+
+
+def _async_stream(n: int, seed: int = 1) -> list[SolveRequest]:
+    """The overlap suite's stream: same mixed-shape round-robin, but sized so
+    host packing and device execution are comparable -- the regime where
+    overlapping them pays (pure pack-bound or pure device-bound streams have
+    nothing to hide)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        feat = ASYNC_FEATURES[i % len(ASYNC_FEATURES)]
+        reqs.append(SolveRequest(
+            f=_decay,
+            y0=jnp.asarray(rng.uniform(0.5, 1.5, (feat,)), jnp.float32),
+            t0=0.0,
+            t1=float(rng.uniform(*ASYNC_SPAN)),
+            args=jnp.asarray(rng.uniform(0.5, 2.0, (feat,)), jnp.float32),
+            rtol=ASYNC_RTOL,
+        ))
+    return reqs
+
+
+def _overlap_service(reqs, max_inflight):
+    svc = SolveService(max_batch=MAX_BATCH, max_delay=None,
+                       default_method="dopri5", max_inflight=max_inflight)
+    for feat in ASYNC_FEATURES:
+        svc.prewarm(SolveRequest(
+            f=_decay, y0=jnp.ones((feat,), jnp.float32), t0=0.0, t1=T1,
+            args=jnp.ones((feat,), jnp.float32), rtol=1e-3,
+        ), batch_classes=[MAX_BATCH])
+    for req in reqs[: 2 * MAX_BATCH]:
+        svc.submit(req)
     svc.flush()
-    for fut in futures:
-        fut.result(flush=False)
-    rate = len(reqs) / (time.perf_counter() - t0)
-    return rate, svc.stats()
+    svc.drain()
+
+    def lap() -> float:
+        t0 = time.perf_counter()
+        futures = [svc.submit(req) for req in reqs]
+        svc.flush()
+        svc.drain()
+        for fut in futures:
+            fut.result(flush=False)
+        return time.perf_counter() - t0
+
+    return svc, lap
+
+
+def _async_overlap_rows(requests: int):
+    """Blocking vs async on the identical stream, laps *interleaved*
+    (B A B A ...) so machine-load drift hits both modes equally and the
+    speedup ratio stays meaningful on noisy shared hosts; each mode reports
+    its best lap."""
+    mix = f"b<=16 f={'/'.join(map(str, ASYNC_FEATURES))} dopri5"
+    reqs = _async_stream(requests)
+    svc_block, lap_block = _overlap_service(reqs, max_inflight=0)
+    svc_async, lap_async = _overlap_service(reqs, max_inflight=4)
+    t_block, t_async = float("inf"), float("inf")
+    for _ in range(3):
+        t_block = min(t_block, lap_block())
+        t_async = min(t_async, lap_async())
+    r_block = len(reqs) / t_block
+    r_async = len(reqs) / t_async
+    speedup = r_async / r_block
+    st = svc_async.stats()
+    split = f"pack_s={st['pack_s']:.3f} device_s={st['device_s']:.3f}"
+    return [
+        ("service_blocking/solves_per_sec", r_block,
+         f"{mix} max_inflight=0 (launch+harvest inline)"),
+        ("service_async/solves_per_sec", r_async,
+         f"{mix} max_inflight=4 speedup_vs_blocking={speedup:.2f}x"),
+        ("service_async/speedup_vs_blocking", speedup,
+         f"overlap scales with free host cores (bar: >= 1.3x multicore, "
+         f"~1x on a 1-core box); {split}"),
+    ]
+
+
+def _ragged_shard_rows():
+    from jax.sharding import Mesh
+
+    from repro.core import sharded_solve
+
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs), ("data",))
+    n_dev = len(devs)
+    # One instance more than divides the mesh: every shard pads (the worst
+    # ragged case).  On one device nothing pads -- the row then tracks the
+    # sharded front end's overhead on the same workload.
+    b = 64 * n_dev + (1 if n_dev > 1 else 0)
+    rng = np.random.default_rng(2)
+    y0 = jnp.asarray(rng.uniform(0.5, 1.5, (b, 32)), jnp.float32)
+    args = jnp.asarray(1.0, jnp.float32)
+
+    def run():
+        sol = sharded_solve(mesh, _decay, y0, None, t_start=0.0, t_end=T1,
+                            rtol=1e-6, atol=1e-6, args=args)
+        jax.block_until_ready(sol.ys)
+        return sol
+
+    run()  # compile
+    best = min(
+        (lambda t0: (run(), time.perf_counter() - t0)[1])(time.perf_counter())
+        for _ in range(5)
+    )
+    return [
+        ("ragged_shard/instances_per_sec", b / best,
+         f"b={b} over {n_dev} device(s), per-shard padding"),
+    ]
 
 
 def rows(requests: int = 512):
@@ -130,6 +266,8 @@ def rows(requests: int = 512):
         ("service/cache_hit_rate",
          stats["cache_hits"] / max(1, stats["cache_hits"] + stats["cache_misses"]),
          f"hits={stats['cache_hits']} misses={stats['cache_misses']}"),
+        *_async_overlap_rows(requests),
+        *_ragged_shard_rows(),
     ]
 
 
@@ -152,7 +290,10 @@ def main() -> None:
                     "value": time.time() - t0, "derived": ""})
 
     if opts.json:
-        payload = {"bench": "serving", "unit": "solves/sec", "rows": records}
+        from .common import calibration_us
+
+        payload = {"bench": "serving", "unit": "solves/sec",
+                   "calibration_us": calibration_us(), "rows": records}
         with open(opts.json, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {len(records)} rows to {opts.json}", flush=True)

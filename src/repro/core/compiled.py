@@ -245,6 +245,15 @@ class CompiledSolver:
     def cache_clear(self) -> None:
         self._cache.clear()
 
+    @staticmethod
+    def _device_key(device):
+        """Cache-key component of a placement request: ``None`` (default
+        placement) and explicit devices key distinct entries, because an AOT
+        executable is pinned to the device it lowered for -- one executable
+        per device is exactly what lets a serving process round-robin
+        concurrent buckets across the whole mesh."""
+        return None if device is None else (device.platform, device.id)
+
     def _tol_key(self, x, i):
         """Shape class of a tolerance override: ``None`` when absent *or*
         when it matches the driver leaf's aval (same program either way --
@@ -256,7 +265,8 @@ class CompiledSolver:
         k = _leaf_key(x)
         return None if k == self._driver_tol_keys[i] else k
 
-    def _key(self, f, y0, t_eval, t_start, t_end, dt0, args, rtol=None, atol=None) -> tuple:
+    def _key(self, f, y0, t_eval, t_start, t_end, dt0, args, rtol=None,
+             atol=None, device=None) -> tuple:
         return (
             self._driver_key,
             _f_key(f),
@@ -268,17 +278,20 @@ class CompiledSolver:
             _tree_key(args),
             self._tol_key(rtol, 0),
             self._tol_key(atol, 1),
+            self._device_key(device),
         )
 
     def cache_key(self, f, y0, t_eval=None, *, t_start=None, t_end=None,
-                  dt0=None, args: Any = None, rtol=None, atol=None) -> tuple:
+                  dt0=None, args: Any = None, rtol=None, atol=None,
+                  device=None) -> tuple:
         """The hashable identity of the compiled program a ``solve`` with
         these arguments (or ``ShapeDtypeStruct`` specs) would dispatch to:
         (driver static config, dynamics identity, every dynamic argument's
-        shape/dtype class).  Two argument sets with equal keys share one
-        executable.  The serving layer buckets requests by exactly this key,
-        so a bucket never straddles two programs."""
-        return self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+        shape/dtype class, placement).  Two argument sets with equal keys
+        share one executable.  The serving layer buckets requests by exactly
+        this key, so a bucket never straddles two programs."""
+        return self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol,
+                         device)
 
     def _donate(self, t_eval) -> bool:
         """Resolve the donation policy: 'auto' donates y0 exactly when the
@@ -302,8 +315,9 @@ class CompiledSolver:
         return _CacheEntry(jitted, self._driver_leaves)
 
     def _lookup(self, f, y0, t_eval, t_start, t_end, dt0, args,
-                rtol=None, atol=None) -> _CacheEntry:
-        key = self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+                rtol=None, atol=None, device=None) -> _CacheEntry:
+        key = self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol,
+                        device)
         entry = self._cache.get(key)
         if entry is None:
             entry = self._build(f, t_eval)
@@ -322,6 +336,7 @@ class CompiledSolver:
         args: Any = None,
         rtol=None,
         atol=None,
+        device=None,
     ) -> CompiledSolve:
         """AOT-compile for the given argument specs (``jax.ShapeDtypeStruct``
         or example arrays) and return the callable executable handle.  The
@@ -332,16 +347,31 @@ class CompiledSolver:
         ``rtol``/``atol`` specs select the tolerance shape class to build:
         pass e.g. ``jax.ShapeDtypeStruct((b,), jnp.float32)`` to AOT-compile
         the per-instance-tolerance variant a serving bucket will call with
-        (omitting them compiles the driver-default class)."""
-        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+        (omitting them compiles the driver-default class).
+
+        ``device`` pins the executable to one device of the mesh (every
+        dynamic argument must then live there at call time -- ``solve`` with
+        the same ``device`` places them).  Each device compiles its own
+        entry; the serving layer prewarms one per device it round-robins
+        over."""
+        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol,
+                             atol, device)
         if entry.executable is None:
             tol_leaves = list(self._driver_leaves)
             if rtol is not None:
                 tol_leaves[0] = rtol
             if atol is not None:
                 tol_leaves[1] = atol
+            spec_of = _spec
+            if device is not None:
+                from jax.sharding import SingleDeviceSharding
+
+                sharding = SingleDeviceSharding(device)
+                spec_of = lambda x: jax.ShapeDtypeStruct(
+                    _spec(x).shape, _spec(x).dtype, sharding=sharding
+                )
             abstract = jax.tree_util.tree_map(
-                _spec, (y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
+                spec_of, (y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
             )
             entry.executable = entry.jitted.lower(*abstract).compile()
         return CompiledSolve(entry)
@@ -351,21 +381,23 @@ class CompiledSolver:
 
         Each element of ``specs`` is a kwargs mapping for :meth:`compile`
         minus ``f`` (so it must carry ``y0`` plus whichever of ``t_eval``/
-        ``t_start``/``t_end``/``dt0``/``args``/``rtol``/``atol`` the serving
-        call will pass), with ``jax.ShapeDtypeStruct`` leaves standing in for
-        the concrete arrays.  Returns the number of entries compiled for the
-        first time (already-warm points are skipped for free, so prewarming
-        is idempotent)."""
+        ``t_start``/``t_end``/``dt0``/``args``/``rtol``/``atol``/``device``
+        the serving call will pass), with ``jax.ShapeDtypeStruct`` leaves
+        standing in for the concrete arrays.  Returns the number of entries
+        compiled for the first time (already-warm points are skipped for
+        free, so prewarming is idempotent)."""
         n_new = 0
         for spec in specs:
             spec = dict(spec)
             kw = {k: spec.pop(k, None)
-                  for k in ("t_eval", "t_start", "t_end", "dt0", "args", "rtol", "atol")}
+                  for k in ("t_eval", "t_start", "t_end", "dt0", "args",
+                            "rtol", "atol", "device")}
             y0 = spec.pop("y0")
             if spec:
                 raise TypeError(f"unknown prewarm spec keys: {sorted(spec)}")
             key = self._key(f, y0, kw["t_eval"], kw["t_start"], kw["t_end"],
-                            kw["dt0"], kw["args"], kw["rtol"], kw["atol"])
+                            kw["dt0"], kw["args"], kw["rtol"], kw["atol"],
+                            kw["device"])
             entry = self._cache.data.get(key)
             if entry is not None and entry.executable is not None:
                 continue
@@ -385,8 +417,19 @@ class CompiledSolver:
         args: Any = None,
         rtol=None,
         atol=None,
+        device=None,
     ) -> Solution:
-        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+        """Dispatch a solve through the zero-retrace cache.  ``device``
+        selects the per-device program variant (see :meth:`compile`) and
+        commits every dynamic argument there first -- a no-op transfer for
+        arguments the caller already placed, which is the serving fast path
+        (the batch packer lands buffers on the target device directly)."""
+        if device is not None:
+            y0, t_eval, t_start, t_end, dt0, args, rtol, atol = jax.device_put(
+                (y0, t_eval, t_start, t_end, dt0, args, rtol, atol), device
+            )
+        entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol,
+                             atol, device)
         return entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
 
 
@@ -442,8 +485,15 @@ def sharded_solve(
     ``dt0``/tolerances, 2-D ``(b, n)`` ``t_eval`` and any ``args`` leaf whose
     leading dim equals the batch size shard along ``axis_name``; everything
     else is replicated (1-D ``t_eval`` is always replicated -- it is a shared
-    time grid, whatever its length).  The batch must divide evenly by the
-    mesh axis.
+    time grid, whatever its length).
+
+    The batch does NOT have to divide the mesh: a ragged batch is padded up
+    to the next multiple of the mesh axis with copies of instance 0 (the
+    same trick the serving layer uses for bucket padding -- instances never
+    interact, so pad rows only cost FLOPs), solved, and sliced back, so the
+    returned ``Solution`` covers exactly the ``b`` requested instances and
+    every real instance matches the unsharded program.  A serve-time hot
+    bucket can therefore span the mesh whatever its size.
 
     Pass a configured driver via ``solver=`` or let ``method``/``rtol``/
     ``atol``/``solver_kw`` build an ``AutoDiffAdjoint``.  The shard-mapped
@@ -473,16 +523,34 @@ def sharded_solve(
     y0_leaves = jax.tree_util.tree_leaves(y0)
     if not y0_leaves:
         raise ValueError("y0 has no array leaves")
-    batch = y0_leaves[0].shape[0]
+    requested = y0_leaves[0].shape[0]
     n_dev = mesh.shape[axis_name]
-    if batch % n_dev != 0:
-        raise ValueError(
-            f"batch {batch} does not divide evenly over mesh axis "
-            f"{axis_name!r} of size {n_dev}"
-        )
+    n_pad = (-requested) % n_dev
 
     driver_leaves, driver_def = jax.tree_util.tree_flatten(solver)
     inputs = (driver_leaves, y0, t_eval, t_start, t_end, dt0, args)
+
+    if n_pad:
+        # Ragged batch: pad every batch-leading leaf (the same leaves the
+        # sharding rule below would shard) to the next multiple of the mesh
+        # axis by replicating instance 0, and slice the padding back off the
+        # result.  The 1-D t_eval exception mirrors spec_for: a shared grid
+        # is never a batch axis, whatever its length.
+        def pad_tree(tree):
+            if tree is t_eval and t_eval is not None and jnp.ndim(t_eval) == 1:
+                return tree
+            return jax.tree_util.tree_map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.repeat(x[:1], n_pad, axis=0)], axis=0)
+                if jnp.ndim(x) >= 1 and x.shape[0] == requested else x,
+                tree,
+            )
+
+        driver_leaves, y0, t_eval, t_start, t_end, dt0, args = (
+            pad_tree(tree) for tree in inputs
+        )
+        inputs = (driver_leaves, y0, t_eval, t_start, t_end, dt0, args)
+    batch = requested + n_pad
 
     key = (
         mesh, axis_name, driver_def, _f_key(f),
@@ -514,4 +582,5 @@ def sharded_solve(
             )
         )
         _SHARDED_CACHE.put(key, entry)
-    return entry(*inputs)
+    sol = entry(*inputs)
+    return sol.slice_batch(slice(0, requested)) if n_pad else sol

@@ -22,14 +22,24 @@ span, tolerances and solver configuration.  ``SolveService`` closes that gap:
     ``max_queue``: a submit that would exceed it first drains every bucket.
 3.  Flushing pads the batch to a **power-of-two batch-size class** (so at
     most ``log2(max_batch)+1`` programs exist per bucket, all prewarmable)
-    by replicating the first request's row, stacks rows into batched arrays,
-    and executes through a per-driver-config ``CompiledSolver`` -- repeated
-    flushes of a warm bucket never trace.
-4.  The batched ``Solution`` is sliced back into per-request solutions
-    (``Solution.slice_batch`` / ``truncate_eval``).  Padding can never
-    perturb real requests: instances do not interact (the batch-invariance
-    property the solver's test suite enforces), so a padded row only costs
-    the wasted FLOPs tracked in ``stats()['pad_waste']``.
+    by replicating the first request's row, stacks rows into batched arrays
+    placed on the **next device in round-robin order**, and *launches* the
+    per-device ``CompiledSolver`` program without waiting for it: JAX
+    dispatch is asynchronous, so the host returns to packing the next bucket
+    while the device integrates this one.  One process drives the whole
+    mesh -- concurrent buckets land on different devices.
+4.  Launched batches sit in a bounded **in-flight window** (``max_inflight``;
+    exceeding it blocks on the oldest launch -- backpressure, so device
+    memory holds at most ``max_inflight`` batches of results).  Completed
+    batches are **harvested** -- without blocking -- on every ``submit``/
+    ``poll``/``done()`` (or blocking via ``drain()``/``result()``): one
+    device-to-host transfer per field, then the batched ``Solution`` is
+    sliced into per-request solutions (``Solution.slice_batch`` /
+    ``truncate_eval``) and the futures resolve.  ``max_inflight=0`` disables
+    the pipeline entirely (launch + harvest inline -- the blocking service).
+    Padding can never perturb real requests: instances do not interact (the
+    batch-invariance property the solver's test suite enforces), so a padded
+    row only costs the wasted FLOPs tracked in ``stats()['pad_waste']``.
 
 Padding policy:
 
@@ -55,23 +65,27 @@ The per-request vector-field contract is the library's usual one: requests
 carry *unbatched* states (1-D arrays or PyTrees of unbatched leaves) and the
 service stacks them, so a flat-state ``f`` sees ``(b,)`` times, ``(b, f)``
 states and args with a leading batch axis (per-request args are stacked).
-PyTree states go through the drivers' per-instance convention, where ``args``
-is passed through *shared* -- per-request args for PyTree states are
-therefore rejected (see ROADMAP: ragged/structured-args serving).
+PyTree states go through the drivers' per-instance convention; per-request
+``args`` for them ride the ravel boundary (``ODETerm.batched_args``): each
+leaf is stacked along a new leading batch axis and vmapped per instance, so
+requests with *different parameter values* share one bucket and one compiled
+program instead of splitting the cache key per parameter set.
 
 Statistics: ``stats()`` exposes the serving counters (queue depth, batches,
-pad waste, solves/sec, compiled-program cache hits/misses) plus the summed
-per-instance accumulators of every ``Solution`` served, so anything a
-component contributes through the statistics registry (``n_steps``,
-``n_f_evals``, ``n_newton_iters``, user extras) aggregates across the
-service for free under ``solver/<name>``.
+pad waste, solves/sec, in-flight window, compiled-program cache hits/misses)
+and the async time split -- ``queue_s`` (submit to launch), ``pack_s`` (host
+stacking + dispatch), ``device_s`` (launch to observed completion) -- plus
+the summed per-instance accumulators of every ``Solution`` served, so
+anything a component contributes through the statistics registry
+(``n_steps``, ``n_f_evals``, ``n_newton_iters``, user extras) aggregates
+across the service for free under ``solver/<name>``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Callable
 
 import jax
@@ -83,6 +97,7 @@ from .drivers import AutoDiffAdjoint, _Driver
 from .solution import Solution
 from .static import tree_key
 from .stepper import AbstractStepper
+from .terms import ODETerm
 
 
 def next_pow2(n: int) -> int:
@@ -130,7 +145,7 @@ class _Item:
     """A normalized, validated request queued in a bucket."""
 
     __slots__ = ("f", "y0", "t0", "t1", "t_eval", "n_eval", "args",
-                 "rtol", "atol", "dt0")
+                 "rtol", "atol", "dt0", "t_enq")
 
     def __init__(self, f, y0, t0, t1, t_eval, n_eval, args, rtol, atol, dt0):
         self.f = f
@@ -143,38 +158,68 @@ class _Item:
         self.rtol = rtol
         self.atol = atol
         self.dt0 = dt0
+        self.t_enq = 0.0  # service clock at submit, for the queue_s split
+
+
+class _Inflight:
+    """One launched-but-unharvested batch: the handle the async engine keeps
+    between dispatch and delivery."""
+
+    __slots__ = ("batch", "bucket", "sol", "n_rows", "launch_pc", "device")
+
+    def __init__(self, batch, bucket, sol, n_rows, launch_pc, device):
+        self.batch = batch          # [(item, future), ...] in submit order
+        self.bucket = bucket
+        self.sol = sol              # batched Solution of device arrays
+        self.n_rows = n_rows        # padded batch size
+        self.launch_pc = launch_pc  # perf_counter at dispatch return
+        self.device = device
 
 
 class SolveFuture:
     """Handle to one submitted request.
+
+    A request moves through three states: *queued* (waiting in its bucket),
+    *in-flight* (its batch launched on a device, result not yet harvested)
+    and *done*.  ``done()`` is non-blocking: it harvests any in-flight
+    batches whose device work has finished, then reports whether this one
+    resolved.
 
     ``result()`` returns the request's ``Solution`` view (batch axis kept,
     with exactly one instance: ``ys`` leaves are ``(1, ...)``, stats are
     ``(1,)`` -- the same container contract as every other solve), with
     fields delivered as host NumPy arrays: serving results leave the device
     in one transfer per batch, and the per-request views are zero-copy
-    slices of it.  If the request is still queued, ``result()`` flushes its
+    slices of it.  If the request is in-flight, ``result()`` blocks until
+    its batch completes; if it is still *queued*, ``result()`` flushes its
     bucket first (pass ``flush=False`` to get an error instead, e.g. from
-    latency-sensitive callers that only want completed work).
+    latency-sensitive callers that only want already-launched work).
     """
 
-    __slots__ = ("_service", "_bucket", "_solution", "_error")
+    __slots__ = ("_service", "_bucket", "_inflight", "_solution", "_error")
 
     def __init__(self, service: "SolveService", bucket: "_Bucket"):
         self._service = service
         self._bucket = bucket
+        self._inflight: _Inflight | None = None
         self._solution: Solution | None = None
         self._error: BaseException | None = None
 
     def done(self) -> bool:
+        if self._solution is None and self._error is None:
+            self._service._harvest_ready()
         return self._solution is not None or self._error is not None
 
     def result(self, flush: bool = True) -> Solution:
-        if not self.done():
-            if not flush:
-                raise RuntimeError("request still queued; pass flush=True or "
-                                   "call SolveService.flush()/poll() first")
-            self._service._execute(self._bucket)
+        if self._solution is None and self._error is None:
+            if self._inflight is None:
+                if not flush:
+                    raise RuntimeError(
+                        "request still queued; pass flush=True or call "
+                        "SolveService.flush()/poll() first")
+                self._service._execute(self._bucket)
+            if self._inflight is not None:
+                self._service._harvest(self._inflight, block=True)
         if self._error is not None:
             raise self._error
         return self._solution
@@ -205,25 +250,32 @@ class SolveService:
 
     Example (serving loop)::
 
-        svc = SolveService(max_batch=16, max_delay=2e-3)
+        svc = SolveService(max_batch=16, max_delay=2e-3, max_inflight=4)
         svc.prewarm(SolveRequest(f, y0_example, 0.0, 1.0))   # AOT, optional
         futs = [svc.submit(SolveRequest(f, y0, t0, t1)) for ...]
-        svc.poll()                       # deadline-flush from your event loop
-        sols = [f.result() for f in futs]  # drains whatever is still queued
+        svc.poll()     # harvest completed launches + deadline-flush
+        svc.flush()    # launch whatever is still queued (non-blocking)
+        sols = [f.result() for f in futs]  # blocks per in-flight batch
 
     Parameters: ``max_batch`` (power of two; flush-on-size threshold and
     padded-batch ceiling), ``max_delay`` (seconds a request may wait before
     its bucket is flushed on the next ``submit``/``poll``; ``None`` disables
     deadline flushing), ``max_queue`` (total backlog bound; exceeding it
-    drains every bucket), ``default_method`` (for requests without one),
-    ``donate``/``cache_size`` (forwarded to each ``CompiledSolver``) and
-    ``clock`` (injectable monotonic clock, for deterministic deadline tests).
+    drains every bucket), ``max_inflight`` (launched-but-unharvested batch
+    window; a launch past it first blocks on the oldest in-flight batch --
+    backpressure -- and ``0`` makes every execution synchronous, the
+    pre-async blocking service), ``devices`` (the devices batches round-robin
+    over; default every ``jax.devices()`` -- one process drives the mesh),
+    ``default_method`` (for requests without one), ``donate``/``cache_size``
+    (forwarded to each ``CompiledSolver``) and ``clock`` (injectable
+    monotonic clock, for deterministic deadline tests).
 
     Memory: compiled programs are LRU-bounded per driver config
     (``cache_size``); bucket/driver/solver bookkeeping grows with the number
     of *distinct configurations served* (shape classes x methods), which a
     deployment bounds by construction -- the per-submit hot path only ever
-    touches the buckets that currently have work waiting.
+    touches the buckets that currently have work waiting.  Device memory is
+    bounded by ``max_inflight`` batches of packed inputs + results.
     """
 
     def __init__(
@@ -232,6 +284,8 @@ class SolveService:
         max_batch: int = 16,
         max_delay: float | None = 0.01,
         max_queue: int = 4096,
+        max_inflight: int = 4,
+        devices=None,
         default_method: Any = None,
         donate: bool | str = "auto",
         cache_size: int = 128,
@@ -241,9 +295,15 @@ class SolveService:
             raise ValueError(f"max_batch must be a power of two, got {max_batch}")
         if max_queue < max_batch:
             raise ValueError("max_queue must be at least max_batch")
+        if max_inflight < 0:
+            raise ValueError(f"max_inflight must be >= 0, got {max_inflight}")
         self.max_batch = max_batch
         self.max_delay = max_delay
         self.max_queue = max_queue
+        self.max_inflight = max_inflight
+        self.devices = tuple(jax.devices() if devices is None else devices)
+        if not self.devices:
+            raise ValueError("need at least one device to serve on")
         self.default_method = default_method
         self.donate = donate
         self.cache_size = cache_size
@@ -261,6 +321,8 @@ class SolveService:
         self._driver_memo: dict[Any, _Driver] = {}
         self._driver_keys: dict[int, tuple] = {}
         self._queue_depth = 0
+        self._inflight: deque[_Inflight] = deque()
+        self._rr = 0  # round-robin cursor over self.devices
         self._counters = {
             "n_requests": 0,
             "n_completed": 0,
@@ -270,9 +332,13 @@ class SolveService:
             "n_deadline_flushes": 0,
             "n_size_flushes": 0,
             "n_failed_batches": 0,
+            "n_backpressure_waits": 0,
+            "peak_inflight": 0,
         }
         self._solver_totals: dict[str, float] = {}
-        self._busy_s = 0.0
+        self._queue_s = 0.0
+        self._pack_s = 0.0
+        self._device_s = 0.0
 
     # ------------------------------------------------------------------
     # request normalization and bucketing
@@ -325,16 +391,24 @@ class SolveService:
         leaves = jax.tree_util.tree_leaves(y0)
         if not leaves:
             raise ValueError("request y0 has no array leaves")
+        f = req.f
         args = None
         if req.args is not None:
-            if not flat:
-                raise NotImplementedError(
-                    "per-request args are not supported for PyTree states: "
-                    "the per-instance vector-field convention passes args "
-                    "through unstacked (see ROADMAP open items)"
-                )
             args = (req.args if isinstance(req.args, jax.Array)
                     else jax.tree_util.tree_map(self._as_array, req.args))
+            # Per-request args always batch like y0: each leaf is stacked
+            # along a new leading axis at pack time.  Per-instance dynamics
+            # (PyTree states through the ravel boundary, or explicit
+            # batched=False terms) would see the whole stack shared, so mark
+            # the term batched_args: the vmap then hands each instance its
+            # own args row.  ODETerm hashes by value, so equal wrappers of
+            # one vector field still share a bucket and a compiled program.
+            if isinstance(f, ODETerm):
+                if not flat or not f.batched:
+                    f = dataclasses.replace(f, batched_args=True)
+            elif not flat:
+                f = ODETerm(f, batched=False, with_args=True,
+                            batched_args=True)
         rtol = req.rtol if req.rtol is not None else driver.rtol
         atol = req.atol if req.atol is not None else driver.atol
         for name, tol in (("rtol", rtol), ("atol", atol)):
@@ -353,7 +427,7 @@ class SolveService:
                     f"{t_eval.shape}"
                 )
             n_eval = int(t_eval.shape[0])
-        item = _Item(req.f, y0, float(req.t0), float(req.t1), t_eval, n_eval,
+        item = _Item(f, y0, float(req.t0), float(req.t1), t_eval, n_eval,
                      args, float(rtol), float(atol),
                      None if req.dt0 is None else float(req.dt0))
         return item, driver
@@ -388,17 +462,20 @@ class SolveService:
     # queueing policies
 
     def submit(self, req: SolveRequest) -> SolveFuture:
-        """Queue one request; returns its future.  May execute batches
-        synchronously: the request's own bucket on flush-on-size, expired
-        buckets on flush-on-deadline, everything on backlog overflow."""
+        """Queue one request; returns its future.  May launch batches: the
+        request's own bucket on flush-on-size, expired buckets on
+        flush-on-deadline, everything on backlog overflow.  Launches are
+        non-blocking (unless ``max_inflight`` forces a backpressure wait);
+        completed earlier launches are harvested on the way in."""
         self.poll()
         if self._queue_depth >= self.max_queue:
             self.flush()
         item, driver = self._normalize(req)
         bucket = self._bucket_for(item, driver)
         fut = SolveFuture(self, bucket)
+        item.t_enq = self.clock()
         if not bucket.pending:
-            bucket.oldest = self.clock()
+            bucket.oldest = item.t_enq
             self._waiting[bucket.key] = bucket
         bucket.pending.append((item, fut))
         self._queue_depth += 1
@@ -409,21 +486,35 @@ class SolveService:
         return fut
 
     def poll(self) -> int:
-        """Flush every bucket whose oldest request has waited past
-        ``max_delay``.  Returns the number of batches executed."""
-        if self.max_delay is None or not self._waiting:
+        """One cooperative tick of the serving engine: harvest every
+        in-flight batch whose device work has finished (non-blocking), then
+        launch every bucket that is due -- full ones always, waiting ones
+        when their oldest request has aged past ``max_delay``.  Runs the
+        harvest and the size sweep even with ``max_delay=None`` (deadline
+        flushing disabled), so a ``poll()``-driven event loop always makes
+        progress.  Returns the number of batches launched."""
+        self._harvest_ready()
+        if not self._waiting:
             return 0
-        now = self.clock()
+        now = self.clock() if self.max_delay is not None else None
         n = 0
         for bucket in list(self._waiting.values()):
-            if bucket.pending and now - bucket.oldest >= self.max_delay:
+            if not bucket.pending:
+                continue
+            if len(bucket.pending) >= self.max_batch:
+                self._counters["n_size_flushes"] += 1
+                self._execute(bucket)
+                n += 1
+            elif now is not None and now - bucket.oldest >= self.max_delay:
                 self._counters["n_deadline_flushes"] += 1
                 self._execute(bucket)
                 n += 1
         return n
 
     def flush(self) -> int:
-        """Execute every non-empty bucket.  Returns the number of batches."""
+        """Launch every non-empty bucket (non-blocking; harvest with
+        ``drain()``/``poll()``/``result()``).  Returns the number of
+        batches launched."""
         n = 0
         for bucket in list(self._waiting.values()):
             if bucket.pending:
@@ -431,11 +522,23 @@ class SolveService:
                 n += 1
         return n
 
+    def drain(self, n: int | None = None) -> int:
+        """Blocking harvest of up to ``n`` in-flight batches (oldest first;
+        all of them when ``n`` is None).  Does not launch queued buckets --
+        pair with ``flush()`` for a full barrier.  Returns the number of
+        batches harvested."""
+        harvested = 0
+        while self._inflight and (n is None or harvested < n):
+            self._harvest(self._inflight[0], block=True)
+            harvested += 1
+        return harvested
+
     # ------------------------------------------------------------------
     # packing and execution
 
-    def _pack(self, bucket: _Bucket, items: list[_Item]) -> dict:
-        """Stack per-request rows into the bucket's padded batch arguments.
+    def _pack(self, bucket: _Bucket, items: list[_Item], device) -> dict:
+        """Stack per-request rows into the bucket's padded batch arguments,
+        landed directly on ``device``.
 
         Stacking happens host-side (one NumPy stack + one transfer per
         field) rather than per-row on the device: at serving batch sizes the
@@ -444,30 +547,38 @@ class SolveService:
         b = min(next_pow2(len(items)), self.max_batch)
         rows = items + [items[0]] * (b - len(items))
         td = bucket.time_dtype
-        host_stack = lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs]))
+        put = lambda x: jax.device_put(x, device)
+        host_stack = lambda *xs: put(np.stack([np.asarray(x) for x in xs]))
+        vec = lambda vals: put(np.array(vals, dtype=td))
         kw = dict(
             y0=jax.tree_util.tree_map(host_stack, *[r.y0 for r in rows]),
             t_eval=None,
-            t_start=jnp.asarray(np.array([r.t0 for r in rows]), dtype=td),
-            t_end=jnp.asarray(np.array([r.t1 for r in rows]), dtype=td),
+            t_start=vec([r.t0 for r in rows]),
+            t_end=vec([r.t1 for r in rows]),
             dt0=None,
             args=None,
-            rtol=jnp.asarray(np.array([r.rtol for r in rows]), dtype=td),
-            atol=jnp.asarray(np.array([r.atol for r in rows]), dtype=td),
+            rtol=vec([r.rtol for r in rows]),
+            atol=vec([r.atol for r in rows]),
         )
         if bucket.n_eval_class is not None:
             n_class = bucket.n_eval_class
             grids = [np.concatenate([r.t_eval,
                                      np.full(n_class - r.n_eval, r.t_eval[-1])])
                      for r in rows]
-            kw["t_eval"] = jnp.asarray(np.stack(grids), dtype=td)
+            kw["t_eval"] = put(np.stack(grids).astype(td))
         if bucket.has_args:
             kw["args"] = jax.tree_util.tree_map(host_stack, *[r.args for r in rows])
         if bucket.has_dt0:
-            kw["dt0"] = jnp.asarray(np.array([r.dt0 for r in rows]), dtype=td)
+            kw["dt0"] = vec([r.dt0 for r in rows])
         return kw
 
     def _execute(self, bucket: _Bucket) -> None:
+        """Pack and *launch* a bucket's pending batch on the next device in
+        round-robin order.  Non-blocking: the batch joins the in-flight
+        window and its futures resolve at harvest.  A launch that would
+        exceed ``max_inflight`` first blocks on the oldest in-flight batch
+        (backpressure); ``max_inflight=0`` harvests inline (the blocking
+        service)."""
         if not bucket.pending:
             return
         batch = bucket.pending
@@ -475,26 +586,82 @@ class SolveService:
         bucket.oldest = None
         self._waiting.pop(bucket.key, None)
         self._queue_depth -= len(batch)
+        while self._inflight and len(self._inflight) >= max(1, self.max_inflight):
+            self._counters["n_backpressure_waits"] += 1
+            self._harvest(self._inflight[0], block=True)
+        device = self.devices[self._rr % len(self.devices)]
+        self._rr += 1
         items = [item for item, _ in batch]
-        kw = self._pack(bucket, items)
-        b = jax.tree_util.tree_leaves(kw["y0"])[0].shape[0]
+        now = self.clock()
+        t0 = time.perf_counter()
         try:
-            t0 = time.perf_counter()
-            sol = bucket.solver.solve(bucket.f, **kw)
-            # One device->host transfer per field; the per-request views are
-            # then zero-copy NumPy slices (device-side slicing would pay b
-            # dispatches per field and dominate the batch -- results are
-            # host-delivered by design).
-            sol = jax.tree_util.tree_map(np.asarray, sol)
-            self._busy_s += time.perf_counter() - t0
+            kw = self._pack(bucket, items, device)
+            sol = bucket.solver.solve(bucket.f, device=device, **kw)
         except Exception as e:  # deliver to the owners, keep the service up
             self._counters["n_failed_batches"] += 1
             for _, fut in batch:
                 fut._error = e
             return
+        launch_pc = time.perf_counter()
+        self._pack_s += launch_pc - t0
+        self._queue_s += sum(now - item.t_enq for item in items)
+        b = jax.tree_util.tree_leaves(kw["y0"])[0].shape[0]
         self._counters["n_batches"] += 1
         self._counters["n_rows"] += b
         self._counters["n_pad_rows"] += b - len(batch)
+        rec = _Inflight(batch, bucket, sol, b, launch_pc, device)
+        self._inflight.append(rec)
+        self._counters["peak_inflight"] = max(self._counters["peak_inflight"],
+                                              len(self._inflight))
+        for _, fut in batch:
+            fut._inflight = rec
+        if self.max_inflight == 0:
+            self._harvest(rec, block=True)
+
+    def _harvest_ready(self) -> int:
+        """Harvest every in-flight batch whose device work has finished,
+        without blocking on the ones still running.  Returns the number of
+        batches delivered.
+
+        Probes at most one unfinished record per device: a device executes
+        its launches in order, so once its oldest record is unready, every
+        younger record on it is too -- this runs on every submit, and probing
+        the whole window would rival the pack cost it exists to hide."""
+        n = 0
+        stalled: set[Any] = set()
+        for rec in list(self._inflight):
+            if rec.device in stalled:
+                continue
+            if self._harvest(rec, block=False):
+                n += 1
+            else:
+                stalled.add(rec.device)
+        return n
+
+    def _harvest(self, rec: _Inflight, *, block: bool) -> bool:
+        """Deliver one launched batch: wait for (or probe) the device
+        buffers, transfer the batched ``Solution`` to host in one pass,
+        slice per-request views and resolve the futures."""
+        if not block and not rec.sol.is_ready():
+            return False
+        try:
+            self._inflight.remove(rec)
+        except ValueError:  # already harvested through another entry point
+            return True
+        bucket, batch = rec.bucket, rec.batch
+        try:
+            # One device->host transfer per field; the per-request views are
+            # then zero-copy NumPy slices (device-side slicing would pay b
+            # dispatches per field and dominate the batch -- results are
+            # host-delivered by design).
+            sol = rec.sol.block_until_ready().to_host()
+        except Exception as e:  # deferred device failure surfaces here
+            self._counters["n_failed_batches"] += 1
+            for _, fut in batch:
+                fut._error = e
+                fut._inflight = None
+            return True
+        self._device_s += time.perf_counter() - rec.launch_pc
         self._counters["n_completed"] += len(batch)
         for name, acc in sol.stats.items():
             self._solver_totals[name] = (
@@ -505,6 +672,8 @@ class SolveService:
             if item.n_eval is not None and item.n_eval < bucket.n_eval_class:
                 view = view.truncate_eval(item.n_eval)
             fut._solution = view
+            fut._inflight = None
+        return True
 
     # ------------------------------------------------------------------
     # prewarming and stats
@@ -512,11 +681,12 @@ class SolveService:
     def prewarm(self, example: SolveRequest, batch_classes=None) -> int:
         """AOT-compile the programs ``example``-shaped requests will hit, one
         per power-of-two batch-size class (default: every class up to
-        ``max_batch``), before any traffic arrives.  Returns the number of
-        programs newly compiled; warm classes are skipped, so prewarming is
-        idempotent.  Uses ``CompiledSolver.prewarm`` under the hood -- a
-        subsequent flush of a matching bucket is a pure cache hit and never
-        traces."""
+        ``max_batch``) *per serving device* -- round-robin placement means
+        any bucket can land anywhere on the mesh, so every device needs its
+        own pinned executable.  Returns the number of programs newly
+        compiled; warm classes are skipped, so prewarming is idempotent.
+        Uses ``CompiledSolver.prewarm`` under the hood -- a subsequent flush
+        of a matching bucket is a pure cache hit and never traces."""
         item, driver = self._normalize(example)
         bucket = self._bucket_for(item, driver)
         if batch_classes is None:
@@ -546,15 +716,20 @@ class SolveService:
                 )
             if bucket.has_dt0:
                 spec["dt0"] = vec
-            specs.append(spec)
+            for device in self.devices:
+                specs.append(dict(spec, device=device))
         return bucket.solver.prewarm(bucket.f, specs)
 
     def stats(self) -> dict[str, Any]:
-        """Snapshot of the serving surface: queue/bucket state, padding
-        waste, realized solves/sec (completed requests over accumulated
-        device-busy time), compiled-program cache counters summed over the
-        per-config ``CompiledSolver`` instances, and the aggregated solver
-        statistics registry under ``solver/<name>``."""
+        """Snapshot of the serving surface: queue/bucket/in-flight state,
+        padding waste, the async time split -- ``queue_s`` (submit to
+        launch), ``pack_s`` (host stacking + dispatch), ``device_s``
+        (launch to observed harvest; overlapped launches double-count wall
+        time, which is the point) -- realized solves/sec (completed requests
+        over ``busy_s = pack_s + device_s``, the blocking service's old
+        busy-time definition), compiled-program cache counters summed over
+        the per-config ``CompiledSolver`` instances, and the aggregated
+        solver statistics registry under ``solver/<name>``."""
         hits = misses = programs = 0
         for solver in self._solvers.values():
             info = solver.cache_info()
@@ -562,14 +737,19 @@ class SolveService:
             misses += info.misses
             programs += info.currsize
         c = self._counters
+        busy_s = self._pack_s + self._device_s
         out: dict[str, Any] = {
             "queue_depth": self._queue_depth,
             "n_buckets": len(self._buckets),
+            "n_inflight": len(self._inflight),
+            "n_devices": len(self.devices),
             **c,
             "pad_waste": (c["n_pad_rows"] / c["n_rows"]) if c["n_rows"] else 0.0,
-            "solves_per_sec": (c["n_completed"] / self._busy_s)
-            if self._busy_s > 0 else 0.0,
-            "busy_s": self._busy_s,
+            "solves_per_sec": (c["n_completed"] / busy_s) if busy_s > 0 else 0.0,
+            "queue_s": self._queue_s,
+            "pack_s": self._pack_s,
+            "device_s": self._device_s,
+            "busy_s": busy_s,
             "cache_hits": hits,
             "cache_misses": misses,
             "n_programs": programs,

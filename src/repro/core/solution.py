@@ -64,6 +64,33 @@ class Solution:
         termination is the *intended* outcome, not a failure)."""
         return (self.status == Status.SUCCESS.value) | (self.status == Status.EVENT.value)
 
+    def is_ready(self) -> bool:
+        """True when every device buffer has finished computing.
+
+        JAX dispatch is asynchronous: a solve returns immediately with
+        futures for its output buffers.  The serving engine launches a batch,
+        keeps packing the next one, and uses this probe to harvest completed
+        solutions without ever blocking the host on an unfinished program
+        (host arrays are trivially ready).
+        """
+        return all(
+            x.is_ready() for x in jax.tree_util.tree_leaves(self)
+            if isinstance(x, jax.Array)
+        )
+
+    def block_until_ready(self) -> "Solution":
+        """Wait for every device buffer; returns self (chains like jax's)."""
+        jax.block_until_ready(jax.tree_util.tree_leaves(self))
+        return self
+
+    def to_host(self) -> "Solution":
+        """Deliver every field as a host NumPy array -- one device->host
+        transfer per field (blocking if buffers are still computing).  The
+        serving layer calls this exactly once per harvested batch, so the
+        per-request ``slice_batch`` views that follow are zero-copy host
+        slices instead of b device dispatches per field."""
+        return jax.tree_util.tree_map(np.asarray, self)
+
     def slice_batch(self, index) -> "Solution":
         """View of a subset of instances: every field sliced along the batch
         axis by ``index`` (a ``slice``, int array or index list -- anything

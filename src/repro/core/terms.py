@@ -43,6 +43,14 @@ class ODETerm:
     ``batched=False``: f is written for a single instance (scalar t, (f,) y)
     and is vmapped over the batch.
 
+    ``batched_args=True`` declares that every ``args`` leaf carries the batch
+    as its *leading axis* and must be mapped per instance alongside ``t`` and
+    ``y`` (each instance sees its own unbatched args row).  Only meaningful
+    for per-instance dynamics -- ``batched=False`` terms and PyTree-state
+    solves through ``ravel_term`` -- where args would otherwise be passed
+    through shared.  This is how the serving layer batches requests with
+    different parameter values into one bucket.
+
     ``f_jac`` optionally supplies the state Jacobian df/dy for implicit
     steppers.  It follows the same batching convention as ``f``: per instance
     it maps ((), (f,)) -> (f, f); batched it maps ((b,), (b, f)) -> (b, f, f).
@@ -54,13 +62,17 @@ class ODETerm:
     batched: bool = True
     with_args: bool = True
     f_jac: Callable[..., Any] | None = None
+    batched_args: bool = False
 
     def vf(self, t: jax.Array, y: jax.Array, args: Any) -> jax.Array:
         if self.batched:
             out = self.f(t, y, args) if self.with_args else self.f(t, y)
         else:
             if self.with_args:
-                out = jax.vmap(lambda ti, yi: self.f(ti, yi, args))(t, y)
+                if self.batched_args and args is not None:
+                    out = jax.vmap(lambda ti, yi, ai: self.f(ti, yi, ai))(t, y, args)
+                else:
+                    out = jax.vmap(lambda ti, yi: self.f(ti, yi, args))(t, y)
             else:
                 out = jax.vmap(self.f)(t, y)
         return jnp.asarray(out, dtype=y.dtype)
@@ -81,7 +93,12 @@ class ODETerm:
                 out = self.f_jac(t, y, args) if self.with_args else self.f_jac(t, y)
             else:
                 if self.with_args:
-                    out = jax.vmap(lambda ti, yi: self.f_jac(ti, yi, args))(t, y)
+                    if self.batched_args and args is not None:
+                        out = jax.vmap(
+                            lambda ti, yi, ai: self.f_jac(ti, yi, ai)
+                        )(t, y, args)
+                    else:
+                        out = jax.vmap(lambda ti, yi: self.f_jac(ti, yi, args))(t, y)
                 else:
                     out = jax.vmap(self.f_jac)(t, y)
             return jnp.asarray(out, dtype=y.dtype)
@@ -204,19 +221,31 @@ def ravel_state(y0: Any) -> tuple[jax.Array, RaveledState | None]:
 
 
 def ravel_term(
-    f: Callable | ODETerm, raveled: RaveledState, *, with_args: bool = True
+    f: Callable | ODETerm, raveled: RaveledState, *, with_args: bool = True,
+    batched_args: bool = False,
 ) -> ODETerm:
     """Adapt a *per-instance* PyTree vector field ``f(t, y_tree, args) ->
     dy_tree`` onto the flat batched convention.
 
     Ravel/unravel happens only at this boundary; the step math, controllers
-    and kernels all stay on (b, f) buffers.
+    and kernels all stay on (b, f) buffers.  With ``batched_args`` (taken
+    from the term when an ``ODETerm`` is passed), every args leaf carries a
+    leading batch axis and is vmapped per instance -- the serving layer's
+    per-request parameter rows for PyTree states.
     """
     if isinstance(f, ODETerm):
         with_args = f.with_args
+        batched_args = f.batched_args
         f = f.f
 
     def flat_f(t, y, args):
+        if with_args and batched_args and args is not None:
+            def one_with_args(ti, yi, ai):
+                dy = f(ti, raveled.unravel_one(yi), ai)
+                return ravel_pytree(dy)[0]
+
+            return jax.vmap(one_with_args)(t, y, args)
+
         def one(ti, yi):
             yt = raveled.unravel_one(yi)
             dy = f(ti, yt, args) if with_args else f(ti, yt)

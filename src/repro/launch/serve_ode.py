@@ -2,12 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve_ode \
         --requests 256 --max-batch 16 --features 2 4 --eval-points 0 8 \
-        --method dopri5 --prewarm
+        --method dopri5 --prewarm --max-inflight 4
 
 Simulates the serving workload the batcher exists for -- a stream of
 single-instance solve requests with mixed feature sizes, eval grids, spans
 and tolerances -- and reports the service's stats surface (throughput, pad
-waste, bucket/cache behaviour).  This is the operational smoke tool; the
+waste, queue/pack/device time split, in-flight window, bucket/cache
+behaviour).  Batches launch asynchronously and round-robin across every
+visible device; ``--sync`` (or ``--max-inflight 0``) restores the blocking
+pre-async service for comparison.  This is the operational smoke tool; the
 apples-to-apples comparison against per-request dispatch lives in
 ``benchmarks/serving_bench.py``.
 """
@@ -57,11 +60,19 @@ def main() -> None:
     parser.add_argument("--method", default="dopri5")
     parser.add_argument("--prewarm", action="store_true",
                         help="AOT-compile every batch class before the stream")
+    parser.add_argument("--max-inflight", type=int, default=4,
+                        help="launched-but-unharvested batch window "
+                             "(0 = blocking service)")
+    parser.add_argument("--sync", action="store_true",
+                        help="shorthand for --max-inflight 0")
     parser.add_argument("--seed", type=int, default=0)
     opts = parser.parse_args()
 
     svc = SolveService(max_batch=opts.max_batch,
-                       max_delay=opts.deadline_ms / 1e3)
+                       max_delay=opts.deadline_ms / 1e3,
+                       max_inflight=0 if opts.sync else opts.max_inflight)
+    print(f"serving on {len(svc.devices)} device(s), "
+          f"max_inflight={svc.max_inflight}")
     rng = np.random.default_rng(opts.seed)
     stream = build_stream(opts, rng)
 
@@ -73,6 +84,7 @@ def main() -> None:
     t0 = time.perf_counter()
     futures = [svc.submit(r) for r in stream]
     svc.flush()
+    svc.drain()
     sols = [f.result() for f in futures]
     wall = time.perf_counter() - t0
 

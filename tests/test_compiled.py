@@ -469,14 +469,43 @@ class TestShardedSolve:
             sharded_solve(mesh, decay, jnp.ones((4, 2)), None, t_start=0.0,
                           t_end=1.0, solver=drv, rtol=1e-9)
 
-    def test_uneven_batch_raises(self):
+    def test_ragged_batch_pads_per_shard(self):
+        """Regression: batches that do not divide the mesh used to raise --
+        now they pad (replicating instance 0, the serving layer's trick) and
+        the sliced-back results match the unsharded solve exactly."""
         mesh = self._mesh()
-        b = mesh.shape["data"] + 1 if mesh.shape["data"] > 1 else None
-        if b is None:
-            pytest.skip("single device: every batch divides evenly")
-        with pytest.raises(ValueError, match="divide evenly"):
-            sharded_solve(mesh, decay, jnp.ones((b, 2)), None,
-                          t_start=0.0, t_end=1.0, args=1.0)
+        n_dev = mesh.shape["data"]
+        for b in sorted({1, n_dev + 1, 2 * n_dev - 1, 3 * n_dev + 2}):
+            y0 = jnp.linspace(-1.0, 1.0, 2 * b).reshape(b, 2)
+            rtol = jnp.where(jnp.arange(b) % 2 == 0, 1e-6, 1e-3)
+            sol = sharded_solve(mesh, decay, y0, None, t_start=0.0,
+                                t_end=1.0, rtol=rtol, args=1.0)
+            driver = AutoDiffAdjoint(Stepper("dopri5"), rtol=rtol)
+            ref = jax.jit(
+                lambda y, a: driver.solve(decay, y, None, t_start=0.0,
+                                          t_end=1.0, args=a)
+            )(y0, jnp.asarray(1.0))
+            assert sol.ys.shape == (b, 2), "padding must be sliced off"
+            np.testing.assert_array_equal(np.asarray(sol.ys),
+                                          np.asarray(ref.ys))
+            np.testing.assert_array_equal(np.asarray(sol.status),
+                                          np.asarray(ref.status))
+            np.testing.assert_array_equal(np.asarray(sol.stats["n_steps"]),
+                                          np.asarray(ref.stats["n_steps"]))
+
+    def test_ragged_batch_dense_output(self):
+        mesh = self._mesh()
+        b = mesh.shape["data"] + 1
+        y0 = jnp.linspace(0.5, 1.5, 3 * b).reshape(b, 3)
+        t_eval = jnp.linspace(0.0, 1.0, 4)
+        sol = sharded_solve(mesh, decay, y0, t_eval, args=1.0)
+        driver = AutoDiffAdjoint(Stepper("dopri5"))
+        ref = jax.jit(
+            lambda y, a: driver.solve(decay, y, t_eval, args=a)
+        )(y0, jnp.asarray(1.0))
+        assert sol.ys.shape == (b, 4, 3)
+        np.testing.assert_array_equal(np.asarray(sol.ys), np.asarray(ref.ys))
+        np.testing.assert_array_equal(np.asarray(sol.ts), np.asarray(ref.ts))
 
 
 # ---------------------------------------------------------------------------

@@ -147,13 +147,68 @@ class TestBitwiseAgainstDirectSolves:
             np.testing.assert_allclose(sol.ys["b"], np.asarray(ref.ys["b"]),
                                        rtol=1e-6)
 
+    def test_pytree_state_with_per_request_args(self):
+        """Per-request ``args`` ride the ravel boundary: PyTree-state
+        requests with *different parameter values* share one bucket (and one
+        compiled program) and each matches its solo solve."""
+        import jax
+
+        def f(t, y, args):
+            return {"a": -args["k"] * y["a"], "b": args["w"] * y["b"]}
+
+        rng = np.random.default_rng(14)
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        reqs = []
+        for _ in range(3):
+            y0 = {"a": jnp.asarray(rng.uniform(1, 2, (2,)), jnp.float32),
+                  "b": jnp.asarray(rng.uniform(1, 2), jnp.float32)}
+            args = {"k": jnp.asarray(rng.uniform(0.5, 2.0), jnp.float32),
+                    "w": jnp.asarray(rng.uniform(-1.0, 1.0), jnp.float32)}
+            reqs.append(SolveRequest(f=f, y0=y0, t0=0.0, t1=1.0, args=args))
+        futures = [svc.submit(r) for r in reqs]
+        assert svc.stats()["n_buckets"] == 1, \
+            "requests with different args values must share a bucket"
+        svc.flush()
+        for req, fut in zip(reqs, futures):
+            sol = fut.result()
+            ref = solve_ivp(
+                f, jax.tree_util.tree_map(lambda x: x[None], req.y0), None,
+                t_start=0.0, t_end=1.0, args=req.args, method="dopri5")
+            np.testing.assert_allclose(sol.ys["a"], np.asarray(ref.ys["a"]),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(sol.ys["b"], np.asarray(ref.ys["b"]),
+                                       rtol=1e-6)
+
 
 class TestQueueingPolicies:
+    def test_poll_harvests_with_deadlines_disabled(self):
+        """Regression: ``poll()`` with ``max_delay=None`` used to return
+        without doing anything -- it must still harvest completed in-flight
+        launches and launch full buckets, so a ``poll()``-driven event loop
+        makes progress without deadline flushing configured."""
+        import time as wall
+
+        rng = np.random.default_rng(13)
+        svc = SolveService(max_batch=4, max_delay=None, clock=lambda: 0.0)
+        futures = [svc.submit(r) for r in make_requests(2, rng,
+                                                        method="dopri5")]
+        assert svc.flush() == 1
+        for _ in range(1000):  # poll alone must resolve the futures
+            svc.poll()
+            if all(f._solution is not None for f in futures):
+                break
+            wall.sleep(0.005)
+        assert all(f._solution is not None for f in futures), \
+            "poll() must harvest in-flight batches even with max_delay=None"
+        assert svc.stats()["n_inflight"] == 0
+        assert all(bool(f.result().success.all()) for f in futures)
+
     def test_flush_on_size(self):
         rng = np.random.default_rng(3)
         svc = SolveService(max_batch=4, max_delay=None)
         futures = [svc.submit(r) for r in make_requests(4, rng, method="dopri5")]
-        # the 4th submit hit max_batch: executed synchronously, nothing queued
+        # the 4th submit hit max_batch: launched immediately, nothing queued
+        svc.drain()
         assert all(f.done() for f in futures)
         st = svc.stats()
         assert st["queue_depth"] == 0
@@ -169,9 +224,11 @@ class TestQueueingPolicies:
         slow = svc.submit(make_requests(1, rng, feat=5, method="dopri5")[0])
         fast = [svc.submit(r) for r in make_requests(2, rng, feat=2,
                                                      method="dopri5")]
+        svc.drain()
         assert all(f.done() for f in fast), "full bucket must flush eagerly"
         assert not slow.done(), "half-full bucket must keep waiting"
         svc.flush()
+        svc.drain()
         assert slow.done()
         assert bool(slow.result().success.all())
 
@@ -184,12 +241,15 @@ class TestQueueingPolicies:
         now[0] = 0.99
         assert svc.poll() == 0 and not fut.done()
         now[0] = 1.0
-        assert svc.poll() == 1 and fut.done()
+        assert svc.poll() == 1
+        svc.drain()
+        assert fut.done()
         assert svc.stats()["n_deadline_flushes"] == 1
         # a later submit triggers the deadline sweep itself
         f2 = svc.submit(make_requests(1, rng, method="dopri5")[0])
         now[0] = 2.5
         f3 = svc.submit(make_requests(1, rng, feat=7, method="dopri5")[0])
+        svc.drain()
         assert f2.done(), "submit must deadline-flush other buckets"
         assert not f3.done()
 
@@ -199,8 +259,9 @@ class TestQueueingPolicies:
         futures = [svc.submit(r) for r in make_requests(7, rng, method="dopri5")]
         f8 = svc.submit(make_requests(1, rng, feat=2, method="dopri5")[0])
         assert not f8.done() and svc.stats()["queue_depth"] == 8
-        # the 9th submit finds the backlog full and drains everything first
+        # the 9th submit finds the backlog full and launches everything first
         f9 = svc.submit(make_requests(1, rng, feat=4, method="dopri5")[0])
+        svc.drain()
         assert all(f.done() for f in futures) and f8.done()
         assert not f9.done()
         assert svc.stats()["queue_depth"] == 1
@@ -219,6 +280,7 @@ class TestQueueingPolicies:
         pending = svc.submit(make_requests(1, rng, feat=2, method="dopri5")[0])
         assert list(svc._waiting) == [pending._bucket.key]
         svc.flush()
+        svc.drain()
         assert len(svc._waiting) == 0 and pending.done()
 
     def test_result_flush_semantics(self):
@@ -247,13 +309,16 @@ class TestQueueingPolicies:
 
 class TestPrewarm:
     def test_prewarm_compiles_every_class_and_flushes_hit(self):
+        import jax
+
+        n_dev = len(jax.devices())  # prewarm covers every serving device
         rng = np.random.default_rng(9)
         svc = SolveService(max_batch=8, max_delay=None)
         example = make_requests(1, rng, method="dopri5")[0]
-        assert svc.prewarm(example) == 4  # classes 1, 2, 4, 8
+        assert svc.prewarm(example) == 4 * n_dev  # classes 1, 2, 4, 8
         assert svc.prewarm(example) == 0  # idempotent
         base = svc.stats()
-        assert base["cache_misses"] == 4 and base["cache_hits"] == 0
+        assert base["cache_misses"] == 4 * n_dev and base["cache_hits"] == 0
 
         for n in (1, 2, 3, 8):  # classes 1, 2, 4 (padded), 8
             futures = [svc.submit(r) for r in make_requests(n, rng,
@@ -261,19 +326,23 @@ class TestPrewarm:
             svc.flush()
             assert all(bool(f.result().success.all()) for f in futures)
         st = svc.stats()
-        assert st["cache_misses"] == 4, "prewarmed traffic must never compile"
+        assert st["cache_misses"] == 4 * n_dev, \
+            "prewarmed traffic must never compile"
         assert st["cache_hits"] == 4
-        assert st["n_programs"] == 4
+        assert st["n_programs"] == 4 * n_dev
 
     def test_numpy_requests_share_buckets_and_prewarm_with_jnp(self):
         """Dtypes canonicalize at submit: a NumPy float64 request (NumPy's
         default dtype) must hit the same bucket -- and the same prewarmed
         program -- as the float32 jnp request of the same logical shape,
         because the packed batch is float32 either way (x64 off)."""
+        import jax
+
+        n_dev = len(jax.devices())
         svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
         np_req = SolveRequest(f=decay, y0=np.ones(3), t0=0.0, t1=1.0,
                               args=np.full(3, 0.5))
-        assert svc.prewarm(np_req, batch_classes=[2]) == 1
+        assert svc.prewarm(np_req, batch_classes=[2]) == n_dev
         f1 = svc.submit(np_req)
         f2 = svc.submit(SolveRequest(f=decay, y0=jnp.ones((3,), jnp.float32),
                                      t0=0.0, t1=1.0,
@@ -281,13 +350,16 @@ class TestPrewarm:
         svc.flush()
         st = svc.stats()
         assert st["n_buckets"] == 1, "dtype canonicalization must not split buckets"
-        assert st["cache_misses"] == 1 and st["cache_hits"] == 1, \
+        assert st["cache_misses"] == n_dev and st["cache_hits"] == 1, \
             "the prewarmed program must serve the flush without tracing"
         np.testing.assert_array_equal(np.asarray(f1.result().ys),
                                       np.asarray(f2.result().ys))
         assert f1.result().ys.dtype == np.float32
 
     def test_unwarmed_class_counts_a_miss(self):
+        import jax
+
+        n_dev = len(jax.devices())
         rng = np.random.default_rng(10)
         svc = SolveService(max_batch=8, max_delay=None)
         example = make_requests(1, rng, method="dopri5")[0]
@@ -295,7 +367,8 @@ class TestPrewarm:
         [svc.submit(r) for r in make_requests(2, rng, method="dopri5")]
         svc.flush()
         st = svc.stats()
-        assert st["cache_misses"] == 2  # prewarm(b=4) + cold b=2 class
+        # prewarm(b=4) per device + the cold b=2 class on device 0
+        assert st["cache_misses"] == n_dev + 1
         with pytest.raises(ValueError, match="batch class"):
             svc.prewarm(example, batch_classes=[3])
 
@@ -305,9 +378,6 @@ class TestValidationAndStats:
         svc = SolveService(max_batch=4, max_delay=None)
         with pytest.raises(ValueError, match="1-D"):
             svc.submit(SolveRequest(f=decay, y0=jnp.ones((2, 2)), t0=0, t1=1))
-        with pytest.raises(NotImplementedError, match="PyTree"):
-            svc.submit(SolveRequest(f=decay, y0={"a": jnp.ones((2,))},
-                                    t0=0, t1=1, args=jnp.ones(())))
         with pytest.raises(ValueError, match="rtol must be scalar"):
             svc.submit(SolveRequest(f=decay, y0=jnp.ones((2,)), t0=0, t1=1,
                                     rtol=np.ones((2,))))
@@ -325,6 +395,7 @@ class TestValidationAndStats:
         reqs = make_requests(3, rng, method="dopri5")
         futures = [svc.submit(r) for r in reqs]
         svc.flush()
+        svc.drain()
         st = svc.stats()
         assert st["pad_waste"] == pytest.approx(0.25)
         assert st["solves_per_sec"] > 0

@@ -1,0 +1,267 @@
+"""The async serving engine: overlap must be invisible.
+
+Non-blocking dispatch, the bounded in-flight window and round-robin device
+placement are pure *scheduling*: whatever order batches launch, complete and
+harvest in, every request must resolve with exactly the solution the
+synchronous service (``max_inflight=0``, launch + harvest inline) produces
+for the identical request stream.  Explicit steppers make that testable
+bitwise -- in both regimes here, because both services build identical
+batches, so even the dense interpolant contractions see the same shapes.
+
+Runs on however many devices exist: 1 in the plain tier-1 suite, 4 in the CI
+smoke leg via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SolveRequest, SolveService
+
+
+def decay(t, y, args):
+    return -y * args
+
+
+def make_stream(n, seed, feats=(2, 3, 5), dense_every=None):
+    """A deterministic mixed-shape request stream (fresh arrays per call --
+    the values, not the objects, must determine the results)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        feat = int(feats[i % len(feats)])
+        n_eval = (None if dense_every is None or i % dense_every
+                  else int(rng.integers(3, 9)))
+        reqs.append(SolveRequest(
+            f=decay,
+            y0=jnp.asarray(rng.uniform(0.5, 1.5, (feat,)), jnp.float32),
+            t0=float(rng.uniform(0.0, 0.2)),
+            t1=float(rng.uniform(0.8, 1.2)),
+            t_eval=(None if n_eval is None
+                    else np.linspace(0.1, 0.7, n_eval, dtype=np.float32)),
+            args=jnp.asarray(rng.uniform(0.5, 2.0, (feat,)), jnp.float32),
+            rtol=float(rng.choice([1e-3, 1e-4, 1e-5])),
+        ))
+    return reqs
+
+
+def serve_stream(reqs, **svc_kwargs):
+    svc = SolveService(max_delay=None, default_method="dopri5", **svc_kwargs)
+    futures = [svc.submit(r) for r in reqs]
+    svc.flush()
+    return svc, [f.result() for f in futures]
+
+
+def assert_solutions_bitwise(got, ref, stats=None):
+    """Bitwise equality of the served streams.  ``stats=None`` compares every
+    accumulator (identical batch composition); pass the composition-invariant
+    subset when the interleaving changes flush timing -- ``n_f_evals`` counts
+    whole-batch overhang (instances that finish early keep counting while
+    bucket-mates run) and is composition-dependent by design."""
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(g.ts), np.asarray(r.ts))
+        np.testing.assert_array_equal(np.asarray(g.ys), np.asarray(r.ys))
+        np.testing.assert_array_equal(np.asarray(g.status),
+                                      np.asarray(r.status))
+        for name in (g.stats if stats is None else stats):
+            np.testing.assert_array_equal(np.asarray(g.stats[name]),
+                                          np.asarray(r.stats[name]),
+                                          err_msg=f"stats[{name}]")
+
+
+def hold_harvest(svc):
+    """Disable the opportunistic (non-blocking) harvest so in-flight records
+    stay observable: on CPU a tiny batch can finish before the next submit's
+    ``poll()``, making window-size assertions racy.  Blocking harvests
+    (``drain``/``result``/backpressure) still work."""
+    svc._harvest_ready = lambda: 0
+
+
+def release_harvest(svc):
+    del svc.__dict__["_harvest_ready"]
+
+
+class TestAsyncEqualsSync:
+    def test_final_state_stream_bitwise(self):
+        reqs = make_stream(24, seed=0)
+        _, ref = serve_stream(make_stream(24, seed=0), max_batch=8,
+                              max_inflight=0)
+        svc, got = serve_stream(reqs, max_batch=8, max_inflight=4)
+        assert_solutions_bitwise(got, ref)
+        assert svc.stats()["n_completed"] == 24
+
+    def test_dense_stream_bitwise(self):
+        reqs = make_stream(18, seed=1, dense_every=1)
+        _, ref = serve_stream(make_stream(18, seed=1, dense_every=1),
+                              max_batch=4, max_inflight=0)
+        _, got = serve_stream(reqs, max_batch=4, max_inflight=4)
+        assert_solutions_bitwise(got, ref)
+
+    def test_interleaved_submit_poll_result_bitwise(self):
+        """A randomized (but seeded) interleaving of submit/poll/result/
+        drain resolves every future with the synchronous service's values --
+        harvest order must be invisible."""
+        _, ref = serve_stream(make_stream(20, seed=2), max_batch=4,
+                              max_inflight=0)
+        rng = np.random.default_rng(7)
+        svc = SolveService(max_batch=4, max_delay=None, max_inflight=2,
+                           default_method="dopri5")
+        reqs = make_stream(20, seed=2)
+        futures = []
+        for i, r in enumerate(reqs):
+            futures.append(svc.submit(r))
+            op = rng.integers(0, 4)
+            if op == 0:
+                svc.poll()
+            elif op == 1:
+                svc.drain(1)
+            elif op == 2 and futures:
+                fut = futures[int(rng.integers(0, len(futures)))]
+                assert bool(fut.result().success.all())
+        svc.flush()
+        got = [f.result() for f in futures]
+        assert_solutions_bitwise(got, ref, stats=("n_steps", "n_accepted"))
+        st = svc.stats()
+        assert st["n_inflight"] == 0 and st["queue_depth"] == 0
+        assert st["n_completed"] == 20
+
+    def test_hypothesis_interleaving_property(self):
+        """Any interleaving of submit/poll/drain/result operations is
+        bitwise-equal to the synchronous service on the same stream."""
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=15, deadline=None)
+        @given(seed=st.integers(0, 2**30),
+               n=st.integers(1, 12),
+               max_inflight=st.sampled_from([1, 2, 4]),
+               ops=st.lists(st.integers(0, 3), min_size=0, max_size=12))
+        def run(seed, n, max_inflight, ops):
+            _, ref = serve_stream(make_stream(n, seed=seed), max_batch=4,
+                                  max_inflight=0)
+            svc = SolveService(max_batch=4, max_delay=None,
+                               max_inflight=max_inflight,
+                               default_method="dopri5")
+            futures = [svc.submit(r) for r in make_stream(n, seed=seed)]
+            for i, op in enumerate(ops):
+                if op == 0:
+                    svc.poll()
+                elif op == 1:
+                    svc.drain(1)
+                elif op == 2:
+                    svc.flush()
+                else:
+                    futures[i % n].result()
+            svc.flush()
+            got = [f.result() for f in futures]
+            assert_solutions_bitwise(got, ref, stats=("n_steps", "n_accepted"))
+
+        run()
+
+
+class TestInflightWindow:
+    def test_backpressure_bounds_the_window(self):
+        """Launching past ``max_inflight`` must block on the oldest launch:
+        the window never exceeds the knob and the waits are counted."""
+        svc = SolveService(max_batch=2, max_delay=None, max_inflight=2,
+                           default_method="dopri5")
+        hold_harvest(svc)  # only backpressure may shrink the window
+        for r in make_stream(16, seed=3, feats=(2, 3, 5, 7)):
+            svc.submit(r)
+        svc.flush()
+        st = svc.stats()
+        assert st["n_batches"] == 8
+        assert st["peak_inflight"] <= 2
+        assert st["n_backpressure_waits"] == 6, \
+            "every launch past the window must block on the oldest one"
+        release_harvest(svc)
+        svc.drain()
+        assert svc.stats()["n_inflight"] == 0
+
+    def test_max_inflight_zero_is_synchronous(self):
+        """The blocking service: every launch harvests inline, so futures
+        resolve without any poll/drain and nothing stays in flight."""
+        svc = SolveService(max_batch=2, max_delay=None, max_inflight=0,
+                           default_method="dopri5")
+        futures = [svc.submit(r) for r in make_stream(4, seed=4, feats=(3,))]
+        # both size-flushes harvested inline -- no drain needed
+        assert all(f._solution is not None for f in futures)
+        st = svc.stats()
+        assert st["n_inflight"] == 0 and st["peak_inflight"] == 1
+        assert st["n_backpressure_waits"] == 0
+
+    def test_drain_is_bounded_and_ordered(self):
+        svc = SolveService(max_batch=2, max_delay=None, max_inflight=8,
+                           default_method="dopri5")
+        hold_harvest(svc)
+        futures = [svc.submit(r) for r in make_stream(8, seed=5,
+                                                      feats=(2, 3, 5, 7))]
+        svc.flush()
+        assert svc.stats()["n_inflight"] == 4
+        assert svc.drain(1) == 1  # oldest launch first
+        assert futures[0]._solution is not None
+        assert svc.stats()["n_inflight"] == 3
+        assert svc.drain() == 3
+        release_harvest(svc)
+        assert all(f.done() for f in futures)
+
+
+class TestDevicePlacement:
+    def test_round_robin_across_devices(self):
+        """Consecutive launches land on consecutive devices of the mesh (one
+        device in the tier-1 suite, four in the CI smoke leg)."""
+        devs = jax.devices()
+        svc = SolveService(max_batch=2, max_delay=None,
+                           max_inflight=len(devs) + 2,
+                           default_method="dopri5")
+        hold_harvest(svc)  # keep every launch observable in the window
+        n_launch = len(devs) + 2
+        for r in make_stream(2 * n_launch, seed=6,
+                             feats=tuple(range(2, 2 + n_launch))):
+            svc.submit(r)
+        placed = [rec.device for rec in svc._inflight]
+        assert len(placed) == n_launch
+        assert placed == [devs[i % len(devs)] for i in range(n_launch)]
+        if len(devs) >= 2:
+            assert len(set(placed)) >= 2, "the mesh must actually be used"
+        got = [rec.sol for rec in svc._inflight]
+        for rec_sol, dev in zip(got, placed):
+            leaves = [x for x in jax.tree_util.tree_leaves(rec_sol)
+                      if isinstance(x, jax.Array)]
+            assert all(x.devices() == {dev} for x in leaves)
+        release_harvest(svc)
+        svc.drain()
+        assert svc.stats()["n_devices"] == len(devs)
+
+    def test_multi_device_results_bitwise_equal_single_device(self):
+        """Device placement is invisible: serving on the whole mesh equals
+        serving pinned to one device, bitwise."""
+        devs = jax.devices()
+        reqs = make_stream(12, seed=8)
+        _, ref = serve_stream(make_stream(12, seed=8), max_batch=4,
+                              max_inflight=0, devices=[devs[0]])
+        svc, got = serve_stream(reqs, max_batch=4, max_inflight=4)
+        assert_solutions_bitwise(got, ref)
+        if len(devs) >= 2:
+            assert svc.stats()["n_batches"] >= 2
+
+    def test_prewarm_covers_every_device(self):
+        """Round-robin placement means any bucket can land anywhere, so
+        prewarm compiles one program per class per device and traffic on any
+        device is a pure cache hit."""
+        devs = jax.devices()
+        svc = SolveService(max_batch=2, max_delay=None,
+                           default_method="dopri5")
+        example = make_stream(1, seed=9, feats=(3,))[0]
+        assert svc.prewarm(example) == 2 * len(devs)  # classes 1, 2
+        assert svc.prewarm(example) == 0
+        futures = []
+        for r in make_stream(2 * len(devs), seed=9, feats=(3,)):
+            futures.append(svc.submit(r))
+        svc.flush()
+        [f.result() for f in futures]
+        st = svc.stats()
+        assert st["cache_misses"] == 2 * len(devs), \
+            "prewarmed traffic must never compile"
+        assert st["cache_hits"] >= len(devs)
