@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [table3|table4|table5|fig1|fig2|stiff|events|dispatch|serving|all] [--json [PATH]]
+  python -m benchmarks.run [table3|table4|table5|fig1|fig2|stiff|events|dispatch|serving|training|all] [--json [PATH]]
 
 Prints ``name,value,derived`` CSV rows (value is microseconds for *_time
 rows).  ``--json`` additionally writes the rows to a JSON file so CI can
@@ -20,7 +20,7 @@ import json
 import time
 
 _SUITE_CHOICES = ["all", "table3", "table4", "table5", "fig1", "fig2",
-                  "stiff", "events", "dispatch", "serving", "step"]
+                  "stiff", "events", "dispatch", "serving", "training", "step"]
 
 # Suite-named --json defaults; "all" and the historical headline suite keep
 # the BENCH_solver.json name CI has tracked since PR 1.
@@ -80,6 +80,12 @@ def main() -> None:
         from . import serving_bench
 
         suites.append(("serving", serving_bench.rows))
+    if which == "training":
+        # Not part of "all" for the same reason: the per-request jit(grad)
+        # baseline dispatches hundreds of b=1 backward solves by design.
+        from . import training_bench
+
+        suites.append(("training", training_bench.rows))
     if which == "step":
         # Not part of "all": compares the fused step megakernel against the
         # unfused op-per-op path across backends; the interpret-backend rows

@@ -22,8 +22,8 @@ from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint
 from .events import Event, EventState
 from .loop import make_solver, solve_ivp, solve_ivp_scan
 from .newton import NewtonConfig, NewtonResult, newton_solve
-from .serving import SolveFuture, SolveRequest, SolveService, next_pow2
-from .solution import Solution, Status
+from .serving import GradRequest, SolveFuture, SolveRequest, SolveService, next_pow2
+from .solution import Grads, Solution, Status
 from .step import LoopState, StepContext, StepFunction
 from .stepper import (
     AbstractStepper,
@@ -70,10 +70,12 @@ __all__ = [
     "make_solver",
     "solve_ivp",
     "solve_ivp_scan",
+    "GradRequest",
     "SolveFuture",
     "SolveRequest",
     "SolveService",
     "next_pow2",
+    "Grads",
     "Solution",
     "Status",
     "LoopState",

@@ -37,6 +37,7 @@ def make_adjoint_solve(
     max_steps: int = 10_000,
     mode: str = "joint",
     controller=None,
+    batched_args: bool = False,
 ):
     """Returns ``solve(y0, t_start, t_end, params) -> y(t_end)`` whose VJP
     solves the adjoint ODE backwards in time (O(1) memory in solver steps).
@@ -46,6 +47,18 @@ def make_adjoint_solve(
     backward adjoint solve reuses the same method).  ``mode`` is "joint"
     (single fused adjoint problem, paper's recommended default) or
     "per_instance" (fully independent adjoint solves).
+
+    ``batched_args=True`` declares that every ``params`` leaf carries the
+    batch as its *leading axis* and instance ``i`` owns row ``i`` -- the
+    serving layer's per-request parameter rows (``ODETerm.batched_args``).
+    Joint mode needs no special handling (the whole stack ravels into the
+    augmented state and the returned cotangent keeps the rows), but
+    per-instance mode must thread each instance's OWN row through the ravel
+    boundary: its augmented state carries a row-sized parameter adjoint and
+    the single-instance VJP closes over that row alone.  Without the flag the
+    old behaviour silently handed the *full* stack to every instance-1
+    evaluation -- a shape error at best, a wrong broadcastdown gradient at
+    worst.
     """
     assert mode in ("joint", "per_instance")
     # ``method`` may be a stepper object: it is passed through to solve_ivp
@@ -77,10 +90,58 @@ def make_adjoint_solve(
     def _bwd(res, g):
         y1, t_start, t_end, params = res
         b, feat = y1.shape
-        flat_params, unravel = ravel_pytree(params)
-        p = flat_params.shape[0]
+        per_row = (mode == "per_instance" and batched_args
+                   and len(jax.tree_util.tree_leaves(params)) > 0)
+        if not per_row:
+            flat_params, unravel = ravel_pytree(params)
+            p = flat_params.shape[0]
 
-        if mode == "per_instance":
+        if per_row:
+            # Per-request parameter rows: instance i's augmented state carries
+            # the adjoint of ITS row only, and the single-instance VJP closes
+            # over that row (re-batched to axis size 1 for the batched f).
+            _, unravel_row = ravel_pytree(
+                jax.tree_util.tree_map(lambda x: x[0], params)
+            )
+            flat_rows = jax.vmap(lambda row: ravel_pytree(row)[0])(params)
+            p = flat_rows.shape[1]
+            aug0 = jnp.concatenate(
+                [y1, g, jnp.zeros((b, p), dtype=y1.dtype)], axis=-1
+            )
+
+            def aug_dyn(t, s, _):
+                y = s[:, :feat]
+                a = s[:, feat : 2 * feat]
+
+                def single(ti, yi, ai, fpi):
+                    def fi(ti_, yi_, fp):
+                        row = jax.tree_util.tree_map(
+                            lambda x: x[None], unravel_row(fp)
+                        )
+                        return f(ti_[None], yi_[None], row)[0]
+
+                    fv, vjp_fn = jax.vjp(fi, ti, yi, fpi)
+                    _, dy_bar, dp_bar = vjp_fn(ai)
+                    return fv, dy_bar, dp_bar
+
+                fv, dy_bar, dp_bar = jax.vmap(single)(t, y, a, flat_rows)
+                return jnp.concatenate([fv, -dy_bar, -dp_bar], axis=-1)
+
+            sol = solve_ivp(
+                aug_dyn,
+                aug0,
+                None,
+                t_start=t_end,
+                t_end=t_start,
+                method=method,
+                rtol=rtol,
+                atol=atol,
+                max_steps=max_steps,
+                controller=controller,
+            )
+            a0 = sol.ys[:, feat : 2 * feat]
+            dp_rows = sol.ys[:, 2 * feat :]
+        elif mode == "per_instance":
             aug0 = jnp.concatenate(
                 [y1, g, jnp.zeros((b, p), dtype=y1.dtype)], axis=-1
             )
@@ -115,6 +176,12 @@ def make_adjoint_solve(
             a0 = sol.ys[:, feat : 2 * feat]
             dp = jnp.sum(sol.ys[:, 2 * feat :], axis=0)
         else:  # joint: one solver instance of size 2bf + p
+            # The backward problem is a SINGLE stacked instance, so per-row
+            # (b,)-shaped tolerances cannot apply per instance -- collapse to
+            # the strictest row.  (The forward solve above still honours the
+            # per-instance rows.)
+            bwd_rtol = jnp.min(rtol) if jnp.ndim(rtol) else rtol
+            bwd_atol = jnp.min(atol) if jnp.ndim(atol) else atol
             aug0 = jnp.concatenate(
                 [y1.ravel(), g.ravel(), jnp.zeros((p,), dtype=y1.dtype)]
             )[None, :]
@@ -140,15 +207,19 @@ def make_adjoint_solve(
                 t_start=t_end[:1],
                 t_end=t_start[:1],
                 method=method,
-                rtol=rtol,
-                atol=atol,
+                rtol=bwd_rtol,
+                atol=bwd_atol,
                 max_steps=max_steps,
                 controller=controller,
             )
             a0 = sol.ys[0, b * feat : 2 * b * feat].reshape(b, feat)
             dp = sol.ys[0, 2 * b * feat :]
 
-        dparams = unravel(dp)
+        if per_row:
+            # One gradient row per instance -- no cross-instance sum.
+            dparams = jax.vmap(unravel_row)(dp_rows)
+        else:
+            dparams = unravel(dp)
         # Boundary-time gradients: dL/dt_end = g . f(t_end, y1), and
         # dL/dt_start = -a(t_start) . f(t_start, y(t_start)).
         f_end = f(t_end, y1, params)

@@ -50,6 +50,7 @@ unconditionally.
 
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from typing import Any, NamedTuple
 
@@ -57,7 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from .drivers import AutoDiffAdjoint, BacksolveAdjoint, _Driver
-from .solution import Solution
+from .solution import Grads, Solution
 from .static import freeze, frozen_setattr
 from .static import leaf_key as _leaf_key
 from .static import tree_key as _tree_key
@@ -85,6 +86,18 @@ def _f_key(f):
     object identity (cache entries close over ``f``, keeping it alive, so an
     id can never be recycled while its entry exists)."""
     return f if isinstance(f, ODETerm) else (type(f), id(f))
+
+
+def _final_state_solution(ys, t_end) -> Solution:
+    """Synthesize the final-state ``Solution`` for a driver that returns only
+    ``y(t_end)`` (``BacksolveAdjoint``): per-instance status/stats do not
+    cross its custom-VJP boundary, so status is all-SUCCESS and stats empty --
+    documented on the driver, and exactly the regime the serving layer's grad
+    path uses."""
+    leaves = jax.tree_util.tree_leaves(ys)
+    b = leaves[0].shape[0]
+    ts = jnp.broadcast_to(jnp.asarray(t_end, leaves[0].dtype), (b,))
+    return Solution(ts=ts, ys=ys, status=jnp.zeros((b,), jnp.int32), stats={})
 
 
 class _KeyedLRU:
@@ -135,14 +148,16 @@ class _CacheEntry:
     executable is always usable when present.
     """
 
-    __slots__ = ("jitted", "executable", "driver_leaves")
+    __slots__ = ("jitted", "executable", "driver_leaves", "grad")
 
-    def __init__(self, jitted, driver_leaves):
+    def __init__(self, jitted, driver_leaves, grad: bool = False):
         self.jitted = jitted
         self.executable = None
         self.driver_leaves = driver_leaves
+        self.grad = grad
 
-    def call(self, y0, t_eval, t_start, t_end, dt0, args, rtol, atol) -> Solution:
+    def call(self, y0, t_eval, t_start, t_end, dt0, args, rtol, atol,
+             cotangent=None) -> Solution:
         tol_leaves = self.driver_leaves
         fn = self.executable if self.executable is not None else self.jitted
         if rtol is not None or atol is not None:
@@ -151,6 +166,8 @@ class _CacheEntry:
                 tol_leaves[0] = rtol
             if atol is not None:
                 tol_leaves[1] = atol
+        if self.grad:
+            return fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args, cotangent)
         return fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
 
 
@@ -174,8 +191,10 @@ class CompiledSolve:
         args: Any = None,
         rtol=None,
         atol=None,
+        cotangent=None,
     ) -> Solution:
-        return self._entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+        return self._entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol,
+                                atol, cotangent)
 
     def as_text(self) -> str:
         """The compiled program's HLO (donation shows up as input/output
@@ -213,20 +232,16 @@ class CompiledSolver:
     ):
         if donate not in (True, False, "auto"):
             raise ValueError(f"donate must be True, False or 'auto', got {donate!r}")
-        if isinstance(solver, BacksolveAdjoint):
-            raise TypeError(
-                "CompiledSolver does not support BacksolveAdjoint: its "
-                "custom-VJP solve returns only the final state and takes no "
-                "t_eval. Wrap BacksolveAdjoint.solve in jax.jit directly, or "
-                "use AutoDiffAdjoint/ScanAdjoint here."
-            )
-        if isinstance(solver, _Driver):
+        if isinstance(solver, (_Driver, BacksolveAdjoint)):
             if driver_kw:
                 raise TypeError("pass driver options to the driver, not CompiledSolver")
             driver = solver
         else:
             driver = AutoDiffAdjoint(AbstractStepper.coerce(solver), **driver_kw)
         self.driver = driver
+        # BacksolveAdjoint is final-state-only (no t_eval/dt0); its forward
+        # program wraps the returned y(t_end) in a synthesized Solution.
+        self._backsolve = isinstance(driver, BacksolveAdjoint)
         self.donate = donate
         self.cache_size = cache_size
         self._cache = _KeyedLRU(cache_size)
@@ -265,8 +280,21 @@ class CompiledSolver:
         k = _leaf_key(x)
         return None if k == self._driver_tol_keys[i] else k
 
+    def _validate(self, t_eval, dt0, cotangent) -> None:
+        if self._backsolve and (t_eval is not None or dt0 is not None):
+            raise TypeError(
+                "BacksolveAdjoint tracks only the final state: pass "
+                "t_start/t_end, not t_eval/dt0"
+            )
+        if cotangent is not None and isinstance(self.driver, AutoDiffAdjoint):
+            raise TypeError(
+                "AutoDiffAdjoint's while_loop has no reverse-mode rule: "
+                "gradient programs (cotangent=...) need ScanAdjoint "
+                "(discretize-then-optimize) or BacksolveAdjoint (adjoint ODE)"
+            )
+
     def _key(self, f, y0, t_eval, t_start, t_end, dt0, args, rtol=None,
-             atol=None, device=None) -> tuple:
+             atol=None, device=None, cotangent=None) -> tuple:
         return (
             self._driver_key,
             _f_key(f),
@@ -279,19 +307,23 @@ class CompiledSolver:
             self._tol_key(rtol, 0),
             self._tol_key(atol, 1),
             self._device_key(device),
+            _tree_key(cotangent),
         )
 
     def cache_key(self, f, y0, t_eval=None, *, t_start=None, t_end=None,
                   dt0=None, args: Any = None, rtol=None, atol=None,
-                  device=None) -> tuple:
+                  device=None, cotangent=None) -> tuple:
         """The hashable identity of the compiled program a ``solve`` with
         these arguments (or ``ShapeDtypeStruct`` specs) would dispatch to:
         (driver static config, dynamics identity, every dynamic argument's
-        shape/dtype class, placement).  Two argument sets with equal keys
-        share one executable.  The serving layer buckets requests by exactly
-        this key, so a bucket never straddles two programs."""
+        shape/dtype class, placement, cotangent class -- ``None`` for forward
+        programs).  Two argument sets with equal keys share one executable.
+        The serving layer buckets requests by exactly this key, so a bucket
+        never straddles two programs (and forward and gradient requests never
+        share a bucket)."""
+        self._validate(t_eval, dt0, cotangent)
         return self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol,
-                         device)
+                         device, cotangent)
 
     def _donate(self, t_eval) -> bool:
         """Resolve the donation policy: 'auto' donates y0 exactly when the
@@ -301,26 +333,71 @@ class CompiledSolver:
             return t_eval is None
         return self.donate
 
-    def _build(self, f, t_eval) -> _CacheEntry:
-        """Build the jit-wrapped solve program for one cache point."""
-        driver_def = self._driver_def
+    def _build(self, f, t_eval, grad: bool = False) -> _CacheEntry:
+        """Build the jit-wrapped solve program for one cache point.
 
-        def fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args):
-            drv = jax.tree_util.tree_unflatten(driver_def, tol_leaves)
+        Forward programs call the driver directly.  Gradient programs
+        (``grad=True``) wrap the driver's solve in ``jax.vjp`` over
+        ``(y0, args)``, pull the caller's cotangent through it, and deliver
+        the result as a ``Solution`` whose ``grads`` field carries
+        ``Grads(y0=..., args=...)`` -- one compiled artifact per (config,
+        shapes, device) covering forward AND backward, which is what makes a
+        served gradient request prewarmable exactly like inference.
+        """
+        driver_def = self._driver_def
+        backsolve = self._backsolve
+
+        def run(drv, y0, t_eval, t_start, t_end, dt0, args) -> Solution:
+            if backsolve:
+                ys = drv.solve(f, y0, t_start=t_start, t_end=t_end, args=args)
+                return _final_state_solution(ys, t_end)
             return drv.solve(
                 f, y0, t_eval, t_start=t_start, t_end=t_end, dt0=dt0, args=args
             )
 
-        jitted = jax.jit(fn, donate_argnums=(0,) if self._donate(t_eval) else ())
-        return _CacheEntry(jitted, self._driver_leaves)
+        if not grad:
+            def fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args):
+                drv = jax.tree_util.tree_unflatten(driver_def, tol_leaves)
+                return run(drv, y0, t_eval, t_start, t_end, dt0, args)
+
+            donate = (0,) if self._donate(t_eval) else ()
+            return _CacheEntry(jax.jit(fn, donate_argnums=donate),
+                               self._driver_leaves)
+
+        def fn(y0, tol_leaves, t_eval, t_start, t_end, dt0, args, cotangent):
+            drv = jax.tree_util.tree_unflatten(driver_def, tol_leaves)
+
+            def fwd(y0_, args_):
+                sol = run(drv, y0_, t_eval, t_start, t_end, dt0, args_)
+                return sol.ys, sol
+
+            if args is None:
+                # No args operand: keep the VJP arity minimal (and the
+                # gradient None, distinguishable from a zero cotangent).
+                ys, vjp_fn, sol = jax.vjp(lambda y_: fwd(y_, None), y0,
+                                          has_aux=True)
+                (gy0,) = vjp_fn(cotangent)
+                gargs = None
+            else:
+                ys, vjp_fn, sol = jax.vjp(fwd, y0, args, has_aux=True)
+                gy0, gargs = vjp_fn(cotangent)
+            return dataclasses.replace(sol, grads=Grads(y0=gy0, args=gargs))
+
+        # In the final-state regime the cotangent buffer (argnum 7) has the
+        # same shape as ys and grads.y0, so XLA can alias it; y0 itself is a
+        # VJP residual and must stay alive.
+        donate = (7,) if self._donate(t_eval) else ()
+        return _CacheEntry(jax.jit(fn, donate_argnums=donate),
+                           self._driver_leaves, grad=True)
 
     def _lookup(self, f, y0, t_eval, t_start, t_end, dt0, args,
-                rtol=None, atol=None, device=None) -> _CacheEntry:
+                rtol=None, atol=None, device=None, cotangent=None) -> _CacheEntry:
+        self._validate(t_eval, dt0, cotangent)
         key = self._key(f, y0, t_eval, t_start, t_end, dt0, args, rtol, atol,
-                        device)
+                        device, cotangent)
         entry = self._cache.get(key)
         if entry is None:
-            entry = self._build(f, t_eval)
+            entry = self._build(f, t_eval, grad=cotangent is not None)
             self._cache.put(key, entry)
         return entry
 
@@ -337,6 +414,7 @@ class CompiledSolver:
         rtol=None,
         atol=None,
         device=None,
+        cotangent=None,
     ) -> CompiledSolve:
         """AOT-compile for the given argument specs (``jax.ShapeDtypeStruct``
         or example arrays) and return the callable executable handle.  The
@@ -349,13 +427,18 @@ class CompiledSolver:
         the per-instance-tolerance variant a serving bucket will call with
         (omitting them compiles the driver-default class).
 
+        ``cotangent`` specs (matching the output ``ys``) AOT-build the
+        *gradient* program for this point: the VJP-wrapped solve that
+        ``solve(..., cotangent=...)`` dispatches to.  Gradient and forward
+        programs are distinct cache entries.
+
         ``device`` pins the executable to one device of the mesh (every
         dynamic argument must then live there at call time -- ``solve`` with
         the same ``device`` places them).  Each device compiles its own
         entry; the serving layer prewarms one per device it round-robins
         over."""
         entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol,
-                             atol, device)
+                             atol, device, cotangent)
         if entry.executable is None:
             tol_leaves = list(self._driver_leaves)
             if rtol is not None:
@@ -370,9 +453,10 @@ class CompiledSolver:
                 spec_of = lambda x: jax.ShapeDtypeStruct(
                     _spec(x).shape, _spec(x).dtype, sharding=sharding
                 )
-            abstract = jax.tree_util.tree_map(
-                spec_of, (y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
-            )
+            operands = (y0, tol_leaves, t_eval, t_start, t_end, dt0, args)
+            if entry.grad:
+                operands = operands + (cotangent,)
+            abstract = jax.tree_util.tree_map(spec_of, operands)
             entry.executable = entry.jitted.lower(*abstract).compile()
         return CompiledSolve(entry)
 
@@ -391,13 +475,13 @@ class CompiledSolver:
             spec = dict(spec)
             kw = {k: spec.pop(k, None)
                   for k in ("t_eval", "t_start", "t_end", "dt0", "args",
-                            "rtol", "atol", "device")}
+                            "rtol", "atol", "device", "cotangent")}
             y0 = spec.pop("y0")
             if spec:
                 raise TypeError(f"unknown prewarm spec keys: {sorted(spec)}")
             key = self._key(f, y0, kw["t_eval"], kw["t_start"], kw["t_end"],
                             kw["dt0"], kw["args"], kw["rtol"], kw["atol"],
-                            kw["device"])
+                            kw["device"], kw["cotangent"])
             entry = self._cache.data.get(key)
             if entry is not None and entry.executable is not None:
                 continue
@@ -418,19 +502,29 @@ class CompiledSolver:
         rtol=None,
         atol=None,
         device=None,
+        cotangent=None,
     ) -> Solution:
         """Dispatch a solve through the zero-retrace cache.  ``device``
         selects the per-device program variant (see :meth:`compile`) and
         commits every dynamic argument there first -- a no-op transfer for
         arguments the caller already placed, which is the serving fast path
-        (the batch packer lands buffers on the target device directly)."""
+        (the batch packer lands buffers on the target device directly).
+
+        ``cotangent`` (matching the output ``ys``; usually ``ones_like`` of
+        the final state, or the loss gradient w.r.t. it) routes through the
+        *gradient* program: the returned ``Solution`` additionally carries
+        ``grads = Grads(y0=dL/dy0, args=dL/dargs)``.  Requires a
+        reverse-differentiable driver (``ScanAdjoint``/``BacksolveAdjoint``)."""
         if device is not None:
-            y0, t_eval, t_start, t_end, dt0, args, rtol, atol = jax.device_put(
-                (y0, t_eval, t_start, t_end, dt0, args, rtol, atol), device
+            (y0, t_eval, t_start, t_end, dt0, args, rtol, atol,
+             cotangent) = jax.device_put(
+                (y0, t_eval, t_start, t_end, dt0, args, rtol, atol, cotangent),
+                device,
             )
         entry = self._lookup(f, y0, t_eval, t_start, t_end, dt0, args, rtol,
-                             atol, device)
-        return entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol, atol)
+                             atol, device, cotangent)
+        return entry.call(y0, t_eval, t_start, t_end, dt0, args, rtol, atol,
+                          cotangent)
 
 
 # --------------------------------------------------------------------------

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from .events import Event, normalize_events
 from .solution import Solution
-from .static import freeze, frozen_setattr, register_config_pytree
+from .static import freeze, frozen_setattr, register_config_pytree, tree_key
 from .step import StepFunction
 from .stepper import AbstractStepper
 from .terms import ODETerm, as_term, ravel_state, ravel_term
@@ -201,7 +201,16 @@ class ScanAdjoint(_Driver):
 
             state, _ = jax.lax.scan(jax.checkpoint(block_body), state, None, length=blocks)
             if rem:
-                state, _ = jax.lax.scan(scan_body, state, None, length=rem)
+                # The remainder block honours the same checkpoint contract as
+                # the full blocks: without the wrap, the tail's `rem` steps of
+                # activations would be stored for the backward pass, silently
+                # breaking the O(max_steps/checkpoint_every) memory bound
+                # whenever max_steps % checkpoint_every != 0.
+                def tail_body(s, _):
+                    s, _ = jax.lax.scan(scan_body, s, None, length=rem)
+                    return s, None
+
+                state, _ = jax.checkpoint(tail_body)(state, None)
         else:
             state, _ = jax.lax.scan(scan_body, state, None, length=self.max_steps)
         return self._finalize(step_fn.finish(state, consts), raveled)
@@ -217,11 +226,27 @@ class BacksolveAdjoint:
     the rest static).
 
     Tracks only the final state; its VJP solves the augmented adjoint ODE
-    backwards in time via ``core/adjoint.py``.  Returns the final state (an
-    array for flat input, the caller's PyTree structure otherwise) rather than
-    a ``Solution``: the custom-VJP forward can only expose the differentiable
-    output, so per-instance status/stats are unavailable here -- use
-    ``adjoint_backsolve_problem`` to instrument the backward pass.
+    backwards in time via ``core/adjoint.py``.
+
+    **Return contract:** ``solve`` returns the final state ``y(t_end)`` -- an
+    array of the same shape as ``y0`` for flat input, the caller's PyTree
+    structure otherwise -- NOT a ``Solution``: the custom-VJP forward can only
+    expose the differentiable output, so per-instance status/stats are
+    unavailable here.  Use ``adjoint_backsolve_problem`` to instrument the
+    backward pass, or let ``CompiledSolver`` synthesize a final-state
+    ``Solution`` around this driver.
+
+    **Memoization:** the ``custom_vjp`` closure built by ``make_adjoint_solve``
+    is memoized per (vector-field identity, state structure) on the driver
+    instance and wrapped in ``jax.jit``, so repeated ``solve`` calls with the
+    same term reuse one traced program instead of rebuilding (and re-tracing)
+    the closure on every call.  Reuse the same driver + term objects across
+    solves to hit the cache; the memo is a derived cache excluded from the
+    pytree aux data (an unflattened copy starts empty).
+
+    ``ODETerm.batched_args`` terms thread each instance's own parameter row
+    through the backward pass (per-request rows stay per-request in the
+    returned cotangent).
     """
 
     __setattr__ = frozen_setattr
@@ -255,28 +280,59 @@ class BacksolveAdjoint:
         self.atol = atol
         self.max_steps = max_steps
         self.mode = mode
+        self._solve_memo = {}
         freeze(self)
 
-    def solve(self, f, y0, *, t_start, t_end, args: Any = None):
+    def _rebuild_derived(self):
+        # Pytree unflatten bypasses __init__; start with a fresh (empty) memo.
+        object.__setattr__(self, "_solve_memo", {})
+
+    def _adjoint_solve(self, f, state_key, raveled):
+        """The memoized ``make_adjoint_solve`` closure for ``(f, state
+        structure)``: rebuilding the ``custom_vjp`` wrapper per call would
+        re-trace under ``jit`` on every solve and defeat ``CompiledSolver``
+        caching, so the closure (jit-wrapped) is cached on the instance."""
         from .adjoint import make_adjoint_solve  # deferred: adjoint imports loop
 
+        fkey = f if isinstance(f, ODETerm) else (type(f), id(f))
+        key = (fkey, state_key)
+        solve_fn = self._solve_memo.get(key)
+        if solve_fn is None:
+            if raveled is None:
+                flat_f = f.vf if isinstance(f, ODETerm) else f
+            else:
+                flat_f = ravel_term(f, raveled).vf
+            solve_fn = make_adjoint_solve(
+                flat_f,
+                method=self.stepper,
+                rtol=self.rtol,
+                atol=self.atol,
+                max_steps=self.max_steps,
+                mode=self.mode,
+                controller=self.controller,
+                batched_args=isinstance(f, ODETerm) and f.batched_args,
+            )
+            # Eager drivers (concrete tolerances) get a jit wrapper so repeated
+            # solves dispatch through jit's C++ fast path.  A driver that was
+            # unflattened *inside* another trace has tracer tolerances: the
+            # closure must stay un-jitted there (an inner pjit would capture
+            # the outer trace's tracers as constants and fail at lowering),
+            # and the surrounding trace compiles it anyway.
+            if not any(
+                isinstance(x, jax.core.Tracer) for x in (self.rtol, self.atol)
+            ):
+                solve_fn = jax.jit(solve_fn)
+            self._solve_memo[key] = solve_fn
+        return solve_fn
+
+    def solve(self, f, y0, *, t_start, t_end, args: Any = None):
         y0_flat, raveled = ravel_state(y0)
-        if raveled is None:
-            flat_f = f.vf if isinstance(f, ODETerm) else f
-        else:
-            term = ravel_term(f, raveled)
-            flat_f = term.vf
-        solve_fn = make_adjoint_solve(
-            flat_f,
-            method=self.stepper,
-            rtol=self.rtol,
-            atol=self.atol,
-            max_steps=self.max_steps,
-            mode=self.mode,
-            controller=self.controller,
-        )
+        # None for flat states; (treedef, per-leaf shape/dtype) for PyTrees --
+        # the unravel closure is structure-specific, so the memo must be too.
+        state_key = None if raveled is None else tree_key(y0)
+        solve_fn = self._adjoint_solve(f, state_key, raveled)
         ys = solve_fn(y0_flat, t_start, t_end, args)
         return raveled.unravel(ys) if raveled is not None else ys
 
 
-register_config_pytree(BacksolveAdjoint, ("rtol", "atol"))
+register_config_pytree(BacksolveAdjoint, ("rtol", "atol"), derived_fields=("_solve_memo",))

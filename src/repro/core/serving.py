@@ -71,8 +71,25 @@ leaf is stacked along a new leading batch axis and vmapped per instance, so
 requests with *different parameter values* share one bucket and one compiled
 program instead of splitting the cache key per parameter set.
 
+Gradient serving: a request with ``grad=True`` (or constructed as a
+``GradRequest``, or carrying an explicit ``cotangent``) routes through the
+same batcher into a *gradient bucket*: its rows -- including the per-request
+cotangents -- pack into the same padded power-of-two batches, but the bucket
+key carries the adjoint program's identity (the driver's static config hashes
+the driver class, ``ScanAdjoint.checkpoint_every``, ``BacksolveAdjoint.mode``,
+...), and the compiled artifact is the VJP-wrapped solve
+(``CompiledSolver.solve(cotangent=...)``), traced once per (config, batch
+class, device) and prewarmable exactly like a forward program.  Gradient
+futures resolve to ``(solution_view, Grads(y0=..., args=...))`` -- the
+per-request gradient rows sliced out of the coalesced backward solve.
+Gradient requests track only the final state (no ``t_eval``); the default
+gradient driver is ``ScanAdjoint`` (reverse-differentiable bounded scan;
+``AutoDiffAdjoint``'s while_loop has no reverse rule), overridable per
+request via ``method=`` or service-wide via ``default_grad_method``.
+
 Statistics: ``stats()`` exposes the serving counters (queue depth, batches,
-pad waste, solves/sec, in-flight window, compiled-program cache hits/misses)
+pad waste, solves/sec, gradient solves ``n_grad_solves`` and their device
+time ``grad_device_s``, in-flight window, compiled-program cache hits/misses)
 and the async time split -- ``queue_s`` (submit to launch), ``pack_s`` (host
 stacking + dispatch), ``device_s`` (launch to observed completion) -- plus
 the summed per-instance accumulators of every ``Solution`` served, so
@@ -93,7 +110,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compiled import CompiledSolver, _f_key
-from .drivers import AutoDiffAdjoint, _Driver
+from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint, _Driver
 from .solution import Solution
 from .static import tree_key
 from .stepper import AbstractStepper
@@ -125,8 +142,20 @@ class SolveRequest:
               stacked along a new leading batch axis across the bucket).
     rtol, atol: per-request tolerances; default to the method's configuration.
     method:   stepper name / ``AbstractStepper`` / configured driver; default
-              is the service's ``default_method``.
+              is the service's ``default_method`` (``default_grad_method``
+              for gradient requests, which need a reverse-differentiable
+              driver -- ``ScanAdjoint`` or ``BacksolveAdjoint``).
     dt0:      optional fixed initial step size.
+    grad:     request gradients: the future resolves to ``(solution_view,
+              Grads(y0=..., args=...))`` -- the VJP of the final state pulled
+              back through the solve, coalesced with the other gradient
+              requests of the same bucket.  Implied by a non-None
+              ``cotangent``.  Gradient requests track only the final state
+              (``t_eval`` must be ``None``).
+    cotangent: the output cotangent to pull back -- same structure and leaf
+              shapes as ``y0`` (e.g. the loss gradient w.r.t. the final
+              state).  Defaults to ones, which sums the gradient over state
+              features.
     """
 
     f: Any
@@ -139,15 +168,27 @@ class SolveRequest:
     atol: float | None = None
     method: Any = None
     dt0: float | None = None
+    grad: bool = False
+    cotangent: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GradRequest(SolveRequest):
+    """A ``SolveRequest`` that asks for gradients (``grad=True`` by default):
+    ``GradRequest(f, y0, t0, t1, cotangent=dL_dy1, args=theta)`` resolves to
+    ``(solution_view, Grads(y0=dL/dy0, args=dL/dtheta))``."""
+
+    grad: bool = True
 
 
 class _Item:
     """A normalized, validated request queued in a bucket."""
 
     __slots__ = ("f", "y0", "t0", "t1", "t_eval", "n_eval", "args",
-                 "rtol", "atol", "dt0", "t_enq")
+                 "rtol", "atol", "dt0", "grad", "cotangent", "t_enq")
 
-    def __init__(self, f, y0, t0, t1, t_eval, n_eval, args, rtol, atol, dt0):
+    def __init__(self, f, y0, t0, t1, t_eval, n_eval, args, rtol, atol, dt0,
+                 grad=False, cotangent=None):
         self.f = f
         self.y0 = y0
         self.t0 = t0
@@ -158,6 +199,8 @@ class _Item:
         self.rtol = rtol
         self.atol = atol
         self.dt0 = dt0
+        self.grad = grad
+        self.cotangent = cotangent  # validated to mirror y0; None iff not grad
         self.t_enq = 0.0  # service clock at submit, for the queue_s split
 
 
@@ -194,16 +237,25 @@ class SolveFuture:
     its batch completes; if it is still *queued*, ``result()`` flushes its
     bucket first (pass ``flush=False`` to get an error instead, e.g. from
     latency-sensitive callers that only want already-launched work).
+
+    For a gradient request, ``result()`` returns ``(view, grads)``: the same
+    per-request ``Solution`` view plus a ``Grads(y0=..., args=...)`` record
+    with the batch axis stripped (``y0`` mirrors the request's ``y0``
+    structure; ``args`` its ``args``, or ``None`` when the request carried
+    none) -- the unbatched gradients a training step consumes directly.
     """
 
-    __slots__ = ("_service", "_bucket", "_inflight", "_solution", "_error")
+    __slots__ = ("_service", "_bucket", "_inflight", "_solution", "_error",
+                 "_grad")
 
-    def __init__(self, service: "SolveService", bucket: "_Bucket"):
+    def __init__(self, service: "SolveService", bucket: "_Bucket",
+                 grad: bool = False):
         self._service = service
         self._bucket = bucket
         self._inflight: _Inflight | None = None
         self._solution: Solution | None = None
         self._error: BaseException | None = None
+        self._grad = grad
 
     def done(self) -> bool:
         if self._solution is None and self._error is None:
@@ -222,6 +274,9 @@ class SolveFuture:
                 self._service._harvest(self._inflight, block=True)
         if self._error is not None:
             raise self._error
+        if self._grad:
+            grads = jax.tree_util.tree_map(lambda x: x[0], self._solution.grads)
+            return self._solution, grads
         return self._solution
 
 
@@ -229,10 +284,10 @@ class _Bucket:
     """All queued requests that can share one compiled program."""
 
     __slots__ = ("key", "driver", "solver", "f", "time_dtype", "n_eval_class",
-                 "has_args", "has_dt0", "pending", "oldest")
+                 "has_args", "has_dt0", "grad", "pending", "oldest")
 
     def __init__(self, key, driver, solver, f, time_dtype, n_eval_class,
-                 has_args, has_dt0):
+                 has_args, has_dt0, grad=False):
         self.key = key
         self.driver = driver
         self.solver = solver
@@ -241,6 +296,7 @@ class _Bucket:
         self.n_eval_class = n_eval_class  # padded grid length, or None
         self.has_args = has_args
         self.has_dt0 = has_dt0
+        self.grad = grad  # gradient bucket: packs cotangents, runs the VJP program
         self.pending: list[tuple[_Item, SolveFuture]] = []
         self.oldest: float | None = None  # enqueue time of the oldest pending
 
@@ -266,7 +322,9 @@ class SolveService:
     backpressure -- and ``0`` makes every execution synchronous, the
     pre-async blocking service), ``devices`` (the devices batches round-robin
     over; default every ``jax.devices()`` -- one process drives the mesh),
-    ``default_method`` (for requests without one), ``donate``/``cache_size``
+    ``default_method`` (for requests without one), ``default_grad_method``
+    (for *gradient* requests without one; defaults to a ``ScanAdjoint`` over
+    the stepper, the reverse-differentiable driver), ``donate``/``cache_size``
     (forwarded to each ``CompiledSolver``) and ``clock`` (injectable
     monotonic clock, for deterministic deadline tests).
 
@@ -287,6 +345,7 @@ class SolveService:
         max_inflight: int = 4,
         devices=None,
         default_method: Any = None,
+        default_grad_method: Any = None,
         donate: bool | str = "auto",
         cache_size: int = 128,
         clock: Callable[[], float] = time.monotonic,
@@ -305,6 +364,7 @@ class SolveService:
         if not self.devices:
             raise ValueError("need at least one device to serve on")
         self.default_method = default_method
+        self.default_grad_method = default_grad_method
         self.donate = donate
         self.cache_size = cache_size
         self.clock = clock
@@ -334,24 +394,30 @@ class SolveService:
             "n_failed_batches": 0,
             "n_backpressure_waits": 0,
             "peak_inflight": 0,
+            "n_grad_solves": 0,
         }
         self._solver_totals: dict[str, float] = {}
         self._queue_s = 0.0
         self._pack_s = 0.0
         self._device_s = 0.0
+        self._grad_device_s = 0.0
 
     # ------------------------------------------------------------------
     # request normalization and bucketing
 
-    def _coerce_driver(self, method) -> _Driver:
+    def _coerce_driver(self, method, grad: bool = False):
         if method is None:
-            method = self.default_method
-        if isinstance(method, _Driver):
+            method = self.default_grad_method if grad else self.default_method
+        if isinstance(method, (_Driver, BacksolveAdjoint)):
             return method
-        memo_key = method if isinstance(method, (str, type(None))) else id(method)
+        memo_key = (grad,
+                    method if isinstance(method, (str, type(None))) else id(method))
         driver = self._driver_memo.get(memo_key)
         if driver is None:
-            driver = AutoDiffAdjoint(AbstractStepper.coerce(method))
+            stepper = AbstractStepper.coerce(method)
+            # Gradient programs need a reverse-differentiable driver: the
+            # default forward driver's while_loop has no reverse rule.
+            driver = ScanAdjoint(stepper) if grad else AutoDiffAdjoint(stepper)
             self._driver_memo[memo_key] = driver
         return driver
 
@@ -378,8 +444,36 @@ class SolveService:
         canonical = jax.dtypes.canonicalize_dtype(x.dtype)
         return x if x.dtype == canonical else x.astype(canonical)
 
-    def _normalize(self, req: SolveRequest) -> tuple[_Item, _Driver]:
-        driver = self._coerce_driver(req.method)
+    def _normalize(self, req: SolveRequest) -> tuple[_Item, Any]:
+        grad = bool(req.grad) or req.cotangent is not None
+        driver = self._coerce_driver(req.method, grad)
+        if grad and isinstance(driver, AutoDiffAdjoint):
+            raise TypeError(
+                "gradient requests need a reverse-differentiable driver "
+                "(ScanAdjoint or BacksolveAdjoint); AutoDiffAdjoint's "
+                "while_loop has no reverse rule.  Pass method=ScanAdjoint(...) "
+                "or set the service's default_grad_method."
+            )
+        if grad and req.t_eval is not None:
+            raise ValueError(
+                "gradient requests track only the final state: the cotangent "
+                "pulls back through y(t1), so t_eval must be None"
+            )
+        if isinstance(driver, BacksolveAdjoint) and (
+                req.t_eval is not None or req.dt0 is not None):
+            raise TypeError(
+                "BacksolveAdjoint serves final-state solves only: requests "
+                "routed to it cannot carry t_eval or dt0"
+            )
+        if grad and isinstance(driver, BacksolveAdjoint) and \
+                driver.mode == "joint":
+            raise TypeError(
+                "coalesced gradient serving needs row-independent backward "
+                "solves: BacksolveAdjoint(mode='joint') stacks the whole "
+                "batch into one adjoint instance with a batch-shared time "
+                "range, which a bucket of independent requests cannot "
+                "guarantee.  Use mode='per_instance' (or ScanAdjoint)."
+            )
         y0 = (req.y0 if isinstance(req.y0, jax.Array)
               else jax.tree_util.tree_map(self._as_array, req.y0))
         flat = isinstance(y0, (jax.Array, np.ndarray))
@@ -403,11 +497,21 @@ class SolveService:
             # the term batched_args: the vmap then hands each instance its
             # own args row.  ODETerm hashes by value, so equal wrappers of
             # one vector field still share a bucket and a compiled program.
+            backsolve_grad = grad and isinstance(driver, BacksolveAdjoint)
             if isinstance(f, ODETerm):
-                if not flat or not f.batched:
+                if not flat or not f.batched or backsolve_grad:
                     f = dataclasses.replace(f, batched_args=True)
             elif not flat:
                 f = ODETerm(f, batched=False, with_args=True,
+                            batched_args=True)
+            elif backsolve_grad:
+                # The per-instance backward solve re-closes the dynamics over
+                # the parameters one instance at a time; without the flag it
+                # would hand every instance the WHOLE stacked-args batch (and
+                # row-0 values after broadcasting) -- silently wrong gradients
+                # for every row but the first.  Mark the rows so the adjoint
+                # threads each instance's own row through the ravel boundary.
+                f = ODETerm(f, batched=True, with_args=True,
                             batched_args=True)
         rtol = req.rtol if req.rtol is not None else driver.rtol
         atol = req.atol if req.atol is not None else driver.atol
@@ -427,9 +531,35 @@ class SolveService:
                     f"{t_eval.shape}"
                 )
             n_eval = int(t_eval.shape[0])
+        cotangent = None
+        if grad:
+            if req.cotangent is None:
+                # Default pullback: sum the gradient over state features.
+                cotangent = jax.tree_util.tree_map(
+                    lambda y: np.ones(np.shape(y), dtype=y.dtype), y0)
+            else:
+                cot = jax.tree_util.tree_map(self._as_array, req.cotangent)
+                if (jax.tree_util.tree_structure(cot)
+                        != jax.tree_util.tree_structure(y0)):
+                    raise ValueError(
+                        "cotangent must mirror y0's PyTree structure "
+                        f"(got {jax.tree_util.tree_structure(cot)}, "
+                        f"expected {jax.tree_util.tree_structure(y0)})"
+                    )
+                for cl, yl in zip(jax.tree_util.tree_leaves(cot), leaves):
+                    if np.shape(cl) != np.shape(yl):
+                        raise ValueError(
+                            f"cotangent leaf shape {np.shape(cl)} does not "
+                            f"match the y0 leaf shape {np.shape(yl)}"
+                        )
+                # The VJP's output aval is ys (dtype of y0): cast rather than
+                # letting a float64 host cotangent split or break the program.
+                cotangent = jax.tree_util.tree_map(
+                    lambda c, y: np.asarray(c, dtype=y.dtype), cot, y0)
         item = _Item(f, y0, float(req.t0), float(req.t1), t_eval, n_eval,
                      args, float(rtol), float(atol),
-                     None if req.dt0 is None else float(req.dt0))
+                     None if req.dt0 is None else float(req.dt0),
+                     grad, cotangent)
         return item, driver
 
     def _bucket_for(self, item: _Item, driver: _Driver) -> _Bucket:
@@ -442,6 +572,13 @@ class SolveService:
             n_eval_class,
             tree_key(item.args),
             item.dt0 is None,
+            # Forward and gradient requests never share a bucket: they
+            # dispatch to different compiled programs (the driver_key above
+            # already separates adjoint configs -- driver class,
+            # checkpoint_every, backsolve mode -- since it hashes the full
+            # static config).  The cotangent's shape class is y0's by
+            # validation, so the flag alone completes the program identity.
+            item.grad,
         )
         bucket = self._buckets.get(key)
         if bucket is None:
@@ -454,7 +591,7 @@ class SolveService:
                                            jax.tree_util.tree_leaves(item.y0)])
             bucket = _Bucket(key, driver, solver, item.f, time_dtype,
                              n_eval_class, item.args is not None,
-                             item.dt0 is not None)
+                             item.dt0 is not None, item.grad)
             self._buckets[key] = bucket
         return bucket
 
@@ -472,7 +609,7 @@ class SolveService:
             self.flush()
         item, driver = self._normalize(req)
         bucket = self._bucket_for(item, driver)
-        fut = SolveFuture(self, bucket)
+        fut = SolveFuture(self, bucket, grad=item.grad)
         item.t_enq = self.clock()
         if not bucket.pending:
             bucket.oldest = item.t_enq
@@ -570,6 +707,12 @@ class SolveService:
             kw["args"] = jax.tree_util.tree_map(host_stack, *[r.args for r in rows])
         if bucket.has_dt0:
             kw["dt0"] = vec([r.dt0 for r in rows])
+        if bucket.grad:
+            # Per-request cotangents row through the batch exactly like y0;
+            # pad rows reuse request 0's cotangent (their gradients are
+            # sliced off with the rest of the padding).
+            kw["cotangent"] = jax.tree_util.tree_map(
+                host_stack, *[r.cotangent for r in rows])
         return kw
 
     def _execute(self, bucket: _Bucket) -> None:
@@ -661,8 +804,12 @@ class SolveService:
                 fut._error = e
                 fut._inflight = None
             return True
-        self._device_s += time.perf_counter() - rec.launch_pc
+        elapsed = time.perf_counter() - rec.launch_pc
+        self._device_s += elapsed
         self._counters["n_completed"] += len(batch)
+        if bucket.grad:
+            self._grad_device_s += elapsed
+            self._counters["n_grad_solves"] += len(batch)
         for name, acc in sol.stats.items():
             self._solver_totals[name] = (
                 self._solver_totals.get(name, 0.0) + float(acc[: len(batch)].sum())
@@ -716,6 +863,14 @@ class SolveService:
                 )
             if bucket.has_dt0:
                 spec["dt0"] = vec
+            if bucket.grad:
+                # The gradient program's extra operand: cotangent rows shaped
+                # like y0 (validated at submit), selecting the VJP-wrapped
+                # build in CompiledSolver.
+                spec["cotangent"] = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct((b,) + x.shape, x.dtype),
+                    item.cotangent,
+                )
             for device in self.devices:
                 specs.append(dict(spec, device=device))
         return bucket.solver.prewarm(bucket.f, specs)
@@ -749,6 +904,7 @@ class SolveService:
             "queue_s": self._queue_s,
             "pack_s": self._pack_s,
             "device_s": self._device_s,
+            "grad_device_s": self._grad_device_s,
             "busy_s": busy_s,
             "cache_hits": hits,
             "cache_misses": misses,

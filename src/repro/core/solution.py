@@ -4,10 +4,27 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import numpy as np
+
+
+class Grads(NamedTuple):
+    """Gradients delivered by a reverse-mode solve program.
+
+    y0:   cotangent of the initial state -- same PyTree structure as the
+          ``y0`` that was solved, every leaf with the batch as its leading
+          axis (``(b, f)`` for flat states).
+    args: cotangent of the dynamics arguments (same structure as ``args``),
+          or ``None`` when the solve carried no args.  When the term batches
+          its args (``ODETerm.batched_args`` / serving's per-request parameter
+          rows), each leaf's leading axis is the batch and row ``i`` is
+          request ``i``'s own parameter gradient.
+    """
+
+    y0: Any
+    args: Any = None
 
 
 class Status(enum.IntEnum):
@@ -47,6 +64,12 @@ class Solution:
     event_y:    (b, E, f) interpolated states at the crossings (PyTree states
                 unravel to (b, E, ...) leaves)
     event_mask: (b, E) bool -- which (instance, event) cells fired
+
+    grads: a ``Grads(y0=..., args=...)`` record when the solution came out of
+    a reverse-mode program (``CompiledSolver.solve(cotangent=...)`` / a
+    served ``GradRequest``), ``None`` otherwise.  Every grads leaf carries
+    the batch as its leading axis, so ``slice_batch`` views carve per-request
+    gradients out of a coalesced backward solve exactly like ``ys``.
     """
 
     ts: jax.Array
@@ -56,6 +79,7 @@ class Solution:
     event_t: jax.Array | None = None
     event_y: Any = None
     event_mask: jax.Array | None = None
+    grads: Any = None
 
     @property
     def success(self) -> jax.Array:
@@ -104,9 +128,10 @@ class Solution:
         batch as its leading axis) and slices each stats accumulator.
         """
         take = lambda x: x[index]
-        if isinstance(self.ys, (np.ndarray, jax.Array)) and self.event_t is None:
-            # Fast path for flat-state, event-free solutions: direct indexing,
-            # no tree machinery (this is the serving unpack hot loop).
+        if (isinstance(self.ys, (np.ndarray, jax.Array)) and self.event_t is None
+                and self.grads is None):
+            # Fast path for flat-state, event-free, forward-only solutions:
+            # direct indexing, no tree machinery (the serving unpack hot loop).
             return Solution(
                 ts=self.ts[index],
                 ys=self.ys[index],
@@ -123,6 +148,7 @@ class Solution:
             event_t=maybe(self.event_t),
             event_y=maybe(self.event_y),
             event_mask=maybe(self.event_mask),
+            grads=maybe(self.grads),
         )
 
     def truncate_eval(self, n: int) -> "Solution":

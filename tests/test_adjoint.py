@@ -117,3 +117,141 @@ def test_dense_adjoint_matches_direct():
     g_ref = jax.grad(loss_ref, argnums=(0, 1))(Y0, A0)
     np.testing.assert_allclose(np.asarray(g_adj[0]), np.asarray(g_ref[0]), atol=2e-4)
     np.testing.assert_allclose(np.asarray(g_adj[1]), np.asarray(g_ref[1]), atol=2e-4)
+
+
+@pytest.mark.reverse_diff
+def test_per_instance_batched_args_rows():
+    """``batched_args=True``: every params leaf carries the batch on its
+    leading axis and instance i owns row i -- the per-instance backward must
+    thread each instance's OWN row through the ravel boundary and return one
+    gradient row per instance (no cross-instance sum)."""
+    def row_decay(t, y, rates):
+        return -rates * y
+
+    y0 = jnp.asarray([[1.0, 0.5], [0.3, 1.2], [2.0, 0.1]], jnp.float32)
+    rates = jnp.asarray([[0.5, 2.0], [1.3, 0.7], [0.9, 1.6]], jnp.float32)
+    solve = make_adjoint_solve(row_decay, mode="per_instance",
+                               rtol=1e-7, atol=1e-9, batched_args=True)
+
+    def loss(y0_, rates_):
+        return jnp.sum(solve(y0_, 0.0, 1.0, rates_))
+
+    gy, gr = jax.jit(jax.grad(loss, argnums=(0, 1)))(y0, rates)
+    assert gr.shape == rates.shape, "one gradient row per instance"
+    # y1 = y0*exp(-r): dL/dy0 = exp(-r), dL/dr = -y0*exp(-r)
+    np.testing.assert_allclose(np.asarray(gy), np.exp(-np.asarray(rates)),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gr),
+                               -np.asarray(y0) * np.exp(-np.asarray(rates)),
+                               atol=1e-4)
+
+
+@pytest.mark.reverse_diff
+def test_joint_mode_keeps_parameter_rows():
+    """Joint mode needs no flag for per-request rows: the whole stack ravels
+    into the augmented state and the returned cotangent keeps the rows."""
+    def row_decay(t, y, rates):
+        return -rates * y
+
+    y0 = jnp.asarray([[1.0, 0.5], [0.3, 1.2]], jnp.float32)
+    rates = jnp.asarray([[0.5, 2.0], [1.3, 0.7]], jnp.float32)
+    solve = make_adjoint_solve(row_decay, mode="joint", rtol=1e-7, atol=1e-9)
+
+    gr = jax.jit(jax.grad(
+        lambda r: jnp.sum(solve(y0, 0.0, 1.0, r))))(rates)
+    np.testing.assert_allclose(np.asarray(gr),
+                               -np.asarray(y0) * np.exp(-np.asarray(rates)),
+                               atol=1e-4)
+
+
+def test_joint_mode_backward_accepts_tolerance_rows():
+    """Per-row (b,)-shaped tolerances reach the joint backward solve, which
+    is a SINGLE stacked instance: they must collapse to the strictest row
+    instead of breaking the while_loop carry."""
+    solve = make_adjoint_solve(linear, mode="joint",
+                               rtol=jnp.full((3,), 1e-7, jnp.float32),
+                               atol=jnp.full((3,), 1e-9, jnp.float32))
+    ref = make_adjoint_solve(linear, mode="joint", rtol=1e-7, atol=1e-9)
+
+    def loss(s, A):
+        return jnp.sum(s(Y0, 0.0, 1.0, A) ** 2)
+
+    g = jax.jit(jax.grad(lambda A: loss(solve, A)))(A0)
+    g_ref = jax.jit(jax.grad(lambda A: loss(ref, A)))(A0)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-6)
+
+
+class TestDriverRegressions:
+    """The two adjoint-driver bugs fixed alongside gradient serving."""
+
+    def test_backsolve_memoizes_custom_vjp_closure(self):
+        """Repeated ``BacksolveAdjoint.solve`` calls with the same term must
+        reuse one traced closure: rebuilding the ``custom_vjp`` wrapper per
+        call re-traced the vector field on every solve."""
+        from repro.core import BacksolveAdjoint, Stepper
+
+        traces = []
+
+        def vf(t, y, args):
+            traces.append(1)
+            return -y * args
+
+        drv = BacksolveAdjoint(Stepper("dopri5"), rtol=1e-6, atol=1e-8)
+        y0 = jnp.ones((2, 3), jnp.float32)
+        args = jnp.full((3,), 0.7, jnp.float32)
+        first = drv.solve(vf, y0, t_start=0.0, t_end=1.0, args=args)
+        n_first = len(traces)
+        assert n_first > 0
+        for _ in range(3):
+            again = drv.solve(vf, y0, t_start=0.0, t_end=1.0, args=args)
+        assert len(traces) == n_first, \
+            "repeated solves must not rebuild (and re-trace) the closure"
+        assert len(drv._solve_memo) == 1
+        np.testing.assert_array_equal(np.asarray(first), np.asarray(again))
+
+        def vf2(t, y, args):
+            traces.append(1)
+            return -2.0 * y * args
+
+        drv.solve(vf2, y0, t_start=0.0, t_end=1.0, args=args)
+        assert len(drv._solve_memo) == 2, \
+            "a different vector field is a different closure"
+
+    def test_backsolve_memo_excluded_from_pytree(self):
+        """The memo is a derived cache: an unflattened driver copy starts
+        empty (and stays independently usable)."""
+        from repro.core import BacksolveAdjoint, Stepper
+
+        drv = BacksolveAdjoint(Stepper("dopri5"), rtol=1e-6, atol=1e-8)
+        drv.solve(linear, Y0, t_start=0.0, t_end=1.0, args=A0)
+        assert len(drv._solve_memo) == 1
+        leaves, treedef = jax.tree_util.tree_flatten(drv)
+        copy = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert copy._solve_memo == {}
+        copy.solve(linear, Y0, t_start=0.0, t_end=1.0, args=A0)
+        assert len(copy._solve_memo) == 1
+
+    @pytest.mark.reverse_diff
+    def test_checkpoint_tail_gradient_parity(self):
+        """``max_steps % checkpoint_every != 0``: the remainder block must
+        integrate (and differentiate) exactly like the plain bounded scan --
+        the tail used to run outside ``jax.checkpoint``, and a dropped or
+        doubled tail would show up here as a value/gradient divergence."""
+        from repro.core import ScanAdjoint, Stepper
+
+        kw = dict(max_steps=50, rtol=1e-6, atol=1e-8)
+        plain = ScanAdjoint(Stepper("dopri5"), **kw)
+        ckpt = ScanAdjoint(Stepper("dopri5"), checkpoint_every=16, **kw)
+        assert 50 % 16 != 0  # the regression needs a non-divisible split
+
+        def loss(drv, A):
+            sol = drv.solve(linear, Y0, t_start=0.0, t_end=1.0, args=A)
+            return jnp.sum(sol.ys ** 2)
+
+        v_plain, g_plain = jax.jit(
+            jax.value_and_grad(lambda A: loss(plain, A)))(A0)
+        v_ckpt, g_ckpt = jax.jit(
+            jax.value_and_grad(lambda A: loss(ckpt, A)))(A0)
+        np.testing.assert_array_equal(np.asarray(v_plain), np.asarray(v_ckpt))
+        np.testing.assert_allclose(np.asarray(g_plain), np.asarray(g_ckpt),
+                                   rtol=1e-6, atol=1e-8)

@@ -113,12 +113,24 @@ class TestStaticConfig:
         b = run(AutoDiffAdjoint(Stepper("tsit5"), rtol=1e-7), y0)
         assert a.shape == b.shape == (4, 5, 2)
 
-    def test_backsolve_adjoint_rejected_clearly(self):
-        """BacksolveAdjoint's custom-VJP solve has a different signature; the
-        compiled front end must refuse it with a real message, not crash in
-        the stepper-coercion path."""
-        with pytest.raises(TypeError, match="BacksolveAdjoint"):
-            CompiledSolver(BacksolveAdjoint(Stepper("dopri5")))
+    def test_backsolve_adjoint_final_state_only(self):
+        """BacksolveAdjoint compiles since the gradient-serving PR (its
+        custom-VJP solve wraps into a synthesized final-state Solution), but
+        it tracks only the final state: eval grids / dt0 must be refused
+        with a real message, not crash in the stepper-coercion path."""
+        solver = CompiledSolver(BacksolveAdjoint(Stepper("dopri5"),
+                                                 rtol=1e-7, atol=1e-9),
+                                donate=False)
+        y0 = jnp.ones((2, 3))
+        with pytest.raises(TypeError, match="final state"):
+            solver.solve(decay, y0, jnp.linspace(0.0, 1.0, 4), args=1.0)
+        with pytest.raises(TypeError, match="final state"):
+            solver.solve(decay, y0, None, t_start=0.0, t_end=1.0, args=1.0,
+                         dt0=0.01)
+        sol = solver.solve(decay, y0, None, t_start=0.0, t_end=1.0, args=1.0)
+        np.testing.assert_allclose(np.asarray(sol.ys),
+                                   np.exp(-1.0) * np.ones((2, 3)), atol=1e-5)
+        assert np.all(np.asarray(sol.status) == Status.SUCCESS.value)
 
     def test_stepfunction_pytree_roundtrip(self):
         sf = StepFunction(decay, "dopri5", events=Event(lambda t, y, a: y[0] - 0.5))

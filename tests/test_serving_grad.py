@@ -1,0 +1,475 @@
+"""Gradient serving: training-time solves coalesce like forward solves.
+
+A ``grad=True`` request's result -- the solution view *and* the pulled-back
+gradients -- must be exactly what a solo VJP-compiled solve of that request
+would produce.  The reference regime is the request's own padded batch class
+(the solver's batch-invariance contract makes the coalesced batch bitwise
+against a solo program of the same class); across *different* batch classes
+``ys`` and the ``y0`` cotangent stay bitwise but args-gradients can move by
+an ulp (XLA fuses the args-VJP contractions batch-size-dependently), so the
+cross-class assertion is allclose.
+
+Plus the training-specific policies: forward and gradient requests never
+share a bucket, adjoint configuration splits buckets, prewarm covers the
+VJP programs, async/multi-device scheduling stays invisible, and the
+submit-time contract violations (dense grad requests, non-differentiable
+drivers, mis-shaped cotangents) are rejected before anything is queued.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoDiffAdjoint,
+    BacksolveAdjoint,
+    CompiledSolver,
+    GradRequest,
+    ODETerm,
+    ScanAdjoint,
+    SolveRequest,
+    SolveService,
+    Stepper,
+)
+
+
+def decay(t, y, args):
+    return -y * args
+
+
+def make_grad_requests(n, rng, feat=3, f=decay, method=None, cotangent=True):
+    """n mixed-value gradient requests of one shape class."""
+    reqs = []
+    for _ in range(n):
+        reqs.append(GradRequest(
+            f=f,
+            y0=jnp.asarray(rng.uniform(0.5, 1.5, (feat,)), jnp.float32),
+            t0=float(rng.uniform(0.0, 0.2)),
+            t1=float(rng.uniform(0.8, 1.2)),
+            args=jnp.asarray(rng.uniform(0.5, 2.0, (feat,)), jnp.float32),
+            rtol=float(rng.choice([1e-3, 1e-4, 1e-5])),
+            method=method,
+            cotangent=(jnp.asarray(rng.normal(size=(feat,)), jnp.float32)
+                       if cotangent else None),
+        ))
+    return reqs
+
+
+def solve_grad_direct(req, batch_class=1, method=None):
+    """The reference: this request alone through a VJP-compiled program of
+    the given batch class (the request's row replicated)."""
+    drv = method if method is not None else ScanAdjoint(Stepper("dopri5"))
+    solver = CompiledSolver(drv, donate=False)
+    b = batch_class
+    f = req.f
+    if (isinstance(drv, BacksolveAdjoint) and req.args is not None
+            and not isinstance(f, ODETerm)):
+        # What the service submits: per-request parameter rows marked for the
+        # per-instance backward solve.
+        f = ODETerm(f, batched=True, with_args=True, batched_args=True)
+
+    def rep(x):
+        x = jnp.asarray(x, jnp.float32)
+        return jnp.stack([x] * b)
+
+    def rep_tree(x):
+        return jax.tree_util.tree_map(rep, x)
+
+    ct = (req.cotangent if req.cotangent is not None
+          else jax.tree_util.tree_map(
+              lambda y: np.ones(np.shape(y), np.float32), req.y0))
+    return solver.solve(
+        f, rep_tree(req.y0), None,
+        t_start=rep(req.t0), t_end=rep(req.t1),
+        args=None if req.args is None else rep_tree(req.args),
+        rtol=rep(req.rtol if req.rtol is not None else drv.rtol),
+        atol=rep(req.atol if req.atol is not None else drv.atol),
+        cotangent=rep_tree(ct))
+
+
+def assert_grad_result(fut, req, batch_class, method=None, exact=True):
+    """``exact=True``: the reference batch class matches the served bucket's,
+    so values and gradients are bitwise.  ``exact=False``: cross-class
+    reference -- ``ys`` stays bitwise (forward batch invariance) but the
+    backward pass fuses batch-size-dependently, so gradients agree to
+    rounding only."""
+    view, grads = fut.result()
+    ref = solve_grad_direct(req, batch_class=batch_class, method=method)
+    assert_leaf = (np.testing.assert_array_equal if exact else
+                   lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4,
+                                                           atol=1e-7))
+    np.testing.assert_array_equal(np.asarray(view.ys)[0], np.asarray(ref.ys)[0])
+    assert_leaf(np.asarray(grads.y0), np.asarray(ref.grads.y0)[0])
+    if req.args is None:
+        assert grads.args is None
+    else:
+        assert_leaf(np.asarray(grads.args), np.asarray(ref.grads.args)[0])
+
+
+class TestServedGradsBitwise:
+    def test_single_request_matches_solo_scan_adjoint(self):
+        """The acceptance bar: one served gradient request is bit-for-bit the
+        solo ScanAdjoint VJP solve, and the service counts it."""
+        rng = np.random.default_rng(0)
+        svc = SolveService(max_batch=8, max_delay=None, default_method="dopri5")
+        req = make_grad_requests(1, rng)[0]
+        fut = svc.submit(req)
+        svc.flush()
+        assert_grad_result(fut, req, batch_class=1)
+        st = svc.stats()
+        assert st["n_grad_solves"] == 1
+        assert st["grad_device_s"] > 0.0
+
+    def test_coalesced_bucket_matches_same_class_solo(self):
+        """5 mixed gradient requests pad to a bucket of 8; every per-request
+        result -- values and both gradients -- is bitwise the solo program of
+        the same batch class, and agrees with the b=1 solo solve to rounding
+        (args-VJP fusion is batch-size dependent)."""
+        rng = np.random.default_rng(1)
+        svc = SolveService(max_batch=8, max_delay=None, default_method="dopri5")
+        reqs = make_grad_requests(5, rng)
+        futures = [svc.submit(r) for r in reqs]
+        svc.flush()
+        assert svc.stats()["n_pad_rows"] == 3
+        for req, fut in zip(reqs, futures):
+            assert_grad_result(fut, req, batch_class=8)
+            assert_grad_result(fut, req, batch_class=1, exact=False)
+        assert svc.stats()["n_grad_solves"] == 5
+
+    def test_forward_and_grad_requests_never_share_a_bucket(self):
+        """A mixed stream of one shape class splits into exactly two buckets:
+        the forward rows keep their while_loop program, the gradient rows get
+        the VJP program, and both sides stay bitwise against their solos."""
+        rng = np.random.default_rng(2)
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        greqs = make_grad_requests(3, rng)
+        freqs = [SolveRequest(f=decay, y0=g.y0, t0=g.t0, t1=g.t1,
+                              args=g.args, rtol=g.rtol) for g in greqs]
+        gfuts = [svc.submit(r) for r in greqs]
+        ffuts = [svc.submit(r) for r in freqs]
+        assert svc.stats()["n_buckets"] == 2
+        svc.flush()
+        fwd_solver = CompiledSolver(AutoDiffAdjoint(Stepper("dopri5")),
+                                    donate=False)
+        for req, gfut, ffut in zip(greqs, gfuts, ffuts):
+            assert_grad_result(gfut, req, batch_class=4)
+            sol = ffut.result()
+            assert sol.grads is None
+            ref = fwd_solver.solve(
+                decay, req.y0[None], None,
+                t_start=jnp.asarray([req.t0], jnp.float32),
+                t_end=jnp.asarray([req.t1], jnp.float32),
+                args=req.args[None],
+                rtol=jnp.asarray([req.rtol], jnp.float32),
+                atol=jnp.asarray([1e-6], jnp.float32))
+            np.testing.assert_array_equal(np.asarray(sol.ys),
+                                          np.asarray(ref.ys))
+        st = svc.stats()
+        assert st["n_grad_solves"] == 3
+        assert st["n_completed"] == 6
+
+    def test_default_cotangent_sums_state_gradient(self):
+        """No explicit cotangent: the service pulls back ones -- the gradient
+        of ``sum(y1)`` -- and matches the solo solve with an explicit ones
+        cotangent bitwise."""
+        rng = np.random.default_rng(3)
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        req = make_grad_requests(1, rng, cotangent=False)[0]
+        assert req.cotangent is None
+        fut = svc.submit(req)
+        svc.flush()
+        assert_grad_result(fut, req, batch_class=1)
+
+    def test_grad_flag_implied_by_cotangent(self):
+        rng = np.random.default_rng(4)
+        g = make_grad_requests(1, rng)[0]
+        req = SolveRequest(f=decay, y0=g.y0, t0=g.t0, t1=g.t1, args=g.args,
+                           rtol=g.rtol, cotangent=g.cotangent)
+        assert not req.grad
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        fut = svc.submit(req)
+        svc.flush()
+        view, grads = fut.result()
+        assert grads.y0.shape == g.y0.shape
+        assert svc.stats()["n_grad_solves"] == 1
+
+    def test_no_args_request_has_no_args_gradient(self):
+        def free_decay(t, y, args):
+            return -y
+
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        req = GradRequest(f=free_decay, y0=jnp.ones((3,), jnp.float32),
+                          t0=0.0, t1=1.0)
+        fut = svc.submit(req)
+        svc.flush()
+        view, grads = fut.result()
+        assert grads.args is None
+        assert_grad_result(fut, req, batch_class=1)
+
+
+class TestAdjointConfigurationBuckets:
+    def test_backsolve_adjoint_served_bitwise(self):
+        """An explicit ``BacksolveAdjoint`` method rides the same buckets:
+        coalesced O(1)-memory adjoint solves, bitwise against the solo
+        VJP-compiled backsolve of the same batch class.  Serving requires
+        ``mode='per_instance'`` -- the row-independent backward solve."""
+        rng = np.random.default_rng(5)
+        drv = BacksolveAdjoint(Stepper("dopri5"), mode="per_instance",
+                               rtol=1e-6, atol=1e-8)
+        svc = SolveService(max_batch=4, max_delay=None)
+        reqs = make_grad_requests(3, rng, method=drv)
+        futures = [svc.submit(r) for r in reqs]
+        svc.flush()
+        for req, fut in zip(reqs, futures):
+            assert_grad_result(fut, req, batch_class=4, method=drv)
+        assert svc.stats()["n_grad_solves"] == 3
+
+    def test_adjoint_identity_splits_buckets(self):
+        """Same shape class, different adjoint programs: ScanAdjoint vs
+        checkpointed ScanAdjoint vs BacksolveAdjoint modes -- each is its own
+        bucket because the driver's static config is in the bucket key."""
+        rng = np.random.default_rng(6)
+        svc = SolveService(max_batch=8, max_delay=None)
+        methods = [
+            ScanAdjoint(Stepper("dopri5")),
+            ScanAdjoint(Stepper("dopri5"), checkpoint_every=16),
+            BacksolveAdjoint(Stepper("dopri5"), mode="per_instance"),
+            BacksolveAdjoint(Stepper("dopri5"), mode="per_instance",
+                             max_steps=5_000),
+        ]
+        futures = []
+        for m in methods:
+            req = make_grad_requests(1, rng, method=m)[0]
+            futures.append((svc.submit(req), req, m))
+        assert svc.stats()["n_buckets"] == len(methods)
+        svc.flush()
+        for fut, req, m in futures:
+            assert_grad_result(fut, req, batch_class=1, method=m)
+
+    def test_default_grad_method_is_service_wide(self):
+        rng = np.random.default_rng(7)
+        drv = BacksolveAdjoint(Stepper("dopri5"), mode="per_instance",
+                               rtol=1e-6, atol=1e-8)
+        svc = SolveService(max_batch=4, max_delay=None,
+                           default_grad_method=drv, default_method="dopri5")
+        req = make_grad_requests(1, rng)[0]
+        fwd = SolveRequest(f=decay, y0=req.y0, t0=req.t0, t1=req.t1,
+                           args=req.args)
+        gfut, ffut = svc.submit(req), svc.submit(fwd)
+        svc.flush()
+        assert_grad_result(gfut, req, batch_class=1, method=drv)
+        assert ffut.result().grads is None
+
+
+class TestBatchedArgsRows:
+    def test_per_request_parameter_rows(self):
+        """Per-instance dynamics with per-request parameter rows: an
+        ``ODETerm(batched=False, batched_args=True)`` request stream shares
+        one bucket and every request gets the gradient of *its own* row."""
+        def single(t, y, a):
+            return -a["rate"] * y + a["drive"] * jnp.sin(t)
+
+        term = ODETerm(single, batched=False, batched_args=True)
+        rng = np.random.default_rng(8)
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        reqs = []
+        for _ in range(3):
+            reqs.append(GradRequest(
+                f=term,
+                y0=jnp.asarray(rng.uniform(0.5, 1.5, (3,)), jnp.float32),
+                t0=0.0, t1=1.0,
+                args={"rate": jnp.asarray(rng.uniform(0.5, 2.0, (3,)),
+                                          jnp.float32),
+                      "drive": jnp.asarray(rng.uniform(-1.0, 1.0), jnp.float32)},
+                cotangent=jnp.asarray(rng.normal(size=(3,)), jnp.float32)))
+        futures = [svc.submit(r) for r in reqs]
+        assert svc.stats()["n_buckets"] == 1
+        svc.flush()
+        for req, fut in zip(reqs, futures):
+            view, grads = fut.result()
+            ref = solve_grad_direct(req, batch_class=4)
+            np.testing.assert_array_equal(np.asarray(view.ys)[0],
+                                          np.asarray(ref.ys)[0])
+            np.testing.assert_array_equal(np.asarray(grads.y0),
+                                          np.asarray(ref.grads.y0)[0])
+            for k in ("rate", "drive"):
+                np.testing.assert_array_equal(
+                    np.asarray(grads.args[k]), np.asarray(ref.grads.args[k])[0])
+
+    def test_backsolve_per_instance_parameter_rows(self):
+        """The per-instance backsolve with batched_args: each instance's
+        augmented state carries its own row-sized parameter adjoint, so the
+        served row gradients agree with the b=1 solo backsolve to solver
+        accuracy."""
+        def single(t, y, rate):
+            return -rate * y
+
+        term = ODETerm(single, batched=False, batched_args=True)
+        drv = BacksolveAdjoint(Stepper("dopri5"), mode="per_instance",
+                               rtol=1e-8, atol=1e-10)
+        rng = np.random.default_rng(9)
+        svc = SolveService(max_batch=4, max_delay=None)
+        reqs = []
+        for _ in range(3):
+            reqs.append(GradRequest(
+                f=term,
+                y0=jnp.asarray(rng.uniform(0.5, 1.5, (3,)), jnp.float32),
+                t0=0.0, t1=1.0, method=drv, rtol=1e-6, atol=1e-8,
+                args=jnp.asarray(rng.uniform(0.5, 2.0, (3,)), jnp.float32)))
+        futures = [svc.submit(r) for r in reqs]
+        svc.flush()
+        for req, fut in zip(reqs, futures):
+            view, grads = fut.result()
+            # analytic: y1 = y0*exp(-r), dL/dr for L=sum(y1) is -y0*exp(-r)
+            y0 = np.asarray(req.y0)
+            r = np.asarray(req.args)
+            np.testing.assert_allclose(np.asarray(grads.args),
+                                       -y0 * np.exp(-r), rtol=1e-3)
+            np.testing.assert_allclose(np.asarray(grads.y0),
+                                       np.exp(-r), rtol=1e-3)
+
+
+class TestAsyncAndMultiDevice:
+    def test_out_of_order_harvest_bitwise(self):
+        """A randomized (seeded) interleaving of submit/poll/drain/result over
+        mixed forward+grad traffic resolves every future with the synchronous
+        service's values."""
+        def run(max_inflight):
+            rng = np.random.default_rng(10)
+            ops = np.random.default_rng(11)
+            svc = SolveService(max_batch=4, max_delay=None,
+                               max_inflight=max_inflight,
+                               default_method="dopri5")
+            futures = []
+            for i in range(16):
+                feat = (2, 3, 5)[i % 3]
+                if i % 2:
+                    futures.append(svc.submit(
+                        make_grad_requests(1, rng, feat=feat)[0]))
+                else:
+                    futures.append(svc.submit(SolveRequest(
+                        f=decay,
+                        y0=jnp.asarray(rng.uniform(0.5, 1.5, (feat,)),
+                                       jnp.float32),
+                        t0=0.0, t1=1.0,
+                        args=jnp.asarray(rng.uniform(0.5, 2.0, (feat,)),
+                                         jnp.float32))))
+                op = ops.integers(0, 4)
+                if op == 0:
+                    svc.poll()
+                elif op == 1:
+                    svc.drain(1)
+                elif op == 2:
+                    futures[int(ops.integers(0, len(futures)))].result()
+            svc.flush()
+            return [f.result() for f in futures]
+
+        ref = run(max_inflight=0)
+        got = run(max_inflight=2)
+        for g, r in zip(got, ref):
+            if isinstance(g, tuple):
+                (gv, gg), (rv, rg) = g, r
+                np.testing.assert_array_equal(np.asarray(gv.ys),
+                                              np.asarray(rv.ys))
+                for gl, rl in zip(jax.tree_util.tree_leaves(gg),
+                                  jax.tree_util.tree_leaves(rg)):
+                    np.testing.assert_array_equal(np.asarray(gl),
+                                                  np.asarray(rl))
+            else:
+                np.testing.assert_array_equal(np.asarray(g.ys),
+                                              np.asarray(r.ys))
+
+    def test_multi_device_round_robin_grad_bitwise(self):
+        """Gradient buckets round-robin the mesh like forward buckets (one
+        device in the tier-1 suite, four in the CI smoke leg) and placement
+        is invisible: the full-mesh stream equals the pinned-device stream
+        bitwise."""
+        devs = jax.devices()
+
+        def run(devices, max_inflight):
+            rng = np.random.default_rng(12)
+            svc = SolveService(max_batch=2, max_delay=None,
+                               max_inflight=max_inflight, devices=devices,
+                               default_method="dopri5")
+            futures = [svc.submit(r)
+                       for r in make_grad_requests(4 * len(devs), rng)]
+            svc.flush()
+            return svc, [f.result() for f in futures]
+
+        _, ref = run([devs[0]], max_inflight=0)
+        svc, got = run(None, max_inflight=len(devs) + 1)
+        for (gv, gg), (rv, rg) in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(gv.ys), np.asarray(rv.ys))
+            np.testing.assert_array_equal(np.asarray(gg.y0), np.asarray(rg.y0))
+            np.testing.assert_array_equal(np.asarray(gg.args),
+                                          np.asarray(rg.args))
+        st = svc.stats()
+        assert st["n_grad_solves"] == 4 * len(devs)
+        if len(devs) >= 2:
+            assert st["n_devices"] == len(devs)
+
+    def test_prewarm_compiles_grad_programs(self):
+        """Prewarming a gradient example AOT-compiles the VJP program for
+        every batch class on every device; gradient traffic then never
+        traces."""
+        devs = jax.devices()
+        rng = np.random.default_rng(13)
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        example = make_grad_requests(1, rng)[0]
+        assert svc.prewarm(example) == 3 * len(devs)  # classes 1, 2, 4
+        assert svc.prewarm(example) == 0
+        base = svc.stats()["cache_misses"]
+        for n in (1, 2, 3):
+            futures = [svc.submit(r) for r in make_grad_requests(n, rng)]
+            svc.flush()
+            [f.result() for f in futures]
+        st = svc.stats()
+        assert st["cache_misses"] == base, \
+            "prewarmed gradient traffic must never compile"
+        assert st["cache_hits"] == 3
+
+
+class TestGradValidation:
+    def test_dense_grad_request_rejected(self):
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        with pytest.raises(ValueError, match="final state"):
+            svc.submit(GradRequest(f=decay, y0=jnp.ones((3,), jnp.float32),
+                                   t0=0.0, t1=1.0,
+                                   t_eval=np.linspace(0.1, 0.9, 4,
+                                                      dtype=np.float32)))
+
+    def test_non_differentiable_driver_rejected(self):
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        with pytest.raises(TypeError, match="reverse-differentiable"):
+            svc.submit(GradRequest(f=decay, y0=jnp.ones((3,), jnp.float32),
+                                   t0=0.0, t1=1.0,
+                                   method=AutoDiffAdjoint(Stepper("dopri5"))))
+
+    def test_joint_mode_backsolve_rejected(self):
+        """Joint-mode backsolve stacks the batch into one adjoint instance
+        with a batch-shared time range -- a bucket of independent requests
+        cannot guarantee that, so submit rejects it up front."""
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        with pytest.raises(TypeError, match="per_instance"):
+            svc.submit(GradRequest(f=decay, y0=jnp.ones((3,), jnp.float32),
+                                   t0=0.0, t1=1.0,
+                                   method=BacksolveAdjoint(Stepper("dopri5"),
+                                                           mode="joint")))
+
+    def test_mis_shaped_cotangent_rejected(self):
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        with pytest.raises(ValueError, match="cotangent leaf shape"):
+            svc.submit(GradRequest(f=decay, y0=jnp.ones((3,), jnp.float32),
+                                   t0=0.0, t1=1.0,
+                                   cotangent=jnp.ones((4,), jnp.float32)))
+
+    def test_mis_structured_cotangent_rejected(self):
+        def f(t, y, args):
+            return {"a": -y["a"]}
+
+        svc = SolveService(max_batch=4, max_delay=None, default_method="dopri5")
+        with pytest.raises(ValueError, match="structure"):
+            svc.submit(GradRequest(f=f, y0={"a": jnp.ones((2,), jnp.float32)},
+                                   t0=0.0, t1=1.0,
+                                   cotangent=jnp.ones((2,), jnp.float32)))
