@@ -26,7 +26,11 @@ def vdp(t, y, mu):
     return jnp.stack((xd, mu * (1 - x**2) * xd - x), axis=-1)
 
 
-def timed(fn, *args, repeats=3, warmup=1):
+def timed(fn, *args, repeats=3, warmup=1, reduce="mean"):
+    """Times ``fn(*args)`` over ``repeats`` runs.  ``reduce="min"`` reports the
+    fastest run instead of the mean -- the robust choice for RATIO metrics
+    (fused/unfused speedups), where one descheduled run in either numerator
+    or denominator skews a mean-of-3 by tens of percent."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -34,7 +38,8 @@ def timed(fn, *args, repeats=3, warmup=1):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.mean(ts)), float(np.std(ts))
+    agg = np.min if reduce == "min" else np.mean
+    return float(agg(ts)), float(np.std(ts))
 
 
 def calibration_us(repeats: int = 5) -> float:

@@ -18,10 +18,18 @@ Two backends, same numerics:
              these rows is the launch-count proxy the tentpole targets
              (acceptance bar: >= 2x steps/sec on at least one point).
 
-Problem: exponential decay ``dy/dt = -y`` via ``polynomial_term``, dopri5 +
-PID controller, final-state regime (dense output off), jitted end to end.
+Problem: exponential decay ``dy/dt = -y`` via ``polynomial_term``, final-state
+regime (dense output off), jitted end to end.  The default rows run dopri5 +
+PID; dedicated rows cover the non-FSAL trailing-evaluation path (heun), the
+fixed-step controller mode (rk4 + FixedController) and the feature-tiled
+kernel schedule (f = 256 > the 128-lane tile on the interpret backend).
 
-Usage: python -m benchmarks.step_bench [--json [PATH]]
+Timing is min-of-N (see ``common.timed``): the headline metric is a RATIO of
+two wall times, and a single descheduled run in either leg skews a mean-of-3
+by tens of percent -- exactly the noise that once recorded a spurious 0.81x
+at (256, 256).
+
+Usage: python -m benchmarks.step_bench [--json [PATH]] [--bars]
 """
 
 from __future__ import annotations
@@ -33,39 +41,59 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AutoDiffAdjoint, Stepper, pid_controller, polynomial_term
+from repro.core import (
+    AutoDiffAdjoint,
+    FixedController,
+    Stepper,
+    pid_controller,
+    polynomial_term,
+)
 from repro.kernels import ops
 
 from .common import timed
 
-# (backend, batch, features): the ref rows sweep the paper's small-problem
-# grid; the interpret rows stay small because interpret mode is slow by
-# design (it is the launch-overhead proxy, not a production path).
+# (backend, batch, features, method, controller-kind, speedup bar): the ref
+# rows sweep the paper's small-problem grid; the interpret rows stay modest
+# because interpret mode is slow by design (it is the launch-overhead proxy,
+# not a production path).  The bar is the fused/unfused steps/sec floor
+# enforced by --bars when refreshing the committed baseline: >= 2x where
+# dispatch dominates (small f, interpret), >= 1.0x ("never lose") at the
+# headline (256, 256) point on the XLA-fused ref backend.  The remaining ref
+# rows are parity sanity rows -- XLA:CPU fuses across op boundaries anyway,
+# so their true ratio is ~1.0 and the 0.9 bar only catches a genuine cliff,
+# not the +/-3% container-noise band the ratio lives in.
 POINTS = (
-    ("ref", 16, 16),
-    ("ref", 64, 64),
-    ("ref", 256, 256),
-    ("interpret", 16, 16),
+    ("ref", 16, 16, "dopri5", "pid", 0.9),
+    ("ref", 64, 64, "dopri5", "pid", 0.9),
+    ("ref", 256, 256, "dopri5", "pid", 1.0),
+    ("ref", 64, 64, "heun", "pid", 0.9),
+    ("ref", 64, 64, "rk4", "fixed", 0.9),
+    ("interpret", 16, 16, "dopri5", "pid", 2.0),
+    ("interpret", 256, 256, "dopri5", "pid", 1.5),
 )
 
 
-def _make_solve(fused: bool):
+def _make_solve(fused: bool, method: str, ctrl: str):
+    controller = pid_controller() if ctrl == "pid" else FixedController()
     solver = AutoDiffAdjoint(
-        Stepper("dopri5"), pid_controller(),
+        Stepper(method), controller,
         rtol=1e-4, atol=1e-6, dense=False, fused=fused,
     )
     term = polynomial_term(0.0, -1.0)
+    # FixedController keeps dt0 forever; 0.01 gives a 200-step loop, the same
+    # order of work as the adaptive rows.
+    dt0 = 0.01 if ctrl == "fixed" else None
 
     @jax.jit
     def run(y0):
-        return solver.solve(term, y0, t_start=0.0, t_end=2.0)
+        return solver.solve(term, y0, t_start=0.0, t_end=2.0, dt0=dt0)
 
     return run
 
 
-def _bench_point(backend: str, b: int, f: int, fused: bool, repeats: int):
+def _bench_point(backend, b, f, method, ctrl, fused, repeats):
     ops.set_backend(backend)
-    run = _make_solve(fused)
+    run = _make_solve(fused, method, ctrl)
     y0 = jnp.asarray(
         np.linspace(0.5, 1.5, b * f, dtype=np.float32).reshape(b, f)
     )
@@ -75,26 +103,36 @@ def _bench_point(backend: str, b: int, f: int, fused: bool, repeats: int):
     n_loop = int(np.max(np.asarray(sol.stats["n_steps"])))
     if fused:
         assert "n_fused_steps" in sol.stats, "fused path did not engage"
-    mean_s, _ = timed(run, y0, repeats=repeats)
-    step_us = mean_s / n_loop * 1e6
-    return step_us, n_loop / mean_s, n_loop
+    best_s, _ = timed(run, y0, repeats=repeats, reduce="min")
+    step_us = best_s / n_loop * 1e6
+    return step_us, n_loop / best_s, n_loop
+
+
+def _tag(backend, b, f, method, ctrl):
+    tag = f"{backend}_b{b}_f{f}"
+    if method != "dopri5":
+        tag += f"_{method}"
+    if ctrl != "pid":
+        tag += f"_{ctrl}"
+    return tag
 
 
 def rows(repeats: int = 3):
     prev = ops.backend()
     try:
-        for backend, b, f in POINTS:
-            tag = f"{backend}_b{b}_f{f}"
+        for backend, b, f, method, ctrl, bar in POINTS:
+            tag = _tag(backend, b, f, method, ctrl)
             per_sec = {}
             for fused in (False, True):
                 label = "fused" if fused else "unfused"
-                step_us, sps, n_loop = _bench_point(backend, b, f, fused, repeats)
+                step_us, sps, n_loop = _bench_point(
+                    backend, b, f, method, ctrl, fused, repeats)
                 per_sec[label] = sps
                 yield f"{tag}_{label}_step_time", step_us, f"{n_loop} loop steps"
                 yield f"{tag}_{label}_steps_per_sec", sps, ""
             yield (
                 f"{tag}_fused_speedup", per_sec["fused"] / per_sec["unfused"],
-                "steps/sec ratio, fused over unfused",
+                f"steps/sec ratio, fused over unfused (bar {bar}x)",
             )
     finally:
         ops.set_backend(prev)
@@ -105,13 +143,20 @@ def main() -> None:
     parser.add_argument("--json", nargs="?", const="BENCH_step.json", default=None,
                         metavar="PATH")
     parser.add_argument("--repeats", type=int, default=3)
+    parser.add_argument("--bars", action="store_true",
+                        help="fail if any _fused_speedup row misses its floor "
+                             "(use when refreshing the committed baseline)")
     opts = parser.parse_args()
 
+    bars = {f"{_tag(*p[:5])}_fused_speedup": p[5] for p in POINTS}
     records = []
+    missed = []
     print("name,value,derived")
     for name, v, extra in rows(repeats=opts.repeats):
         print(f"step/{name},{v},{extra}", flush=True)
         records.append({"suite": "step", "name": name, "value": v, "derived": extra})
+        if opts.bars and name in bars and v < bars[name]:
+            missed.append(f"{name}: {v:.3f}x < bar {bars[name]}x")
 
     if opts.json:
         from .common import calibration_us
@@ -121,6 +166,9 @@ def main() -> None:
         with open(opts.json, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {len(records)} rows to {opts.json}")
+
+    if missed:
+        raise SystemExit("speedup below bar:\n  " + "\n  ".join(missed))
 
 
 if __name__ == "__main__":

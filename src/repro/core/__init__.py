@@ -24,7 +24,7 @@ from .loop import make_solver, solve_ivp, solve_ivp_scan
 from .newton import NewtonConfig, NewtonResult, newton_solve
 from .serving import GradRequest, SolveFuture, SolveRequest, SolveService, next_pow2
 from .solution import Grads, Solution, Status
-from .step import LoopState, StepContext, StepFunction
+from .step import FusedFallbackReason, LoopState, StepContext, StepFunction
 from .stepper import (
     AbstractStepper,
     DiagonallyImplicitRK,
@@ -81,6 +81,7 @@ __all__ = [
     "LoopState",
     "StepContext",
     "StepFunction",
+    "FusedFallbackReason",
     "Stepper",
     "StepResult",
     "initial_step_size",

@@ -136,6 +136,14 @@ class FixedController(_ControllerStats):
         one = jnp.ones((batch,), dtype=dtype)
         return ControllerState(one, one)
 
+    def filter_params(self, k: int) -> tuple[float, ...]:
+        """The fixed-mode kernel contract: there are no filter coefficients.
+        The fused megakernel runs with ``ctrl_mode="fixed"`` instead --
+        accept everything that is running, keep the standing dt proposal and
+        pass the controller history through untouched, exactly what
+        ``__call__`` + the loop's masked commit compute unfused."""
+        return ()
+
     def __call__(self, err_ratio, dt, state, k):
         accept = jnp.ones(dt.shape, dtype=bool)
         return accept, dt, state

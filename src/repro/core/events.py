@@ -122,19 +122,6 @@ def init_event_state(
     )
 
 
-def _crossed(v0: jax.Array, v1: jax.Array, direction: float) -> jax.Array:
-    """scipy's sign-change test between consecutive condition values."""
-    up = (v0 <= 0.0) & (v1 >= 0.0)
-    down = (v0 >= 0.0) & (v1 <= 0.0)
-    if direction > 0:
-        c = up
-    elif direction < 0:
-        c = down
-    else:
-        c = up | down
-    return c & ((v0 != 0.0) | (v1 != 0.0))
-
-
 def _localize(
     event: Event,
     coeffs,
@@ -203,13 +190,13 @@ def advance(
     either AD mode) as approximate; apply the IFT correction outside the
     solver when exact sensitivities are needed.
     """
-    b = y_new.shape[0]
+    # Condition evaluation is user code and cannot fuse; the sign tests and
+    # the value carry are ONE registry op (in-kernel on the Pallas backends).
     v_new = jnp.stack([e.value(t_new, y_new, args) for e in events], axis=1)
-    crossed = jnp.stack(
-        [_crossed(estate.value[:, i], v_new[:, i], e.direction) for i, e in enumerate(events)],
-        axis=1,
-    )
-    newly = crossed & ~estate.fired & accept[:, None]  # (b, E)
+    newly, v_keep = ops.fused_event_detect(
+        estate.value, v_new, estate.fired, accept,
+        directions=tuple(e.direction for e in events),
+    )  # (b, E) each
 
     # Each event's bisection runs under its OWN cond: a step where only one
     # of E events fires pays one localizer, not E.
@@ -226,34 +213,19 @@ def advance(
         ys.append(y_i)
     x, y_ev = jnp.stack(xs, axis=1), jnp.stack(ys, axis=1)  # (b, E), (b, E, f)
 
-    # Terminal resolution: the instance stops at its EARLIEST terminal
+    # Terminal resolution (the instance stops at its EARLIEST terminal
     # crossing; crossings localized after that point happened beyond the end
-    # of this instance's trajectory and are discarded (not recorded, so a
-    # re-solve from the event time can still observe them).
-    inf = jnp.asarray(jnp.inf, t0.dtype)
-    x_stop = jnp.full((b,), inf, dtype=t0.dtype)
-    y_stop = y_new
-    stop = jnp.zeros((b,), dtype=bool)
-    for i, e in enumerate(events):
-        if not e.terminal:
-            continue
-        stop = stop | newly[:, i]
-        earlier = newly[:, i] & (x[:, i] < x_stop)
-        y_stop = jnp.where(earlier[:, None], y_ev[:, i], y_stop)
-        x_stop = jnp.where(earlier, x[:, i], x_stop)
-    rec = newly & (x <= x_stop[:, None])
-
-    t_ev = t0[:, None] + x * dt[:, None]
-    estate_new = EventState(
-        value=jnp.where(accept[:, None], v_new, estate.value),
-        fired=estate.fired | rec,
-        t=jnp.where(rec, t_ev, estate.t),
-        y=jnp.where(rec[:, :, None], y_ev, estate.y),
+    # of this instance's trajectory and are discarded -- not recorded, so a
+    # re-solve from the event time can still observe them), bookkeeping
+    # update and stop outputs: ONE registry op over the localizer's outputs.
+    fired, ev_t, ev_y, stop, t_stop, y_stop, n_new = ops.fused_event_commit(
+        x, y_ev, newly, y_new, t0, dt, estate.fired, estate.t, estate.y,
+        terminal=tuple(e.terminal for e in events),
     )
     return EventAdvance(
-        estate=estate_new,
+        estate=EventState(value=v_keep, fired=fired, t=ev_t, y=ev_y),
         stop=stop,
-        t_stop=t0 + jnp.where(stop, x_stop, 0.0) * dt,
+        t_stop=t_stop,
         y_stop=y_stop,
-        n_new=rec.sum(axis=1).astype(jnp.int32),
+        n_new=n_new,
     )

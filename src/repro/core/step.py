@@ -40,6 +40,7 @@ per-instance stats, generalized).
 
 from __future__ import annotations
 
+import enum
 from typing import Any, NamedTuple
 
 import jax
@@ -57,8 +58,29 @@ from .events import init_event_state, normalize_events
 from .controller import PIDController
 from .solution import Solution, Status
 from .static import freeze, frozen_setattr, register_config_pytree
-from .stepper import AbstractStepper, ExplicitRK
+from .stepper import AbstractStepper, ExplicitRK, _tableau_arrays
 from .terms import ODETerm, as_term
+
+
+class FusedFallbackReason(enum.IntEnum):
+    """Machine-readable reason the ``fused=True`` fast path disengaged.
+
+    Recorded per instance in ``Solution.stats["fused_fallback_reason"]``
+    whenever ``fused=True`` was *requested* (ENGAGED means it actually ran),
+    so callers can monitor silently-degraded configurations instead of
+    diffing launch counts.  The codes are static config properties -- every
+    instance in a batch carries the same value.
+    """
+
+    ENGAGED = 0
+    # The stepper is not (exactly) ExplicitRK: implicit methods need the
+    # masked-Newton inner loop, and stepper subclasses may override the stage
+    # recursion the kernel bakes in.
+    NOT_EXPLICIT_RK = 1
+    # The controller is not (exactly) PIDController or FixedController:
+    # the kernel bakes in those two accept/next-dt programs only, and
+    # subclasses may override ``__call__``.
+    UNSUPPORTED_CONTROLLER = 2
 
 
 class LoopState(NamedTuple):
@@ -154,19 +176,28 @@ class StepFunction:
         self.event_bisect_iters = event_bisect_iters
         self.extra_stats = tuple(extra_stats)
         self.fused = bool(fused)
-        # The fused megakernel fast path engages only where its contract
-        # holds: an adaptive FSAL explicit tableau (the last stage IS f1, so
-        # no post-kernel vf call is needed) driven by a PID-family controller
-        # (whose accept/next-dt program the kernel bakes in).  Everything
-        # else falls back to the unfused path transparently -- same results,
-        # one launch per op instead of one per step.
-        self._fused_path = (
-            self.fused
-            and type(stepper) is ExplicitRK
-            and stepper.is_adaptive
-            and stepper.tableau.fsal
-            and isinstance(self.controller, PIDController)
-        )
+        # The fused megakernel fast path engages for EVERY explicit-RK
+        # configuration the kernel's two baked-in controller programs cover:
+        # any explicit tableau (FSAL or not, adaptive or fixed -- non-FSAL
+        # trailing evaluations fold in) driven by exactly PIDController
+        # (``ctrl_mode="pid"``) or exactly FixedController
+        # (``ctrl_mode="fixed"``).  Exact-type checks, not isinstance:
+        # subclasses may override ``__call__``/``step`` with programs the
+        # kernel does not bake in.  Everything else falls back to the unfused
+        # path transparently -- same results, one launch per op instead of
+        # one per step -- and records why in ``fused_fallback_reason``.
+        mode, why = None, FusedFallbackReason.ENGAGED
+        if type(stepper) is not ExplicitRK:
+            why = FusedFallbackReason.NOT_EXPLICIT_RK
+        elif type(self.controller) is PIDController:
+            mode = "pid"
+        elif type(self.controller) is FixedController:
+            mode = "fixed"
+        else:
+            why = FusedFallbackReason.UNSUPPORTED_CONTROLLER
+        self._fused_mode = mode if self.fused else None
+        self._fused_fallback = int(why)
+        self._fused_path = self._fused_mode is not None
         self._rebuild_derived()
         freeze(self)
 
@@ -193,6 +224,13 @@ class StepFunction:
         out = {"n_steps": zeros, "n_initialized": zeros}
         if self.events:
             out["n_events"] = zeros
+        if self.fused:
+            # Why (or that) the requested fast path (dis)engaged -- a static
+            # config property, broadcast so it lands in the per-instance
+            # stats surface the serving stack already exports.
+            out["fused_fallback_reason"] = jnp.full(
+                (batch,), self._fused_fallback, dtype=jnp.int32
+            )
         if self._fused_path:
             # Counts steps taken through the megakernel; equals n_steps while
             # the fast path is engaged (the observable proof it actually ran).
@@ -496,8 +534,13 @@ class StepFunction:
         Mirrors ``step`` expression-for-expression (the ref-backend op is
         composed of the same primitives in the same order, so fused and
         unfused solves are bitwise-identical there); only engaged when
-        ``_fused_path`` holds (adaptive FSAL ``ExplicitRK`` + PID-family
-        controller), so there is no solver-failure path to handle here.
+        ``_fused_path`` holds (``ExplicitRK`` -- any explicit tableau, FSAL
+        or not, adaptive or fixed -- driven by ``PIDController`` or
+        ``FixedController``), so there is no solver-failure path to handle
+        here.  Non-FSAL tableaus fold their trailing evaluation in: the
+        polynomial megakernel runs it as one more in-kernel Horner pass,
+        general terms evaluate ``vf`` once between the stage sweep and the
+        kernel (exactly like ``rk_step``, on every attempt).
         """
         term, stepper, controller = self.term, self.stepper, self.controller
         t_eval, t_start, t_end, direction = consts
@@ -516,7 +559,11 @@ class StepFunction:
         dense_now = self.dense and t_eval is not None
         want_coeffs = bool(dense_now or self.events)
         tab = stepper.tableau
+        mode = self._fused_mode
         ctrl = controller.filter_params(stepper.error_order)
+        # Fixed-step tableaus have no embedded estimate: zero error weights
+        # (the in-kernel norm is then 0, exactly like the unfused path).
+        _, _, b_sol_w, b_err_w = _tableau_arrays(tab, state.y.dtype)
         common = (
             state.t, t_new, state.dt, safe_dt, state.running,
             state.cstate.prev_inv_ratio, state.cstate.prev2_inv_ratio,
@@ -526,20 +573,31 @@ class StepFunction:
         if poly:
             out = ops.fused_step_poly(
                 state.y, state.f0, *common,
-                a=tab.a, c=tab.c, b_sol=tab.b_sol, b_err=tab.b_err,
+                a=tab.a, c=tab.c, b_sol=b_sol_w, b_err=b_err_w,
                 poly=poly, ctrl=ctrl, want_coeffs=want_coeffs,
+                fsal=tab.fsal, ctrl_mode=mode,
             )
             # The in-kernel stage evaluations count exactly like the unfused
-            # vf calls they replace (FSAL: the first stage is the cache).
-            n_f_evals = tab.stages - 1
+            # vf calls they replace (FSAL: the first stage is the cache;
+            # non-FSAL: one more for the in-kernel trailing evaluation).
+            n_f_evals = tab.stages - 1 + (0 if tab.fsal else 1)
         else:
             K, n_f_evals = stepper.stage_derivatives(
                 term, state.t, safe_dt, state.y, state.f0, args
             )
+            if tab.fsal:
+                f1 = K[-1]
+            else:
+                # User vector fields cannot fuse: the trailing evaluation is
+                # the one launch between the stage sweep and the megakernel.
+                f1, extra = stepper.trailing_derivative(
+                    term, state.t, safe_dt, state.y, K, args
+                )
+                n_f_evals += extra
             out = ops.fused_step(
-                state.y, K, K[-1], *common,
-                b_sol=tab.b_sol, b_err=tab.b_err, ctrl=ctrl,
-                want_coeffs=want_coeffs,
+                state.y, K, f1, *common,
+                b_sol=b_sol_w, b_err=b_err_w, ctrl=ctrl,
+                want_coeffs=want_coeffs, ctrl_mode=mode,
             )
         (y1, err_ratio, accept, y_out, f_out, t_out, dt_out,
          new_inv, new_inv2, coeffs) = out

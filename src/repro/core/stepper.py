@@ -304,6 +304,19 @@ class ExplicitRK(AbstractStepper):
             n_evals += 1
         return jnp.stack(ks), n_evals
 
+    def trailing_derivative(self, term, t, dt, y, K, args):
+        """The non-FSAL trailing evaluation f(t + dt, y1) the fused fast path
+        feeds to the megakernel as ``f1``.  y1 is rebuilt through the same
+        ``fused_update`` program the kernel applies internally (on the ref
+        backend XLA CSEs the two), and -- like ``rk_step`` -- the evaluation
+        happens on every attempt, accepted or rejected, so ``n_f_evals`` and
+        the committed derivative cache stay bitwise-identical to the unfused
+        path.  Returns ``(f1, n_f_evals_delta)``."""
+        tab = self.tableau
+        _, _, b_sol, b_err = _tableau_arrays(tab, y.dtype)
+        y1, _ = ops.fused_update(y, K, dt, b_sol, b_err)
+        return term.vf(t + dt, y1, args), 1
+
 
 # Compatibility alias: the pre-hierarchy name of the explicit stepper.
 Stepper = ExplicitRK

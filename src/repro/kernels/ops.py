@@ -86,6 +86,8 @@ _OP_NAMES = (
     "masked_bisect_refine",
     "fused_step",
     "fused_step_poly",
+    "fused_event_detect",
+    "fused_event_commit",
 )
 
 

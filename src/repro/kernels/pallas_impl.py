@@ -458,18 +458,17 @@ def masked_newton_update(k, delta, active, scale, *, interpret=False):
 # happen in-register without a second pass or a cross-tile accumulator.
 
 
-def _ctrl_commit(
-    y, y1, err, f0, f1, t, t_new, dt_cur, run, pi1, pi2, atol, rtol, sdt,
-    *, ctrl, n_feat,
-):
-    """Shared kernel tail: WRMS norm -> PID decision -> masked commit ->
-    Hermite coefficients, on one (BB, fp) tile.  Mirrors ``ref.pid_update`` +
-    the commit/coeff expressions exactly."""
+def _ctrl_decide(ratio, dt_cur, run, pi1, pi2, *, ctrl, ctrl_mode):
+    """The (BB, 1) controller decision of the kernel tail.  ``ctrl_mode``
+    selects between the two baked-in programs: ``"pid"`` mirrors
+    ``ref.pid_update`` exactly; ``"fixed"`` is the ``FixedController``
+    contract -- accept everything running, keep the standing dt proposal,
+    pass the error history through.  Note ``new_inv``/``new_inv2`` use the
+    UNMASKED accept (the controller's decision), matching the unfused order
+    of operations; only the returned ``accept`` carries the ``run`` mask."""
+    if ctrl_mode == "fixed":
+        return jnp.ones_like(run) & run, dt_cur, pi1, pi2
     b1, b2, b3, safety, factor_min, factor_max, dt_min, dt_max = ctrl
-    scale = atol + rtol * jnp.maximum(jnp.abs(y), jnp.abs(y1))
-    r = err / scale
-    ratio = jnp.sqrt(jnp.sum(r * r, axis=1, keepdims=True) / n_feat)  # (BB, 1)
-
     finite = jnp.isfinite(ratio)
     safe_ratio = jnp.where(finite & (ratio > 0.0), ratio, 1.0)
     inv = 1.0 / safe_ratio
@@ -483,8 +482,23 @@ def _ctrl_commit(
     dt_next = jnp.sign(dt_cur) * mag
     new_inv = jnp.where(accept, inv, pi1)
     new_inv2 = jnp.where(accept, pi1, pi2)
+    return accept & run, dt_next, new_inv, new_inv2
 
-    accept = accept & run
+
+def _ctrl_commit(
+    y, y1, err, f0, f1, t, t_new, dt_cur, run, pi1, pi2, atol, rtol, sdt,
+    *, ctrl, ctrl_mode, n_feat,
+):
+    """Shared kernel tail: WRMS norm -> controller decision -> masked commit
+    -> Hermite coefficients, on one (BB, fp) tile.  Mirrors the ref-oracle
+    expressions exactly."""
+    scale = atol + rtol * jnp.maximum(jnp.abs(y), jnp.abs(y1))
+    r = err / scale
+    ratio = jnp.sqrt(jnp.sum(r * r, axis=1, keepdims=True) / n_feat)  # (BB, 1)
+
+    accept, dt_next, new_inv, new_inv2 = _ctrl_decide(
+        ratio, dt_cur, run, pi1, pi2, ctrl=ctrl, ctrl_mode=ctrl_mode
+    )
     y_out = jnp.where(accept, y1, y)
     f_out = jnp.where(accept, f1, f0)
     t_out = jnp.where(accept, t_new, t)
@@ -496,30 +510,55 @@ def _ctrl_commit(
     return ratio, accept, y_out, f_out, t_out, dt_out, new_inv, new_inv2, (c1, c2, c3)
 
 
+def _stage_combine(y, sdt, ks, b_sol, b_err):
+    """b_sol/b_err combination over a list/ref of stage tiles (unrolled)."""
+    acc_sol = jnp.zeros_like(y)
+    acc_err = jnp.zeros_like(y)
+    for j in range(len(b_sol)):  # unrolled: s is 1..7
+        k = ks[j]
+        if b_sol[j] != 0.0:
+            acc_sol = acc_sol + b_sol[j] * k
+        if b_err[j] != 0.0:
+            acc_err = acc_err + b_err[j] * k
+    return y + sdt * acc_sol, sdt * acc_err
+
+
+def _poly_stages(y, sdt, f0, poly_ref, a, s):
+    """The fully unrolled in-kernel stage recursion for polynomial vector
+    fields.  Returns ``(ks, vf)``; ``vf`` is reused for the non-FSAL trailing
+    evaluation."""
+
+    def vf(yi):  # Horner over the (deg+1, tile) coefficient rows
+        acc = jnp.broadcast_to(poly_ref[poly_ref.shape[0] - 1][None, :], yi.shape)
+        for d in range(poly_ref.shape[0] - 2, -1, -1):
+            acc = acc * yi + poly_ref[d][None, :]
+        return acc
+
+    ks = [f0]
+    for i in range(1, s):  # fully unrolled stage recursion, zero vf launches
+        acc = jnp.zeros_like(y)
+        for j in range(i):
+            if a[i][j] != 0.0:
+                acc = acc + a[i][j] * ks[j]
+        ks.append(vf(y + sdt * acc))
+    return ks, vf
+
+
 def _fused_step_kernel(
     y_ref, k_ref, f1_ref, t_ref, tnew_ref, dtc_ref, sdt_ref, run_ref,
     pi1_ref, pi2_ref, atol_ref, rtol_ref,
     y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
     i1_out, i2_out, c1_out, c2_out, c3_out,
-    *, b_sol, b_err, ctrl, n_feat,
+    *, b_sol, b_err, ctrl, ctrl_mode, n_feat,
 ):
     y = y_ref[...]
     sdt = sdt_ref[...]  # (BB, 1)
-    acc_sol = jnp.zeros_like(y)
-    acc_err = jnp.zeros_like(y)
-    for j in range(k_ref.shape[0]):  # unrolled: s is 1..7
-        k = k_ref[j]
-        if b_sol[j] != 0.0:
-            acc_sol = acc_sol + b_sol[j] * k
-        if b_err[j] != 0.0:
-            acc_err = acc_err + b_err[j] * k
-    y1 = y + sdt * acc_sol
-    err = sdt * acc_err
+    y1, err = _stage_combine(y, sdt, k_ref, b_sol, b_err)
 
     ratio, accept, y_out, f_out, t_out, dt_out, i1, i2, (c1, c2, c3) = _ctrl_commit(
         y, y1, err, k_ref[0], f1_ref[...], t_ref[...], tnew_ref[...], dtc_ref[...],
         run_ref[...], pi1_ref[...], pi2_ref[...], atol_ref[...], rtol_ref[...], sdt,
-        ctrl=ctrl, n_feat=n_feat,
+        ctrl=ctrl, ctrl_mode=ctrl_mode, n_feat=n_feat,
     )
     y1_out[...] = y1
     ratio_out[...] = ratio
@@ -540,40 +579,21 @@ def _fused_step_poly_kernel(
     pi1_ref, pi2_ref, atol_ref, rtol_ref,
     y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
     i1_out, i2_out, c1_out, c2_out, c3_out,
-    *, a, b_sol, b_err, ctrl, n_feat,
+    *, a, b_sol, b_err, ctrl, ctrl_mode, fsal, n_feat,
 ):
     y = y_ref[...]
     sdt = sdt_ref[...]
 
-    def vf(yi):  # Horner over the (deg+1, fp) coefficient rows
-        acc = jnp.broadcast_to(poly_ref[poly_ref.shape[0] - 1][None, :], yi.shape)
-        for d in range(poly_ref.shape[0] - 2, -1, -1):
-            acc = acc * yi + poly_ref[d][None, :]
-        return acc
-
-    s = len(b_sol)
-    ks = [f0_ref[...]]
-    for i in range(1, s):  # fully unrolled stage recursion, zero vf launches
-        acc = jnp.zeros_like(y)
-        for j in range(i):
-            if a[i][j] != 0.0:
-                acc = acc + a[i][j] * ks[j]
-        ks.append(vf(y + sdt * acc))
-
-    acc_sol = jnp.zeros_like(y)
-    acc_err = jnp.zeros_like(y)
-    for j in range(s):
-        if b_sol[j] != 0.0:
-            acc_sol = acc_sol + b_sol[j] * ks[j]
-        if b_err[j] != 0.0:
-            acc_err = acc_err + b_err[j] * ks[j]
-    y1 = y + sdt * acc_sol
-    err = sdt * acc_err
+    ks, vf = _poly_stages(y, sdt, f0_ref[...], poly_ref, a, len(b_sol))
+    y1, err = _stage_combine(y, sdt, ks, b_sol, b_err)
+    # Non-FSAL tableaus: the trailing evaluation f(t + dt, y1) is one more
+    # in-kernel Horner pass, not a launch.
+    f1 = ks[-1] if fsal else vf(y1)
 
     ratio, accept, y_out, f_out, t_out, dt_out, i1, i2, (c1, c2, c3) = _ctrl_commit(
-        y, y1, err, ks[0], ks[-1], t_ref[...], tnew_ref[...], dtc_ref[...],
+        y, y1, err, ks[0], f1, t_ref[...], tnew_ref[...], dtc_ref[...],
         run_ref[...], pi1_ref[...], pi2_ref[...], atol_ref[...], rtol_ref[...], sdt,
-        ctrl=ctrl, n_feat=n_feat,
+        ctrl=ctrl, ctrl_mode=ctrl_mode, n_feat=n_feat,
     )
     y1_out[...] = y1
     ratio_out[...] = ratio
@@ -589,29 +609,160 @@ def _fused_step_poly_kernel(
     c3_out[...] = c3
 
 
-def _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype):
+# ------------------------------------------------- feature-tiled schedule
+#
+# When the padded feature axis exceeds one (BB, BF) tile, the single-pass
+# schedule above would stage (s + ~8) full (BB, fp) rows in VMEM -- fine for
+# the torchode regime, a VMEM blowup for large f.  The tiled schedule runs
+# grid (nb, 2, nf): phase p=0 sweeps the feature tiles accumulating per-tile
+# WRMS partial sums into the (BB, 1) ratio output (constant block index, so
+# it stays VMEM-resident across the sweep), finalizing the controller
+# decision on the last tile; phase p=1 re-sweeps the tiles and writes every
+# (BB, BF) tile output under the decided accept mask.  Per-tile state (y1,
+# err, stages) is recomputed in phase 1 rather than staged in scratch --
+# cheap VPU arithmetic against O(tile) VMEM, so f is unbounded.  Tile
+# outputs are written ONLY in phase 1 (the final visit of each block, the
+# revisit-safe contract); the (BB, 1) column outputs are written in phase 0
+# and persist because their block index never changes within a batch tile.
+
+
+def _tiled_commit(
+    p, k, y, y1, err, f0, f1, sdt,
+    t_ref, tnew_ref, dtc_ref, run_ref, pi1_ref, pi2_ref, atol_ref, rtol_ref,
+    y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
+    i1_out, i2_out, c1_out, c2_out, c3_out,
+    *, ctrl, ctrl_mode, n_feat, nf_tiles,
+):
+    """The two-phase tail shared by the tiled megakernels: WRMS partial-sum
+    accumulation + controller decision (phase 0), masked tile commits +
+    Hermite coefficients (phase 1).  Same expressions as ``_ctrl_commit``,
+    split across the two feature sweeps."""
+
+    @pl.when(p == 0)
+    def _reduce():
+        @pl.when(k == 0)
+        def _init():
+            ratio_out[...] = jnp.zeros_like(ratio_out)
+
+        scale = atol_ref[...] + rtol_ref[...] * jnp.maximum(jnp.abs(y), jnp.abs(y1))
+        r = err / scale
+        ratio_out[...] += jnp.sum(r * r, axis=1, keepdims=True)
+
+        @pl.when(k == nf_tiles - 1)
+        def _decide():
+            ratio = jnp.sqrt(ratio_out[...] / n_feat)  # (BB, 1)
+            run = run_ref[...]
+            dt_cur = dtc_ref[...]
+            accept, dt_next, new_inv, new_inv2 = _ctrl_decide(
+                ratio, dt_cur, run, pi1_ref[...], pi2_ref[...],
+                ctrl=ctrl, ctrl_mode=ctrl_mode,
+            )
+            ratio_out[...] = ratio
+            acc_out[...] = accept.astype(jnp.int32)
+            to_out[...] = jnp.where(accept, tnew_ref[...], t_ref[...])
+            dto_out[...] = jnp.where(run, dt_next, dt_cur)
+            i1_out[...] = new_inv
+            i2_out[...] = new_inv2
+
+    @pl.when(p == 1)
+    def _commit():
+        accept = acc_out[...] != 0  # decided in phase 0, still resident
+        y1_out[...] = y1
+        yo_out[...] = jnp.where(accept, y1, y)
+        fo_out[...] = jnp.where(accept, f1, f0)
+        c1_out[...] = sdt * f0
+        c2_out[...] = 3.0 * (y1 - y) - sdt * (2.0 * f0 + f1)
+        c3_out[...] = 2.0 * (y - y1) + sdt * (f0 + f1)
+
+
+def _fused_step_tiled_kernel(
+    y_ref, k_ref, f1_ref, t_ref, tnew_ref, dtc_ref, sdt_ref, run_ref,
+    pi1_ref, pi2_ref, atol_ref, rtol_ref,
+    y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
+    i1_out, i2_out, c1_out, c2_out, c3_out,
+    *, b_sol, b_err, ctrl, ctrl_mode, n_feat, nf_tiles,
+):
+    p = pl.program_id(1)
+    k = pl.program_id(2)
+    y = y_ref[...]  # (BB, BF) tile
+    sdt = sdt_ref[...]
+    y1, err = _stage_combine(y, sdt, k_ref, b_sol, b_err)
+    _tiled_commit(
+        p, k, y, y1, err, k_ref[0], f1_ref[...], sdt,
+        t_ref, tnew_ref, dtc_ref, run_ref, pi1_ref, pi2_ref, atol_ref, rtol_ref,
+        y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
+        i1_out, i2_out, c1_out, c2_out, c3_out,
+        ctrl=ctrl, ctrl_mode=ctrl_mode, n_feat=n_feat, nf_tiles=nf_tiles,
+    )
+
+
+def _fused_step_poly_tiled_kernel(
+    y_ref, f0_ref, poly_ref, t_ref, tnew_ref, dtc_ref, sdt_ref, run_ref,
+    pi1_ref, pi2_ref, atol_ref, rtol_ref,
+    y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
+    i1_out, i2_out, c1_out, c2_out, c3_out,
+    *, a, b_sol, b_err, ctrl, ctrl_mode, fsal, n_feat, nf_tiles,
+):
+    p = pl.program_id(1)
+    k = pl.program_id(2)
+    y = y_ref[...]
+    sdt = sdt_ref[...]
+    # The polynomial vf is elementwise, so the whole stage recursion is
+    # tile-local (recomputed per phase; see the schedule note above).
+    ks, vf = _poly_stages(y, sdt, f0_ref[...], poly_ref, a, len(b_sol))
+    y1, err = _stage_combine(y, sdt, ks, b_sol, b_err)
+    f1 = ks[-1] if fsal else vf(y1)
+    _tiled_commit(
+        p, k, y, y1, err, ks[0], f1, sdt,
+        t_ref, tnew_ref, dtc_ref, run_ref, pi1_ref, pi2_ref, atol_ref, rtol_ref,
+        y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
+        i1_out, i2_out, c1_out, c2_out, c3_out,
+        ctrl=ctrl, ctrl_mode=ctrl_mode, n_feat=n_feat, nf_tiles=nf_tiles,
+    )
+
+
+def _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype, *, tiled=False):
     """Tolerance blocks for the fused kernels, mirroring ``error_norm``'s
     shape contract: scalar/(b,) stream cheap (BB, 1) blocks, genuine (b, f)
-    tolerances pay for full rows.  Padded cells are 1 so padded err cells
-    (always 0) contribute 0/positive = 0 to the norm."""
+    tolerances pay for full rows (feature tiles under the tiled schedule).
+    Padded cells are 1 so padded err cells (always 0) contribute 0/positive
+    = 0 to the norm."""
     atol, rtol = ref.broadcast_tolerances(atol, rtol, dtype)
     per_feature = atol.ndim == 2 and atol.shape[1] > 1 or rtol.ndim == 2 and rtol.shape[1] > 1
     if per_feature:
         atolp = _pad_to(_pad_to(jnp.broadcast_to(atol, (b, f)), 0, BB, value=1), 1, BF, value=1)
         rtolp = _pad_to(_pad_to(jnp.broadcast_to(rtol, (b, f)), 0, BB, value=1), 1, BF, value=1)
-        spec = pl.BlockSpec((BB, fp), lambda i: (i, 0))
+        spec = (
+            pl.BlockSpec((BB, BF), lambda i, p, k: (i, k))
+            if tiled else pl.BlockSpec((BB, fp), lambda i: (i, 0))
+        )
     else:
         atolp = _pad_to(jnp.broadcast_to(atol.reshape((-1, 1)) if atol.ndim else atol, (b, 1)),
                         0, BB, value=1)
         rtolp = _pad_to(jnp.broadcast_to(rtol.reshape((-1, 1)) if rtol.ndim else rtol, (b, 1)),
                         0, BB, value=1)
-        spec = pl.BlockSpec((BB, 1), lambda i: (i, 0))
+        spec = (
+            pl.BlockSpec((BB, 1), lambda i, p, k: (i, 0))
+            if tiled else pl.BlockSpec((BB, 1), lambda i: (i, 0))
+        )
     return atolp, rtolp, spec
 
 
-def _fused_out_specs(bp, fp, dtype):
-    row = pl.BlockSpec((BB, fp), lambda i: (i, 0))
-    col = pl.BlockSpec((BB, 1), lambda i: (i, 0))
+def _fused_row_col_specs(fp, *, tiled):
+    """(row, col) block specs matching the schedule's grid arity."""
+    if tiled:
+        return (
+            pl.BlockSpec((BB, BF), lambda i, p, k: (i, k)),
+            pl.BlockSpec((BB, 1), lambda i, p, k: (i, 0)),
+        )
+    return (
+        pl.BlockSpec((BB, fp), lambda i: (i, 0)),
+        pl.BlockSpec((BB, 1), lambda i: (i, 0)),
+    )
+
+
+def _fused_out_specs(bp, fp, dtype, *, tiled=False):
+    row, col = _fused_row_col_specs(fp, tiled=tiled)
     specs = [row, col, col, row, row, col, col, col, col, row, row, row]
     shapes = [
         jax.ShapeDtypeStruct((bp, fp), dtype),  # y1
@@ -645,7 +796,8 @@ def _fused_returns(outs, y, b, f, want_coeffs):
 
 def fused_step(
     y, K, f1, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
-    atol, rtol, *, b_sol, b_err, ctrl, want_coeffs, interpret=False,
+    atol, rtol, *, b_sol, b_err, ctrl, want_coeffs, ctrl_mode="pid",
+    interpret=False,
 ):
     b, f = y.shape
     s = K.shape[0]
@@ -656,21 +808,33 @@ def fused_step(
     Kp = _pad_to(_pad_to(K, 1, BB), 2, BF)
     f1p = _pad_to(_pad_to(f1, 0, BB), 1, BF)
     bp, fp = yp.shape
-    atolp, rtolp, tol_spec = _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype)
+    nf = fp // BF
+    tiled = nf > 1  # one tile -> the verified single-pass schedule
+    atolp, rtolp, tol_spec = _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype, tiled=tiled)
     cols = [t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv]
     colp = [_pad_to(x[:, None], 0, BB) for x in cols]
-    row = pl.BlockSpec((BB, fp), lambda i: (i, 0))
-    col = pl.BlockSpec((BB, 1), lambda i: (i, 0))
-    out_specs, out_shapes = _fused_out_specs(bp, fp, dtype)
-    outs = pl.pallas_call(
-        functools.partial(
+    row, col = _fused_row_col_specs(fp, tiled=tiled)
+    out_specs, out_shapes = _fused_out_specs(bp, fp, dtype, tiled=tiled)
+    if tiled:
+        grid = (bp // BB, 2, nf)
+        k_spec = pl.BlockSpec((s, BB, BF), lambda i, p, k: (0, i, k))
+        kernel = functools.partial(
+            _fused_step_tiled_kernel, b_sol=tuple(b_sol), b_err=tuple(b_err),
+            ctrl=tuple(ctrl), ctrl_mode=ctrl_mode, n_feat=float(f), nf_tiles=nf,
+        )
+    else:
+        grid = (bp // BB,)
+        k_spec = pl.BlockSpec((s, BB, fp), lambda i: (0, i, 0))
+        kernel = functools.partial(
             _fused_step_kernel, b_sol=tuple(b_sol), b_err=tuple(b_err),
-            ctrl=tuple(ctrl), n_feat=float(f),
-        ),
-        grid=(bp // BB,),
+            ctrl=tuple(ctrl), ctrl_mode=ctrl_mode, n_feat=float(f),
+        )
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
         in_specs=[
             row,
-            pl.BlockSpec((s, BB, fp), lambda i: (0, i, 0)),
+            k_spec,
             row,
             col, col, col, col, col, col, col,  # t, t_new, dt_cur, sdt, run, pi1, pi2
             tol_spec, tol_spec,
@@ -685,7 +849,8 @@ def fused_step(
 
 def fused_step_poly(
     y, f0, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
-    atol, rtol, *, a, c, b_sol, b_err, poly, ctrl, want_coeffs, interpret=False,
+    atol, rtol, *, a, c, b_sol, b_err, poly, ctrl, want_coeffs, fsal=True,
+    ctrl_mode="pid", interpret=False,
 ):
     del c  # autonomous polynomial dynamics
     b, f = y.shape
@@ -693,29 +858,38 @@ def fused_step_poly(
     yp = _pad_to(_pad_to(y, 0, BB, value=1), 1, BF, value=1)
     f0p = _pad_to(_pad_to(f0, 0, BB), 1, BF)
     bp, fp = yp.shape
+    nf = fp // BF
+    tiled = nf > 1
     # Static polynomial coefficients materialize as one small (deg+1, fp)
     # input streamed to every program (scalars broadcast across features).
     poly_rows = np.stack(
         [np.broadcast_to(np.asarray(cd, dtype=dtype), (f,)) for cd in poly]
     )
     polyp = _pad_to(jnp.asarray(poly_rows), 1, BF)
-    atolp, rtolp, tol_spec = _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype)
+    atolp, rtolp, tol_spec = _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype, tiled=tiled)
     cols = [t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv]
     colp = [_pad_to(x[:, None], 0, BB) for x in cols]
-    row = pl.BlockSpec((BB, fp), lambda i: (i, 0))
-    col = pl.BlockSpec((BB, 1), lambda i: (i, 0))
-    out_specs, out_shapes = _fused_out_specs(bp, fp, dtype)
+    row, col = _fused_row_col_specs(fp, tiled=tiled)
+    out_specs, out_shapes = _fused_out_specs(bp, fp, dtype, tiled=tiled)
+    static = dict(
+        a=tuple(tuple(r) for r in a), b_sol=tuple(b_sol), b_err=tuple(b_err),
+        ctrl=tuple(ctrl), ctrl_mode=ctrl_mode, fsal=fsal, n_feat=float(f),
+    )
+    if tiled:
+        grid = (bp // BB, 2, nf)
+        poly_spec = pl.BlockSpec((len(poly), BF), lambda i, p, k: (0, k))
+        kernel = functools.partial(_fused_step_poly_tiled_kernel, nf_tiles=nf, **static)
+    else:
+        grid = (bp // BB,)
+        poly_spec = pl.BlockSpec((len(poly), fp), lambda i: (0, 0))
+        kernel = functools.partial(_fused_step_poly_kernel, **static)
     outs = pl.pallas_call(
-        functools.partial(
-            _fused_step_poly_kernel,
-            a=tuple(tuple(r) for r in a), b_sol=tuple(b_sol), b_err=tuple(b_err),
-            ctrl=tuple(ctrl), n_feat=float(f),
-        ),
-        grid=(bp // BB,),
+        kernel,
+        grid=grid,
         in_specs=[
             row,
             row,
-            pl.BlockSpec((len(poly), fp), lambda i: (0, 0)),
+            poly_spec,
             col, col, col, col, col, col, col,
             tol_spec, tol_spec,
         ],
@@ -725,6 +899,144 @@ def fused_step_poly(
     )(yp, f0p, polyp, colp[0], colp[1], colp[2], colp[3], colp[4], colp[5], colp[6],
       atolp, rtolp)
     return _fused_returns(outs, y, b, f, want_coeffs)
+
+
+# ------------------------------------------------------------ fused event ops
+#
+# The event layer's per-step fixed cost -- E sign tests at detection, the
+# terminal resolution + bookkeeping update at commit -- runs as two kernels
+# so a solve with events launches O(1) extra programs per step instead of
+# O(E) elementwise ops.  E is tiny (a handful of events), so the E axis
+# rides whole inside each block like the (BB, 1) scalar columns elsewhere;
+# bool in/outputs travel as bool in / int32 out, the ``fused_step`` accept
+# convention.
+
+
+def _event_detect_kernel(
+    vp_ref, vn_ref, fired_ref, acc_ref, newly_out, vkeep_out, *, directions
+):
+    v0 = vp_ref[...]  # (BB, E)
+    v1 = vn_ref[...]
+    accept = acc_ref[...]  # (BB, 1), broadcasts over E
+    up = (v0 <= 0.0) & (v1 >= 0.0)
+    down = (v0 >= 0.0) & (v1 <= 0.0)
+    # Per-event direction choice unrolled over the static tuple (a materialized
+    # direction vector would be a captured constant, which pallas forbids).
+    cols = []
+    for i, d in enumerate(directions):
+        c = up if d > 0 else down if d < 0 else up | down
+        cols.append(c[:, i:i + 1])
+    crossed = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+    crossed = crossed & ((v0 != 0.0) | (v1 != 0.0))
+    newly = crossed & ~fired_ref[...] & accept
+    newly_out[...] = newly.astype(jnp.int32)
+    vkeep_out[...] = jnp.where(accept, v1, v0)
+
+
+def fused_event_detect(v_prev, v_new, fired, accept, *, directions, interpret=False):
+    b, E = v_prev.shape
+    vpp = _pad_to(v_prev, 0, BB)
+    vnp_ = _pad_to(v_new, 0, BB)
+    firedp = _pad_to(fired, 0, BB)
+    accp = _pad_to(accept[:, None], 0, BB)
+    bp = vpp.shape[0]
+    espec = pl.BlockSpec((BB, E), lambda i: (i, 0))
+    cspec = pl.BlockSpec((BB, 1), lambda i: (i, 0))
+    newly, v_keep = pl.pallas_call(
+        functools.partial(
+            _event_detect_kernel, directions=tuple(float(d) for d in directions)
+        ),
+        grid=(bp // BB,),
+        in_specs=[espec, espec, espec, cspec],
+        out_specs=[espec, espec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, E), jnp.int32),
+            jax.ShapeDtypeStruct((bp, E), v_prev.dtype),
+        ],
+        interpret=interpret,
+    )(vpp, vnp_, firedp, accp)
+    return newly[:b].astype(bool), v_keep[:b]
+
+
+def _event_commit_kernel(
+    x_ref, yev_ref, newly_ref, ynew_ref, t0_ref, dt_ref,
+    fired_ref, evt_ref, evy_ref,
+    fired_out, evt_out, evy_out, stop_out, tstop_out, ystop_out, nnew_out,
+    *, terminal,
+):
+    x = x_ref[...]  # (BB, E)
+    newly = newly_ref[...]
+    t0 = t0_ref[...]  # (BB, 1)
+    dt = dt_ref[...]
+    yev = yev_ref[...]  # (BB, E, BF) feature tile
+    # Terminal resolution: the earliest terminal crossing wins.  Unrolled
+    # over the static terminal flags, same expressions as the ref op.
+    x_stop = jnp.full(t0.shape, jnp.asarray(jnp.inf, x.dtype), dtype=x.dtype)
+    y_stop = ynew_ref[...]  # (BB, BF)
+    stop = jnp.zeros(t0.shape, dtype=bool)
+    for i, term in enumerate(terminal):
+        if not term:
+            continue
+        n_i = newly[:, i:i + 1]  # (BB, 1)
+        stop = stop | n_i
+        earlier = n_i & (x[:, i:i + 1] < x_stop)
+        y_stop = jnp.where(earlier, yev[:, i, :], y_stop)
+        x_stop = jnp.where(earlier, x[:, i:i + 1], x_stop)
+    rec = newly & (x <= x_stop)  # (BB, E)
+    # The E-column and scalar-column outputs do not depend on the feature
+    # tile; rewriting them once per tile is idempotent (bisect-kernel rule).
+    fired_out[...] = (fired_ref[...] | rec).astype(jnp.int32)
+    evt_out[...] = jnp.where(rec, t0 + x * dt, evt_ref[...])
+    evy_out[...] = jnp.where(rec[:, :, None], yev, evy_ref[...])
+    stop_out[...] = stop.astype(jnp.int32)
+    tstop_out[...] = t0 + jnp.where(stop, x_stop, 0.0) * dt
+    ystop_out[...] = y_stop
+    nnew_out[...] = jnp.sum(rec.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def fused_event_commit(
+    x, y_ev, newly, y_new, t0, dt, fired, ev_t, ev_y, *, terminal, interpret=False
+):
+    b, E = x.shape
+    f = y_new.shape[1]
+    xp = _pad_to(x, 0, BB)
+    yevp = _pad_to(_pad_to(y_ev, 0, BB), 2, BF)
+    newlyp = _pad_to(newly, 0, BB)
+    ynewp = _pad_to(_pad_to(y_new, 0, BB), 1, BF)
+    t0p = _pad_to(t0[:, None], 0, BB)
+    dtp = _pad_to(dt[:, None], 0, BB)
+    firedp = _pad_to(fired, 0, BB)
+    evtp = _pad_to(ev_t, 0, BB)
+    evyp = _pad_to(_pad_to(ev_y, 0, BB), 2, BF)
+    bp = xp.shape[0]
+    fp = ynewp.shape[1]
+    espec = pl.BlockSpec((BB, E), lambda i, k: (i, 0))
+    cspec = pl.BlockSpec((BB, 1), lambda i, k: (i, 0))
+    rowspec = pl.BlockSpec((BB, BF), lambda i, k: (i, k))
+    e3spec = pl.BlockSpec((BB, E, BF), lambda i, k: (i, 0, k))
+    outs = pl.pallas_call(
+        functools.partial(
+            _event_commit_kernel, terminal=tuple(bool(t) for t in terminal)
+        ),
+        grid=(bp // BB, fp // BF),
+        in_specs=[espec, e3spec, espec, rowspec, cspec, cspec, espec, espec, e3spec],
+        out_specs=[espec, espec, e3spec, cspec, cspec, rowspec, cspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, E), jnp.int32),       # fired
+            jax.ShapeDtypeStruct((bp, E), t0.dtype),        # ev_t
+            jax.ShapeDtypeStruct((bp, E, fp), y_ev.dtype),  # ev_y
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),       # stop
+            jax.ShapeDtypeStruct((bp, 1), t0.dtype),        # t_stop
+            jax.ShapeDtypeStruct((bp, fp), y_new.dtype),    # y_stop
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),       # n_new
+        ],
+        interpret=interpret,
+    )(xp, yevp, newlyp, ynewp, t0p, dtp, firedp, evtp, evyp)
+    fired_n, evt_n, evy_n, stop, t_stop, y_stop, n_new = outs
+    return (
+        fired_n[:b].astype(bool), evt_n[:b], evy_n[:b, :, :f],
+        stop[:b, 0].astype(bool), t_stop[:b, 0], y_stop[:b, :f], n_new[:b, 0],
+    )
 
 
 # ------------------------------------------------------------- impl namespaces
@@ -760,6 +1072,12 @@ class _Impl:
 
     def fused_step_poly(self, *args, **kwargs):
         return fused_step_poly(*args, **kwargs, interpret=self._i)
+
+    def fused_event_detect(self, *args, **kwargs):
+        return fused_event_detect(*args, **kwargs, interpret=self._i)
+
+    def fused_event_commit(self, *args, **kwargs):
+        return fused_event_commit(*args, **kwargs, interpret=self._i)
 
 
 _INTERPRET = _Impl(True)

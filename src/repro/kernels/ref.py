@@ -215,39 +215,53 @@ def poly_eval(y, coeffs):
 
 def fused_step(
     y, K, f1, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
-    atol, rtol, *, b_sol, b_err, ctrl, want_coeffs,
+    atol, rtol, *, b_sol, b_err, ctrl, want_coeffs, ctrl_mode="pid",
 ):
     """One fused explicit-RK step attempt AROUND the vf calls: stage-combine,
-    WRMS error norm, PI controller decision, masked commit of (t, y, f)
+    WRMS error norm, controller decision, masked commit of (t, y, f)
     against the ``running`` mask, and the dense-output/event interpolation
     coefficient build -- everything between the last stage evaluation and the
     loop-state rebuild, as ONE op.
 
     y:        (b, f) current state
     K:        (s, b, f) stacked stage derivatives; K[0] is f(t, y) (FSAL cache)
-    f1:       (b, f) derivative at (t + dt, y1) (the FSAL last stage)
+    f1:       (b, f) derivative at (t + dt, y1) (the FSAL last stage, or the
+              trailing evaluation for non-FSAL tableaus)
     t:        (b,) current time;  t_new: (b,) time reached if accepted
     dt_cur:   (b,) the standing step proposal (pre-clamp, fed to the controller)
     safe_dt:  (b,) the signed step the stages actually used
     running / prev_inv / prev2_inv: (b,) loop mask + controller history
     b_sol / b_err: static tableau weight tuples
     ctrl:     static ``(b1, b2, b3, safety, factor_min, factor_max, dt_min,
-              dt_max)`` from ``PIDController.filter_params``
+              dt_max)`` from ``PIDController.filter_params`` (``()`` under
+              ``ctrl_mode="fixed"``)
     want_coeffs: build the cubic-Hermite coefficients too (dense/events)
+    ctrl_mode: ``"pid"`` runs the Soederlind filter; ``"fixed"`` is the
+              fixed-step contract (``FixedController``): accept everything
+              that is running, keep the standing dt proposal and leave the
+              controller history untouched.  The error ratio is still
+              computed (it is 0 for fixed-step tableaus, whose b_err is all
+              zeros), matching the unfused path bitwise.
 
     Returns ``(y1, err_ratio, accept, y_out, f_out, t_out, dt_out, new_inv,
     new_inv2, coeffs)`` with ``coeffs = (c0, c1, c2, c3)`` or ``None``.
     """
-    b1, b2, b3, safety, factor_min, factor_max, dt_min, dt_max = ctrl
     y1, err = fused_update(
         y, K, safe_dt, jnp.asarray(b_sol, K.dtype), jnp.asarray(b_err, K.dtype)
     )
     err_ratio = error_norm(err, y, y1, atol, rtol)
-    accept, dt_next, new_inv, new_inv2 = pid_update(
-        err_ratio, dt_cur, prev_inv, prev2_inv,
-        b1=b1, b2=b2, b3=b3, safety=safety,
-        factor_min=factor_min, factor_max=factor_max, dt_min=dt_min, dt_max=dt_max,
-    )
+    if ctrl_mode == "fixed":
+        accept = jnp.ones(dt_cur.shape, dtype=bool)
+        dt_next = dt_cur
+        new_inv, new_inv2 = prev_inv, prev2_inv
+    else:
+        b1, b2, b3, safety, factor_min, factor_max, dt_min, dt_max = ctrl
+        accept, dt_next, new_inv, new_inv2 = pid_update(
+            err_ratio, dt_cur, prev_inv, prev2_inv,
+            b1=b1, b2=b2, b3=b3, safety=safety,
+            factor_min=factor_min, factor_max=factor_max,
+            dt_min=dt_min, dt_max=dt_max,
+        )
     accept = accept & running
     acc_f = accept[:, None]
     y_out = jnp.where(acc_f, y1, y)
@@ -261,15 +275,19 @@ def fused_step(
 def fused_step_poly(
     y, f0, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
     atol, rtol, *, a, c, b_sol, b_err, poly, ctrl, want_coeffs,
+    fsal=True, ctrl_mode="pid",
 ):
     """The full megakernel for closed-form polynomial vector fields: the
     stage evaluations fuse too, so an ENTIRE explicit-RK step attempt is one
     op with zero vf launches.
 
     ``a``/``c`` are the static tableau arrays (tuples), ``poly`` the static
-    coefficient tuple of the elementwise polynomial vf (see ``poly_eval``);
-    the tableau must be FSAL (f1 is the last stage).  Everything else as in
-    ``fused_step``.
+    coefficient tuple of the elementwise polynomial vf (see ``poly_eval``).
+    For FSAL tableaus f1 is the last stage; for non-FSAL ones the trailing
+    evaluation f(t + dt, y1) folds in here too (the polynomial vf is
+    closed-form, so it costs one more in-kernel Horner pass, not a launch) --
+    it happens on every attempt, accepted or rejected, exactly like the
+    unfused ``rk_step``.  Everything else as in ``fused_step``.
     """
     del c  # autonomous polynomial dynamics: stage times never enter
     s = len(b_sol)
@@ -278,9 +296,89 @@ def fused_step_poly(
         yi = stage_accum(y, safe_dt, jnp.stack(ks), jnp.asarray(a[i][:i], y.dtype))
         ks.append(poly_eval(yi, poly))
     K = jnp.stack(ks)
+    if fsal:
+        f1 = K[-1]
+    else:
+        y1, _ = fused_update(
+            y, K, safe_dt, jnp.asarray(b_sol, K.dtype), jnp.asarray(b_err, K.dtype)
+        )
+        f1 = poly_eval(y1, poly)
     return fused_step(
-        y, K, K[-1], t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
-        atol, rtol, b_sol=b_sol, b_err=b_err, ctrl=ctrl, want_coeffs=want_coeffs,
+        y, K, f1, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
+        atol, rtol, b_sol=b_sol, b_err=b_err, ctrl=ctrl,
+        want_coeffs=want_coeffs, ctrl_mode=ctrl_mode,
+    )
+
+
+def fused_event_detect(v_prev, v_new, fired, accept, *, directions):
+    """Fused per-event sign test of the event layer: scipy's zero-crossing
+    detection for EVERY registered event in one op, plus the masked carry of
+    the condition values (only accepted steps advance them).
+
+    v_prev: (b, E) condition values at the current accepted state
+    v_new:  (b, E) condition values at the candidate state
+    fired:  (b, E) bool -- crossings already recorded (these never re-fire)
+    accept: (b,) bool -- this step's accept mask (already masked by running)
+    directions: static tuple of per-event crossing directions (0 / +1 / -1)
+
+    Returns ``(newly, v_keep)``: the (b, E) "newly crossed this step" mask
+    and the carried (b, E) condition values.
+    """
+    crossed = []
+    for i, d in enumerate(directions):
+        v0, v1 = v_prev[:, i], v_new[:, i]
+        up = (v0 <= 0.0) & (v1 >= 0.0)
+        down = (v0 >= 0.0) & (v1 <= 0.0)
+        if d > 0:
+            c = up
+        elif d < 0:
+            c = down
+        else:
+            c = up | down
+        crossed.append(c & ((v0 != 0.0) | (v1 != 0.0)))
+    newly = jnp.stack(crossed, axis=1) & ~fired & accept[:, None]
+    v_keep = jnp.where(accept[:, None], v_new, v_prev)
+    return newly, v_keep
+
+
+def fused_event_commit(x, y_ev, newly, y_new, t0, dt, fired, ev_t, ev_y, *, terminal):
+    """Fused event-record commit: terminal resolution (the earliest terminal
+    crossing wins), the first-crossing bookkeeping update and the stop
+    outputs of one step's event processing, as one op.
+
+    x:      (b, E) localized crossing positions in interpolant coordinates
+    y_ev:   (b, E, f) interpolated states at the crossings
+    newly:  (b, E) bool -- crossings detected this step
+    y_new:  (b, f) the accepted candidate state (stop fallback)
+    t0, dt: (b,) step start times / signed step sizes
+    fired / ev_t / ev_y: the recorded-crossing bookkeeping being advanced
+    terminal: static tuple of per-event terminal flags
+
+    Returns ``(fired', ev_t', ev_y', stop, t_stop, y_stop, n_new)``.
+    """
+    b = x.shape[0]
+    inf = jnp.asarray(jnp.inf, t0.dtype)
+    x_stop = jnp.full((b,), inf, dtype=t0.dtype)
+    y_stop = y_new
+    stop = jnp.zeros((b,), dtype=bool)
+    for i, term in enumerate(terminal):
+        if not term:
+            continue
+        stop = stop | newly[:, i]
+        earlier = newly[:, i] & (x[:, i] < x_stop)
+        y_stop = jnp.where(earlier[:, None], y_ev[:, i], y_stop)
+        x_stop = jnp.where(earlier, x[:, i], x_stop)
+    rec = newly & (x <= x_stop[:, None])
+
+    t_ev = t0[:, None] + x * dt[:, None]
+    return (
+        fired | rec,
+        jnp.where(rec, t_ev, ev_t),
+        jnp.where(rec[:, :, None], y_ev, ev_y),
+        stop,
+        t0 + jnp.where(stop, x_stop, 0.0) * dt,
+        y_stop,
+        rec.sum(axis=1).astype(jnp.int32),
     )
 
 

@@ -134,6 +134,44 @@ class TestProperties:
         p = pi.error_norm(err, y0, y1, 1e-6, 1e-3, interpret=True)
         np.testing.assert_allclose(r, p, rtol=2e-4, atol=1e-6)
 
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 10), f=st.integers(129, 400), s=st.integers(2, 5),
+           seed=st.integers(0, 2**30))
+    def test_fused_step_tiled_reduction_property(self, b, f, s, seed):
+        """Mixed accept/reject batches through the feature-tiled two-pass WRMS
+        reduction (f > 128 engages it) agree with the single-pass ref op."""
+        rng = np.random.default_rng(seed)
+        y = jnp.asarray(rng.uniform(0.5, 1.5, (b, f)), jnp.float32)
+        K = jnp.asarray(rng.standard_normal((s, b, f)), jnp.float32)
+        t = jnp.asarray(rng.uniform(0.0, 1.0, (b,)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.05, 0.2, (b,)), jnp.float32)
+        running = jnp.asarray(rng.uniform(size=b) > 0.25)
+        pi1 = jnp.asarray(rng.uniform(0.5, 2.0, (b,)), jnp.float32)
+        pi2 = jnp.asarray(rng.uniform(0.5, 2.0, (b,)), jnp.float32)
+        kw = dict(b_sol=tuple(rng.standard_normal(s).tolist()),
+                  b_err=tuple((0.1 * rng.standard_normal(s)).tolist()),
+                  ctrl=(0.14, -0.08, 0.02, 0.9, 0.2, 10.0, 0.0, float("inf")),
+                  want_coeffs=False)
+        # Calibrate atol off a probe ratio so accept/reject actually mixes.
+        probe = np.asarray(ref.fused_step(y, K, K[-1], t, t + dt, dt, dt,
+                                          running, pi1, pi2, 0.05, 1e-3, **kw)[1])
+        atol = float(0.05 * np.median(probe)) if probe.any() else 0.05
+        args = (y, K, K[-1], t, t + dt, dt, dt, running, pi1, pi2, atol, 1e-3)
+        r = ref.fused_step(*args, **kw)
+        p = pi.fused_step(*args, interpret=True, **kw)
+        np.testing.assert_allclose(np.asarray(r[1]), np.asarray(p[1]),
+                                   rtol=1e-4, atol=1e-6)
+        # Decisions may differ only on the knife edge of ratio == 1; committed
+        # outputs are compared where the decisions agree.
+        clear = np.abs(np.asarray(r[1]) - 1.0) > 1e-3
+        np.testing.assert_array_equal(np.asarray(r[2])[clear],
+                                      np.asarray(p[2])[clear])
+        agree = np.asarray(r[2]) == np.asarray(p[2])
+        for i in (0, 3, 4, 5, 6, 7, 8):
+            np.testing.assert_allclose(np.asarray(r[i])[agree],
+                                       np.asarray(p[i])[agree],
+                                       rtol=2e-4, atol=1e-5)
+
     @settings(max_examples=20, deadline=None)
     @given(seed=st.integers(0, 2**30))
     def test_error_norm_scale_invariance(self, seed):
@@ -144,6 +182,54 @@ class TestProperties:
         r1 = ref.error_norm(err, y0, y0, 0.0, 1e-3)
         r2 = ref.error_norm(err * 10, y0 * 10, y0 * 10, 0.0, 1e-3)
         np.testing.assert_allclose(r1, r2, rtol=1e-4)
+
+
+class TestFusedEventOps:
+    """The event layer's kernelized sign test and commit vs the ref oracle."""
+
+    def _detect_inputs(self, seed, b, E):
+        rng = np.random.default_rng(seed)
+        v_prev = jnp.asarray(rng.standard_normal((b, E)), jnp.float32)
+        v_new = jnp.asarray(rng.standard_normal((b, E)), jnp.float32)
+        fired = jnp.asarray(rng.uniform(size=(b, E)) > 0.7)
+        accept = jnp.asarray(rng.uniform(size=b) > 0.3)
+        return rng, v_prev, v_new, fired, accept
+
+    @pytest.mark.parametrize("b,E", [(1, 1), (6, 3), (17, 2)])
+    @pytest.mark.parametrize("direction", [-1.0, 0.0, 1.0])
+    def test_detect_matches_ref(self, b, E, direction):
+        _, v_prev, v_new, fired, accept = self._detect_inputs(b * E, b, E)
+        directions = tuple(direction if i % 2 == 0 else 0.0 for i in range(E))
+        r = ref.fused_event_detect(v_prev, v_new, fired, accept,
+                                   directions=directions)
+        p = pi.fused_event_detect(v_prev, v_new, fired, accept,
+                                  directions=directions, interpret=True)
+        np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(p[0]))
+        np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(p[1]))
+
+    @pytest.mark.parametrize("b,E,f", [(1, 1, 4), (6, 3, 40), (5, 2, 300)])
+    def test_commit_matches_ref(self, b, E, f):
+        # f=300 exercises the feature-tiled grid with its idempotent
+        # per-tile rewrites of the E-column outputs.
+        rng, v_prev, v_new, fired, accept = self._detect_inputs(b + E + f, b, E)
+        newly, _ = ref.fused_event_detect(v_prev, v_new, fired, accept,
+                                          directions=(0.0,) * E)
+        x = jnp.asarray(rng.uniform(0.0, 1.0, (b, E)), jnp.float32)
+        y_ev = jnp.asarray(rng.standard_normal((b, E, f)), jnp.float32)
+        y_new = jnp.asarray(rng.standard_normal((b, f)), jnp.float32)
+        t0 = jnp.asarray(rng.uniform(0.0, 1.0, b), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.05, 0.2, b), jnp.float32)
+        ev_t = jnp.full((b, E), jnp.nan, jnp.float32)
+        ev_y = jnp.zeros((b, E, f), jnp.float32)
+        terminal = tuple(bool(i % 2 == 0) for i in range(E))
+        args = (x, y_ev, newly, y_new, t0, dt, fired, ev_t, ev_y)
+        r = ref.fused_event_commit(*args, terminal=terminal)
+        p = pi.fused_event_commit(*args, terminal=terminal, interpret=True)
+        for name, rr, pp in zip(
+            ("fired", "ev_t", "ev_y", "stop", "t_stop", "y_stop", "n_new"), r, p
+        ):
+            np.testing.assert_array_equal(np.asarray(rr), np.asarray(pp),
+                                          err_msg=name)
 
 
 class TestBackendDispatch:
