@@ -14,11 +14,20 @@ iterations and Jacobian evaluations.  The explicit method gets a generous but
 bounded step budget; when it hits the cap the step ratio reported is a lower
 bound.
 
+A third section benchmarks the FUSED diagonally-implicit step (factor-once
+chord Newton, one launch per iteration) against the unfused op-per-op path on
+the ``interpret`` kernel backend -- the launch-count proxy tier, same as
+``step_bench`` -- on a stiff Allen-Cahn method-of-lines problem where the
+per-iteration O(n^3) elimination the fused path removes actually dominates.
+``--bars`` enforces the committed speedup floors.
+
 ``REPRO_STIFF_SMOKE=1`` shrinks batch/horizons/budgets for CI smoke runs.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 
 import jax
@@ -26,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import solve_ivp
+from repro.kernels import ops
 
 from .common import timed, vdp
 
@@ -35,6 +45,68 @@ def robertson(t, y, args):
     r1 = -0.04 * y1 + 1e4 * y2 * y3
     r3 = 3e7 * y2 * y2
     return jnp.stack((r1, -r1 - r3, r3), axis=-1)
+
+
+def allen_cahn(t, y, args):
+    """Stiff 1D Allen-Cahn semidiscretization (Dirichlet): lam*Lap(y) + y - y^3."""
+    lam = args
+    up = jnp.concatenate([y[..., 1:], jnp.zeros_like(y[..., :1])], axis=-1)
+    dn = jnp.concatenate([jnp.zeros_like(y[..., :1]), y[..., :-1]], axis=-1)
+    return lam * (up - 2.0 * y + dn) + y - y**3
+
+
+# (method, batch, n_feat, t_end, speedup bar) for the fused-DIRK section.
+# One point keeps the interpret-tier suite affordable; n_feat is large enough
+# that the factored system, not launch bookkeeping, is the per-iteration cost.
+FUSED_POINTS = (("kvaerno5", 4, 32, 1.0, 2.0),)
+
+
+def _fused_dirk_rows(repeats=2):
+    """Fused vs unfused DIRK steps/sec on the interpret (launch-proxy) backend.
+
+    The suite normally runs under REPRO_KERNEL_BACKEND=ref in CI; this section
+    pins the interpret backend itself (and restores the previous one) so the
+    comparison always measures kernel launches, not the jnp oracle.
+    """
+    smoke = os.environ.get("REPRO_STIFF_SMOKE", "0") == "1"
+    prev = ops.backend()
+    out = []
+    try:
+        ops.set_backend("interpret")
+        for method, batch, n_feat, t_end, bar in FUSED_POINTS:
+            if not smoke:
+                t_end *= 5.0
+            lam = float((n_feat + 1) ** 2)
+            x = jnp.linspace(0.0, 1.0, n_feat + 2)[1:-1]
+            amps = 1.0 + 0.2 * jnp.arange(batch, dtype=jnp.float32)
+            y0 = amps[:, None] * jnp.sin(jnp.pi * x)[None, :]
+
+            per_sec = {}
+            for fused in (False, True):
+                fn = jax.jit(
+                    lambda y, fused=fused: solve_ivp(
+                        allen_cahn, y, None, t_start=0.0, t_end=t_end,
+                        method=method, atol=1e-7, rtol=1e-4, args=lam,
+                        max_steps=4000, fused=fused)
+                )
+                sol = fn(y0)
+                assert bool(np.all(np.asarray(sol.status) == 0)), (
+                    f"fused-DIRK bench solve failed: {np.asarray(sol.status)}")
+                if fused:
+                    assert "n_fused_steps" in sol.stats, (
+                        "fused implicit path did not engage")
+                total, _ = timed(fn, y0, repeats=repeats, reduce="min")
+                n_loop = int(np.max(np.asarray(sol.stats["n_steps"])))
+                label = "fused" if fused else "unfused"
+                per_sec[label] = n_loop / total
+                out.append((f"fused_dirk/{method}/{label}_steps_per_sec",
+                            per_sec[label], f"{n_loop} loop steps, b={batch} f={n_feat}"))
+            out.append((f"fused_dirk/{method}/fused_speedup",
+                        per_sec["fused"] / per_sec["unfused"],
+                        f"steps/sec ratio, fused over unfused (bar {bar}x)"))
+    finally:
+        ops.set_backend(prev)
+    return out
 
 
 def _solve(f, y0, t_end, method, max_steps, args=None, atol=1e-8, rtol=1e-5):
@@ -93,9 +165,43 @@ def rows():
     rexp_cap = 4000 if smoke else 50_000
     out += _problem_rows("robertson", robertson, ry0, rt_end, None,
                          imp_steps=20_000, exp_steps=rexp_cap)
+
+    # Fused-DIRK launch-proxy comparison (pins its own backend).
+    out += _fused_dirk_rows()
     return out
 
 
-if __name__ == "__main__":
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", nargs="?", const="BENCH_stiff.json", default=None,
+                        metavar="PATH")
+    parser.add_argument("--bars", action="store_true",
+                        help="fail if any fused_speedup row misses its floor "
+                             "(use when refreshing the committed baseline)")
+    opts = parser.parse_args()
+
+    bars = {f"fused_dirk/{p[0]}/fused_speedup": p[4] for p in FUSED_POINTS}
+    records = []
+    missed = []
+    print("name,value,derived")
     for name, v, extra in rows():
-        print(f"{name},{v:.1f},{extra}")
+        print(f"stiff/{name},{v},{extra}", flush=True)
+        records.append({"suite": "stiff", "name": name, "value": v, "derived": extra})
+        if opts.bars and name in bars and v < bars[name]:
+            missed.append(f"{name}: {v:.3f}x < bar {bars[name]}x")
+
+    if opts.json:
+        from .common import calibration_us
+
+        payload = {"bench": "stiff", "unit": "us for *_time rows",
+                   "calibration_us": calibration_us(), "rows": records}
+        with open(opts.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(records)} rows to {opts.json}")
+
+    if missed:
+        raise SystemExit("speedup below bar:\n  " + "\n  ".join(missed))
+
+
+if __name__ == "__main__":
+    main()

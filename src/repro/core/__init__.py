@@ -22,7 +22,7 @@ from .drivers import AutoDiffAdjoint, BacksolveAdjoint, ScanAdjoint
 from .events import Event, EventState
 from .loop import make_solver, solve_ivp, solve_ivp_scan
 from .newton import NewtonConfig, NewtonResult, newton_solve
-from .serving import GradRequest, SolveFuture, SolveRequest, SolveService, next_pow2
+from .serving import GradRequest, SolveFuture, SolveRequest, SolveService
 from .solution import Grads, Solution, Status
 from .step import FusedFallbackReason, LoopState, StepContext, StepFunction
 from .stepper import (
@@ -74,7 +74,6 @@ __all__ = [
     "SolveFuture",
     "SolveRequest",
     "SolveService",
-    "next_pow2",
     "Grads",
     "Solution",
     "Status",

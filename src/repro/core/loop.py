@@ -118,10 +118,14 @@ def solve_ivp(
             ``event_t`` / ``event_y`` / ``event_mask``.
     fused:  opt into the fused step megakernel fast path (one kernel-registry
             op per step attempt around the vf calls, zero vf launches for
-            ``polynomial_term`` dynamics).  Engages for adaptive FSAL
-            explicit methods with PID-family controllers and falls back
-            transparently otherwise; ``stats["n_fused_steps"]`` reports
-            whether it ran.
+            ``polynomial_term`` dynamics).  Engages for every explicit
+            tableau (FSAL or not, adaptive or fixed-step) and for
+            ``DiagonallyImplicitRK`` (factor-once chord Newton: one LU
+            factorization per step, one fused launch per Newton iteration)
+            under PID-family or fixed controllers, falling back transparently
+            otherwise; ``stats["n_fused_steps"]`` reports whether it ran and
+            ``stats["fused_fallback_reason"]`` (a ``FusedFallbackReason``
+            value) reports why it did not.
 
     Returns a ``Solution`` with per-instance status and statistics.
     """

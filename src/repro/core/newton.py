@@ -11,10 +11,24 @@ evaluations"), so there is never a host sync or a per-instance Python loop.
 
 The iteration is a *chord* Newton: the matrix ``M = I - dt*gamma*J`` is built
 once per solver step from a (possibly stale, per-instance refreshed) Jacobian
-and reused across all stages and iterations.  The two hot spots -- the batched
-dense solve and the masked commit + convergence norm -- run through
-``repro.kernels.ops`` (``batched_linsolve`` / ``masked_newton_update``) so
-they have ``ref`` and Pallas backends like every other solver hot spot.
+and reused across all stages and iterations.  Two linear-algebra strategies
+share the loop:
+
+``M`` path
+    Each iteration runs a full batched dense solve against ``M``
+    (``ops.batched_linsolve``) followed by the masked commit + convergence
+    norm (``ops.masked_newton_update``).  This is the external-caller
+    fallback: no precomputation required.
+
+``operator`` path (factor once)
+    The caller factors ``M`` once per step via ``ops.batched_lu_factor``
+    (partial-pivoted LU) and every iteration runs ONE fused op,
+    ``ops.fused_newton_iter``: residual, permutation scatter, the two
+    triangular back-substitutions against the prefactored LU, masked commit,
+    and the scaled-RMS norm in a single launch.  On the ref backend the LU
+    composition reproduces ``jnp.linalg.solve`` bitwise (it is the same
+    ``lax.linalg.lu`` + triangular-solve sequence ``solve`` lowers to), so
+    both paths yield identical iterates.
 """
 
 from __future__ import annotations
@@ -47,11 +61,23 @@ class NewtonConfig:
     divergence_rate
         Growth factor of the update norm between iterations that counts as
         divergence.
+    slow_iters
+        Iteration count at or above which a *converged* instance is still
+        considered slow, scheduling a Jacobian refresh for its next step.
+        ``None`` (the default) derives ``max(2, max_iters // 2)``.
     """
 
     tol: float = 1e-2
     max_iters: int = 8
     divergence_rate: float = 2.0
+    slow_iters: int | None = None
+
+    @property
+    def effective_slow_iters(self) -> int:
+        """The refresh threshold with the ``None`` default resolved."""
+        if self.slow_iters is not None:
+            return self.slow_iters
+        return max(2, self.max_iters // 2)
 
 
 class NewtonResult(NamedTuple):
@@ -75,12 +101,10 @@ class _NewtonState(NamedTuple):
 def newton_solve(
     eval_fn: Callable[[jax.Array], jax.Array],
     k0: jax.Array,  # (b, f) initial iterate (predictor)
-    M: jax.Array,  # (b, f, f) chord matrix I - dt*gamma*J
-    scale: jax.Array,  # (b, f) error scale atol + rtol*|y|
+    M: jax.Array | None = None,  # (b, f, f) chord matrix I - dt*gamma*J
+    scale: jax.Array | None = None,  # (b, f) error scale atol + rtol*|y|
     *,
-    tol: float = 1e-2,
-    max_iters: int = 8,
-    divergence_rate: float = 2.0,
+    operator: tuple[jax.Array, jax.Array] | None = None,
     config: NewtonConfig | None = None,
 ) -> NewtonResult:
     """Solve ``k = eval_fn(k)`` per instance by masked chord-Newton iteration.
@@ -88,18 +112,31 @@ def newton_solve(
     ``eval_fn`` is the batched stage map ``k -> f(t_i, y_pred + dt*a_ii*k)``;
     the residual is ``g(k) = k - eval_fn(k)`` and each iteration applies
     ``k <- k - M^{-1} g(k)`` where an instance is still active.  Convergence is
-    per instance: the scaled RMS of the update falls below ``tol`` (measured in
-    the same atol/rtol units as the step acceptance test, so ``tol`` is the
-    fraction of the local error budget the inexact solve may consume).
-    Divergence -- non-finite values or the update norm growing by more than
-    ``divergence_rate`` between iterations -- deactivates the instance with
-    ``diverged`` set; the stepper reports that through the controller's reject
-    path rather than poisoning the whole batch.
+    per instance: the scaled RMS of the update falls below ``config.tol``
+    (measured in the same atol/rtol units as the step acceptance test, so
+    ``tol`` is the fraction of the local error budget the inexact solve may
+    consume).  Divergence -- non-finite values or the update norm growing by
+    more than ``config.divergence_rate`` between iterations -- deactivates the
+    instance with ``diverged`` set; the stepper reports that through the
+    controller's reject path rather than poisoning the whole batch.
 
-    A ``config`` bundle overrides the individual keyword knobs.
+    The linear solve comes from exactly one of two sources:
+
+    - ``M``: the chord matrix itself; each iteration runs a fresh batched
+      dense solve (``ops.batched_linsolve``).
+    - ``operator``: the ``(lu, permutation)`` pair from
+      ``ops.batched_lu_factor(M)``; each iteration runs the single fused
+      ``ops.fused_newton_iter`` launch against the prefactored LU.
+
+    All numeric knobs live on ``config`` (a :class:`NewtonConfig`); ``None``
+    means the defaults.
     """
-    if config is not None:
-        tol, max_iters, divergence_rate = config.tol, config.max_iters, config.divergence_rate
+    if (M is None) == (operator is None):
+        raise TypeError("newton_solve needs exactly one of M= or operator=")
+    if scale is None:
+        raise TypeError("newton_solve requires scale")
+    cfg = config if config is not None else NewtonConfig()
+    tol, max_iters, divergence_rate = cfg.tol, cfg.max_iters, cfg.divergence_rate
     b = k0.shape[0]
     inf = jnp.asarray(jnp.inf, k0.dtype)
 
@@ -107,9 +144,14 @@ def newton_solve(
         return jnp.any(s.active) & (s.it < max_iters)
 
     def body(s: _NewtonState):
-        g = s.k - eval_fn(s.k)
-        delta = ops.batched_linsolve(M, g)
-        k_new, res_norm = ops.masked_newton_update(s.k, delta, s.active, scale)
+        if operator is not None:
+            lu, perm = operator
+            k_new, res_norm = ops.fused_newton_iter(
+                lu, perm, s.k, eval_fn(s.k), s.active, scale)
+        else:
+            g = s.k - eval_fn(s.k)
+            delta = ops.batched_linsolve(M, g)
+            k_new, res_norm = ops.masked_newton_update(s.k, delta, s.active, scale)
         finite = jnp.isfinite(res_norm)
         conv_now = s.active & finite & (res_norm <= tol)
         div_now = s.active & (~finite | ((s.it > 0) & (res_norm > divergence_rate * s.prev_norm)))

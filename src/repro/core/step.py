@@ -58,7 +58,7 @@ from .events import init_event_state, normalize_events
 from .controller import PIDController
 from .solution import Solution, Status
 from .static import freeze, frozen_setattr, register_config_pytree
-from .stepper import AbstractStepper, ExplicitRK, _tableau_arrays
+from .stepper import AbstractStepper, DiagonallyImplicitRK, ExplicitRK, _tableau_arrays
 from .terms import ODETerm, as_term
 
 
@@ -73,14 +73,17 @@ class FusedFallbackReason(enum.IntEnum):
     """
 
     ENGAGED = 0
-    # The stepper is not (exactly) ExplicitRK: implicit methods need the
-    # masked-Newton inner loop, and stepper subclasses may override the stage
-    # recursion the kernel bakes in.
+    # The stepper is not (exactly) ExplicitRK or DiagonallyImplicitRK:
+    # subclasses may override the stage recursion the kernel bakes in.
     NOT_EXPLICIT_RK = 1
     # The controller is not (exactly) PIDController or FixedController:
     # the kernel bakes in those two accept/next-dt programs only, and
     # subclasses may override ``__call__``.
     UNSUPPORTED_CONTROLLER = 2
+    # The stepper is a DiagonallyImplicitRK SUBCLASS: the fused implicit
+    # path bakes in the exact factor-once chord-Newton stage sweep, which a
+    # subclass may override.
+    UNSUPPORTED_IMPLICIT = 3
 
 
 class LoopState(NamedTuple):
@@ -176,10 +179,12 @@ class StepFunction:
         self.event_bisect_iters = event_bisect_iters
         self.extra_stats = tuple(extra_stats)
         self.fused = bool(fused)
-        # The fused megakernel fast path engages for EVERY explicit-RK
-        # configuration the kernel's two baked-in controller programs cover:
-        # any explicit tableau (FSAL or not, adaptive or fixed -- non-FSAL
-        # trailing evaluations fold in) driven by exactly PIDController
+        # The fused megakernel fast path engages for EVERY configuration the
+        # kernel's baked-in programs cover: any explicit tableau (FSAL or
+        # not, adaptive or fixed -- non-FSAL trailing evaluations fold in) OR
+        # any diagonally-implicit tableau (the factor-once chord-Newton sweep
+        # runs one ``fused_newton_iter`` launch per iteration and hands the
+        # megakernel its ``failed`` mask), driven by exactly PIDController
         # (``ctrl_mode="pid"``) or exactly FixedController
         # (``ctrl_mode="fixed"``).  Exact-type checks, not isinstance:
         # subclasses may override ``__call__``/``step`` with programs the
@@ -187,17 +192,26 @@ class StepFunction:
         # path transparently -- same results, one launch per op instead of
         # one per step -- and records why in ``fused_fallback_reason``.
         mode, why = None, FusedFallbackReason.ENGAGED
-        if type(stepper) is not ExplicitRK:
-            why = FusedFallbackReason.NOT_EXPLICIT_RK
-        elif type(self.controller) is PIDController:
-            mode = "pid"
-        elif type(self.controller) is FixedController:
-            mode = "fixed"
+        implicit = False
+        if type(stepper) is ExplicitRK:
+            pass
+        elif type(stepper) is DiagonallyImplicitRK:
+            implicit = True
+        elif isinstance(stepper, DiagonallyImplicitRK):
+            why = FusedFallbackReason.UNSUPPORTED_IMPLICIT
         else:
-            why = FusedFallbackReason.UNSUPPORTED_CONTROLLER
+            why = FusedFallbackReason.NOT_EXPLICIT_RK
+        if why is FusedFallbackReason.ENGAGED:
+            if type(self.controller) is PIDController:
+                mode = "pid"
+            elif type(self.controller) is FixedController:
+                mode = "fixed"
+            else:
+                why = FusedFallbackReason.UNSUPPORTED_CONTROLLER
         self._fused_mode = mode if self.fused else None
         self._fused_fallback = int(why)
         self._fused_path = self._fused_mode is not None
+        self._fused_implicit = implicit and self._fused_path
         self._rebuild_derived()
         freeze(self)
 
@@ -534,13 +548,18 @@ class StepFunction:
         Mirrors ``step`` expression-for-expression (the ref-backend op is
         composed of the same primitives in the same order, so fused and
         unfused solves are bitwise-identical there); only engaged when
-        ``_fused_path`` holds (``ExplicitRK`` -- any explicit tableau, FSAL
-        or not, adaptive or fixed -- driven by ``PIDController`` or
-        ``FixedController``), so there is no solver-failure path to handle
-        here.  Non-FSAL tableaus fold their trailing evaluation in: the
-        polynomial megakernel runs it as one more in-kernel Horner pass,
-        general terms evaluate ``vf`` once between the stage sweep and the
-        kernel (exactly like ``rk_step``, on every attempt).
+        ``_fused_path`` holds (``ExplicitRK`` or ``DiagonallyImplicitRK`` --
+        any registered tableau -- driven by ``PIDController`` or
+        ``FixedController``).  Non-FSAL tableaus fold their trailing
+        evaluation in: the polynomial megakernel runs it as one more
+        in-kernel Horner pass, general terms evaluate ``vf`` once between
+        the stage sweep and the kernel (exactly like ``rk_step``, on every
+        attempt).  Diagonally-implicit steppers run the factor-once
+        chord-Newton sweep (``fused_stage_parts``) and thread the
+        per-instance ``solver_failed`` mask through the kernel's ``failed=``
+        input, which forces an infinite error ratio BEFORE the controller
+        and excludes those instances from ``accept`` -- the same
+        divergence-to-reject contract as the unfused path, kept in-kernel.
         """
         term, stepper, controller = self.term, self.stepper, self.controller
         t_eval, t_start, t_end, direction = consts
@@ -569,8 +588,20 @@ class StepFunction:
             state.cstate.prev_inv_ratio, state.cstate.prev2_inv_ratio,
             self.atol, self.rtol,
         )
-        poly = getattr(term, "poly_coeffs", ())
-        if poly:
+        poly = getattr(term, "poly_coeffs", ()) if not self._fused_implicit else ()
+        scarry_new, solver_failed, stats_aux = state.scarry, None, None
+        if self._fused_implicit:
+            (K, f1, n_f_evals, carry_prop, solver_failed,
+             stats_aux) = stepper.fused_stage_parts(
+                term, state.t, safe_dt, state.y, state.f0, args,
+                carry=state.scarry, scale=self._scale(state.y),
+            )
+            out = ops.fused_step(
+                state.y, K, f1, *common,
+                b_sol=b_sol_w, b_err=b_err_w, ctrl=ctrl,
+                want_coeffs=want_coeffs, ctrl_mode=mode, failed=solver_failed,
+            )
+        elif poly:
             out = ops.fused_step_poly(
                 state.y, state.f0, *common,
                 a=tab.a, c=tab.c, b_sol=b_sol_w, b_err=b_err_w,
@@ -602,6 +633,10 @@ class StepFunction:
         (y1, err_ratio, accept, y_out, f_out, t_out, dt_out,
          new_inv, new_inv2, coeffs) = out
         cstate_new = ControllerState(new_inv, new_inv2)
+        if self._fused_implicit:
+            scarry_new = stepper.commit_carry(
+                state.scarry, carry_prop, accept, state.running
+            )
 
         done_now = accept & will_finish
         dt_floor = 8.0 * eps * jnp.maximum(jnp.abs(state.t), jnp.abs(t_end))
@@ -655,7 +690,7 @@ class StepFunction:
             n_f_evals=n_f_evals,
             n_written=n_written,
             err_ratio=err_ratio,
-            aux=None,
+            aux=stats_aux,
             n_events=adv.n_new if adv is not None else None,
         )
         stats = self._apply_stat_updates(dict(state.stats), ctx)
@@ -668,7 +703,9 @@ class StepFunction:
             dt=dt,
             y=y,
             f0=f0,
-            scarry=state.scarry,  # explicit steppers carry () across steps
+            # Explicit steppers carry () across steps; the implicit fast path
+            # commits its Jacobian carry exactly like the unfused step.
+            scarry=scarry_new,
             cstate=cstate_new,
             running=running,
             status=status,

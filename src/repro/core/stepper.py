@@ -26,6 +26,7 @@ pid_controller())`` or ``AutoDiffAdjoint("kvaerno5")``).
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, NamedTuple
 
 import jax
@@ -342,18 +343,11 @@ class DiagonallyImplicitRK(AbstractStepper):
     its ``refresh`` flag is set (Newton failed or converged slowly), so
     well-behaved instances amortize one Jacobian over many steps.
 
-    Newton knobs:
-
-    newton_tol
-        Convergence threshold for the scaled RMS of the Newton update,
-        measured in the step's atol/rtol error units -- the fraction of the
-        local error budget the inexact inner solve may consume.
-    max_newton_iters
-        Per-stage iteration cap; an instance that exhausts it is marked
-        failed, which the step function turns into a controller reject.
-    slow_iters
-        Stages needing at least this many iterations set the instance's
-        Jacobian refresh flag for the next step (default: half the cap).
+    All inner-solver knobs live on ONE object: pass
+    ``newton=NewtonConfig(tol=..., max_iters=..., divergence_rate=...,
+    slow_iters=...)``.  The legacy loose kwargs (``newton_tol``,
+    ``max_newton_iters``, ``slow_iters``) are deprecated aliases that emit a
+    ``DeprecationWarning`` and cannot be combined with ``newton=``.
 
     Statistics: ``n_f_evals`` (batched Newton evaluations, overhanging),
     ``n_newton_iters`` (per-instance inner iterations while running) and
@@ -364,8 +358,9 @@ class DiagonallyImplicitRK(AbstractStepper):
         self,
         method: str | ButcherTableau = "kvaerno5",
         *,
-        newton_tol: float = 1e-2,
-        max_newton_iters: int = 8,
+        newton: NewtonConfig | None = None,
+        newton_tol: float | None = None,
+        max_newton_iters: int | None = None,
         slow_iters: int | None = None,
     ):
         self.tableau = get_tableau(method) if isinstance(method, str) else method
@@ -374,8 +369,31 @@ class DiagonallyImplicitRK(AbstractStepper):
                 f"tableau {self.tableau.name!r} is explicit; use ExplicitRK"
             )
         self.gamma = self.tableau.diagonal  # validates the constant diagonal
-        self.newton = NewtonConfig(tol=newton_tol, max_iters=max_newton_iters)
-        self.slow_iters = slow_iters if slow_iters is not None else max(2, max_newton_iters // 2)
+        legacy = {
+            "newton_tol": newton_tol,
+            "max_newton_iters": max_newton_iters,
+            "slow_iters": slow_iters,
+        }
+        used = [name for name, v in legacy.items() if v is not None]
+        if used:
+            if newton is not None:
+                raise TypeError(
+                    f"cannot combine newton= with legacy kwarg(s) {used}; "
+                    "put every knob on the NewtonConfig"
+                )
+            warnings.warn(
+                f"DiagonallyImplicitRK kwarg(s) {used} are deprecated; pass "
+                "newton=NewtonConfig(tol=..., max_iters=..., slow_iters=...) "
+                "instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            newton = NewtonConfig(
+                tol=newton_tol if newton_tol is not None else 1e-2,
+                max_iters=max_newton_iters if max_newton_iters is not None else 8,
+                slow_iters=slow_iters,
+            )
+        self.newton = newton if newton is not None else NewtonConfig()
         freeze(self)
 
     # The pre-NewtonConfig knob names, kept readable for callers/tests.
@@ -387,6 +405,10 @@ class DiagonallyImplicitRK(AbstractStepper):
     def max_newton_iters(self) -> int:
         return self.newton.max_iters
 
+    @property
+    def slow_iters(self) -> int:
+        return self.newton.effective_slow_iters
+
     def init_carry(self, term, t0, y0, f0, args) -> DIRKCarry:
         b, f = y0.shape
         return DIRKCarry(
@@ -394,10 +416,23 @@ class DiagonallyImplicitRK(AbstractStepper):
             refresh=jnp.ones((b,), dtype=bool),
         )
 
-    def step(self, term, t, dt, y, f0, args, carry=(), scale=None):
+    def _stage_sweep(self, term, t, dt, y, f0, args, carry, scale, *, factor_once):
+        """The shared stage recursion of the unfused and fused DIRK paths:
+        per-instance Jacobian refresh, chord-matrix build, and one masked
+        Newton solve per implicit stage.  ``factor_once=False`` is the
+        classic path (each iteration re-solves against ``M`` through
+        ``batched_linsolve``); ``factor_once=True`` factors ``M`` ONCE via
+        ``ops.batched_lu_factor`` and runs every Newton iteration as one
+        ``ops.fused_newton_iter`` launch against the prefactored LU.  On the
+        ref backend the two produce bitwise-identical iterates (the LU
+        composition is exactly what ``jnp.linalg.solve`` lowers to), so the
+        fused and unfused DIRK solves stay bitwise-equal there.
+
+        Returns ``(K, carry_out, failed, n_static_evals, n_evals, stats_aux)``.
+        """
         tab = self.tableau
         dtype = y.dtype
-        a, c, b_sol, b_err = _tableau_arrays(tab, dtype)
+        a, c, _, _ = _tableau_arrays(tab, dtype)
         if not isinstance(carry, DIRKCarry):
             carry = self.init_carry(term, t, y, f0, args)
         if scale is None:
@@ -413,6 +448,7 @@ class DiagonallyImplicitRK(AbstractStepper):
         n_jac_evals = carry.refresh.astype(jnp.int32)
         eye = jnp.eye(y.shape[1], dtype=dtype)
         M = eye - (dt * self.gamma)[:, None, None] * J
+        operator = ops.batched_lu_factor(M) if factor_once else None
 
         ks: list[jax.Array] = []
         failed = jnp.zeros(dt.shape, dtype=bool)
@@ -420,6 +456,7 @@ class DiagonallyImplicitRK(AbstractStepper):
         n_newton_iters = jnp.zeros(dt.shape, dtype=jnp.int32)
         n_evals = jnp.zeros((), dtype=jnp.int32)
         n_static_evals = 0
+        slow_iters = self.newton.effective_slow_iters
         for i in range(tab.stages):
             ti = t + c[i] * dt
             y_pred = y if i == 0 else ops.stage_accum(y, dt, jnp.stack(ks), a[i, :i])
@@ -435,26 +472,39 @@ class DiagonallyImplicitRK(AbstractStepper):
                 def eval_fn(k, ti=ti, y_pred=y_pred, dtg=dtg):
                     return term.vf(ti, y_pred + dtg * k, args)
 
-                res = newton_solve(
-                    eval_fn,
-                    ks[-1] if ks else f0,  # predictor: the previous stage slope
-                    M,
-                    # Convergence is measured on the stage VALUE increment
-                    # dt*a_ii*delta_k (state units), not the raw slope update,
-                    # so the test matches the atol/rtol error scale.
-                    scale / jnp.maximum(jnp.abs(dtg), jnp.finfo(dtype).tiny),
-                    config=self.newton,
-                )
+                # Convergence is measured on the stage VALUE increment
+                # dt*a_ii*delta_k (state units), not the raw slope update,
+                # so the test matches the atol/rtol error scale.
+                stage_scale = scale / jnp.maximum(jnp.abs(dtg), jnp.finfo(dtype).tiny)
+                pred = ks[-1] if ks else f0  # predictor: the previous stage slope
+                if factor_once:
+                    res = newton_solve(
+                        eval_fn, pred, scale=stage_scale,
+                        operator=operator, config=self.newton,
+                    )
+                else:
+                    res = newton_solve(
+                        eval_fn, pred, M, stage_scale, config=self.newton,
+                    )
                 ks.append(res.k)
                 failed = failed | ~res.converged
-                slow = slow | (res.n_iters >= self.slow_iters)
+                slow = slow | (res.n_iters >= slow_iters)
                 n_newton_iters = n_newton_iters + res.n_iters
                 n_evals = n_evals + res.n_evals
 
-        K = jnp.stack(ks)
+        stats_aux = {"n_newton_iters": n_newton_iters, "n_jac_evals": n_jac_evals}
+        carry_out = DIRKCarry(jac=J, refresh=failed | slow)
+        return jnp.stack(ks), carry_out, failed, n_static_evals, n_evals, stats_aux
+
+    def step(self, term, t, dt, y, f0, args, carry=(), scale=None):
+        tab = self.tableau
+        _, _, b_sol, b_err = _tableau_arrays(tab, y.dtype)
+        K, carry_out, failed, n_static_evals, n_evals, stats_aux = self._stage_sweep(
+            term, t, dt, y, f0, args, carry, scale, factor_once=False
+        )
         y1, err = ops.fused_update(y, K, dt, b_sol, b_err)
         if tab.stiffly_accurate and tab.c[-1] == 1.0:
-            f1 = ks[-1]  # the last stage derivative IS f(t + dt, y1)
+            f1 = K[-1]  # the last stage derivative IS f(t + dt, y1)
         else:
             f1 = term.vf(t + dt, y1, args)
             n_static_evals += 1
@@ -464,10 +514,37 @@ class DiagonallyImplicitRK(AbstractStepper):
             err=err,
             f1=f1,
             n_f_evals=n_evals + n_static_evals,
-            carry=DIRKCarry(jac=J, refresh=failed | slow),
+            carry=carry_out,
             solver_failed=failed,
-            stats_aux={"n_newton_iters": n_newton_iters, "n_jac_evals": n_jac_evals},
+            stats_aux=stats_aux,
         )
+
+    def fused_stage_parts(self, term, t, dt, y, f0, args, carry, scale):
+        """The DIRK half of the fused fast path: the stage sweep with the
+        factor-once Newton strategy (one ``batched_lu_factor`` per step, one
+        ``fused_newton_iter`` launch per Newton iteration), plus the trailing
+        derivative -- everything the ``fused_step`` megakernel needs as
+        inputs.  The combine/norm/controller/commit happen in-kernel, with
+        the per-instance ``solver_failed`` mask threaded through its
+        ``failed=`` input so divergence still lands as a controller reject.
+
+        Returns ``(K, f1, n_f_evals, carry, solver_failed, stats_aux)``.
+        """
+        tab = self.tableau
+        _, _, b_sol, b_err = _tableau_arrays(tab, y.dtype)
+        K, carry_out, failed, n_static_evals, n_evals, stats_aux = self._stage_sweep(
+            term, t, dt, y, f0, args, carry, scale, factor_once=True
+        )
+        if tab.stiffly_accurate and tab.c[-1] == 1.0:
+            f1 = K[-1]
+        else:
+            # Rebuild y1 through the same fused_update program the megakernel
+            # applies internally (XLA CSEs the two on the ref backend), then
+            # one trailing vf launch -- exactly like ``step``.
+            y1, _ = ops.fused_update(y, K, dt, b_sol, b_err)
+            f1 = term.vf(t + dt, y1, args)
+            n_static_evals += 1
+        return K, f1, n_evals + n_static_evals, carry_out, failed, stats_aux
 
     def commit_carry(self, old, new, accept, running):
         """Advance the Jacobian for running instances.  Two refresh-flag

@@ -82,6 +82,8 @@ _OP_NAMES = (
     "error_norm",
     "interp_eval",
     "batched_linsolve",
+    "batched_lu_factor",
+    "fused_newton_iter",
     "masked_newton_update",
     "masked_bisect_refine",
     "fused_step",

@@ -393,6 +393,196 @@ def batched_linsolve(A, rhs, *, interpret=False):
     return out[:b, :f]
 
 
+# ----------------------------------------------------- batched LU factorization
+
+
+def _lu_factor_kernel(a_ref, lu_out, perm_out, *, n):
+    """Partial-pivoted LU factorization, vectorized over the batch tile.
+
+    Same memory plan as ``_linsolve_kernel`` (one program owns BB instances
+    with the full (R, C) matrix in VMEM, one-hot row extraction/swap, pivot
+    by max-reduction + first-match), but instead of eliminating a right-hand
+    side it stores the factors in place -- the unit-lower multipliers below
+    the diagonal, U on and above -- and tracks the row permutation as a
+    (BB, R) int32 vector (entry swaps mirror the row swaps).  This runs ONCE
+    per implicit solver step; every ``fused_newton_iter`` launch then
+    back-substitutes against the stored factors, which is what turns the
+    per-iteration O(n^3) elimination into O(n^2) triangular solves.
+    """
+    A = a_ref[...]  # (BB, R, C)
+    bt, R, C = A.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bt, R), 1)  # (BB, R)
+    row3 = jax.lax.broadcasted_iota(jnp.int32, (bt, R, C), 1)
+    col3 = jax.lax.broadcasted_iota(jnp.int32, (bt, R, C), 2)
+
+    def body(i, carry):
+        A, perm = carry
+        col = jax.lax.dynamic_slice_in_dim(A, i, 1, axis=2)[..., 0]  # (BB, R)
+        mag = jnp.where(rows >= i, jnp.abs(col), -1.0)
+        m = jnp.max(mag, axis=1, keepdims=True)
+        cand = mag == m
+        p = jnp.min(jnp.where(cand, rows, R), axis=1, keepdims=True)  # (BB, 1)
+        is_i = rows == i
+        is_p = rows == p
+        Ai = jnp.sum(jnp.where(is_i[:, :, None], A, 0.0), axis=1)  # (BB, C)
+        Ap = jnp.sum(jnp.where(is_p[:, :, None], A, 0.0), axis=1)
+        # swap rows i <-> p (no-op when p == i: is_i wins and Ap == Ai)
+        A = jnp.where(
+            is_i[:, :, None], Ap[:, None, :], jnp.where(is_p[:, :, None], Ai[:, None, :], A)
+        )
+        # dtype pinned: under x64 jnp.sum would promote int32 -> int64 and
+        # break the fori_loop carry contract
+        pi = jnp.sum(jnp.where(is_i, perm, 0), axis=1, keepdims=True,
+                     dtype=jnp.int32)
+        pp = jnp.sum(jnp.where(is_p, perm, 0), axis=1, keepdims=True,
+                     dtype=jnp.int32)
+        perm = jnp.where(is_i, pp, jnp.where(is_p, pi, perm))
+        # multipliers below the diagonal; eliminate only the trailing columns
+        piv = jax.lax.dynamic_slice_in_dim(Ap, i, 1, axis=1)  # (BB, 1)
+        colnew = jax.lax.dynamic_slice_in_dim(A, i, 1, axis=2)[..., 0]
+        factor = jnp.where(rows > i, colnew / piv, 0.0)  # (BB, R)
+        A = A - jnp.where(col3 > i, factor[:, :, None] * Ap[:, None, :], 0.0)
+        # store the multipliers in place of the eliminated column entries
+        A = jnp.where((col3 == i) & (row3 > i), factor[:, :, None], A)
+        return A, perm
+
+    A, perm = jax.lax.fori_loop(0, n, body, (A, rows))
+    lu_out[...] = A
+    perm_out[...] = perm
+
+
+def batched_lu_factor(A, *, interpret=False):
+    b, f = A.shape[0], A.shape[1]
+    # Same padding plan as ``batched_linsolve``: rows to the 8-sublane
+    # layout, columns to the lane dimension, identity on the padded diagonal
+    # so the padded block never pivots into the real rows.
+    Ap = _pad_to(_pad_to(_pad_to(A, 0, BB), 1, BB), 2, BF)
+    bp_, fr, fc = Ap.shape
+    pad_eye = (
+        (jnp.arange(fr)[:, None] == jnp.arange(fc)[None, :])
+        & (jnp.arange(fr)[:, None] >= f)
+    ).astype(A.dtype)
+    Ap = Ap + pad_eye[None, :, :]
+    lu, perm = pl.pallas_call(
+        functools.partial(_lu_factor_kernel, n=f),
+        grid=(bp_ // BB,),
+        in_specs=[pl.BlockSpec((BB, fr, fc), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((BB, fr, fc), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp_, fr, fc), A.dtype),
+            jax.ShapeDtypeStruct((bp_, fr), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Ap)
+    return lu[:b, :f, :f], perm[:b, :f]
+
+
+# ----------------------------------------------------------- fused newton iter
+
+
+def _newton_iter_kernel(
+    lu_ref, perm_ref, k_ref, fk_ref, act_ref, scale_ref, k_out, res_out,
+    *, n, n_feat,
+):
+    """One whole chord-Newton iteration against the prefactored LU, as ONE
+    program per batch tile: residual, permutation scatter, forward (unit
+    lower) and backward (upper) substitution, the masked commit and the
+    scaled-RMS convergence norm -- the fusion of ``batched_linsolve`` +
+    ``masked_newton_update`` with the elimination already paid for.
+
+    Substitution is COLUMN-oriented: each fori iteration pulls one factor
+    column with a lane-axis ``dynamic_slice`` (cheap; the sublane axis never
+    needs dynamic indexing) and does O(R) vector work, so a whole triangular
+    solve is O(n^2) -- this is what makes the per-iteration launch strictly
+    cheaper than the O(n^3) elimination it replaces.  The padded tail never
+    mixes in: padded residual entries are 0 and real-row padded-column
+    factors are 0.
+    """
+    LU = lu_ref[...]  # (BB, R, C)
+    bt, R, _ = LU.shape
+    perm = perm_ref[...]  # (BB, R) int32
+    k = k_ref[...]  # (BB, R)
+    g = k - fk_ref[...]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bt, R), 1)
+    src3 = jax.lax.broadcasted_iota(jnp.int32, (bt, R, R), 2)
+
+    # permutation row-gather: x[r] = g[perm[r]] (one-hot, no dynamic gathers)
+    x = jnp.sum(jnp.where(perm[:, :, None] == src3, g[:, None, :], 0.0), axis=2)
+
+    def col_of(j):
+        return jax.lax.dynamic_slice_in_dim(LU, j, 1, axis=2)[..., 0]  # (BB, R)
+
+    def at(j, v):  # extract entry j of a (BB, R) vector as (BB, 1)
+        return jnp.sum(jnp.where(rows == j, v, 0.0), axis=1, keepdims=True)
+
+    def fwd(j, x):  # unit lower: x[i > j] -= L[i, j] * x[j]
+        return jnp.where(rows > j, x - col_of(j) * at(j, x), x)
+
+    x = jax.lax.fori_loop(0, n, fwd, x)
+
+    def bwd(t, x):  # upper: x[j] /= U[j, j]; then x[i < j] -= U[i, j] * x[j]
+        j = n - 1 - t
+        Ucol = col_of(j)
+        xj = at(j, x) / at(j, Ucol)
+        return jnp.where(rows == j, xj, jnp.where(rows < j, x - Ucol * xj, x))
+
+    delta = jax.lax.fori_loop(0, n, bwd, x)
+
+    active = act_ref[...]  # (BB, 1) bool
+    k_out[...] = jnp.where(active, k - delta, k)
+    r = delta / scale_ref[...]
+    res_out[...] = jnp.sqrt(jnp.sum(r * r, axis=1, keepdims=True) / n_feat)
+
+
+def fused_newton_iter(lu, perm, k, fk, active, scale, *, interpret=False):
+    b, f = k.shape
+    scale = jnp.broadcast_to(jnp.asarray(scale, k.dtype), (b, f))
+    lup = _pad_to(_pad_to(_pad_to(lu, 0, BB), 1, BB), 2, BF)
+    bp_, fr, fc = lup.shape
+    # Re-seat the padded diagonal (the wrapper contract is the sliced true
+    # factors) so the backward substitution never divides by a padded zero
+    # on real batch rows; padded residual entries are 0 either way.
+    pad_eye = (
+        (jnp.arange(fr)[:, None] == jnp.arange(fc)[None, :])
+        & (jnp.arange(fr)[:, None] >= f)
+    ).astype(lu.dtype)
+    lup = lup + pad_eye[None, :, :]
+    ids = jnp.arange(fr, dtype=perm.dtype)
+    permp = _pad_to(_pad_to(perm, 0, BB), 1, BB)
+    permp = jnp.where(ids[None, :] >= f, ids[None, :], permp)
+    # Padded deltas are 0 and padded scales 1 -> padded cells add 0 to the
+    # sum of squares; divide by the TRUE feature count.
+    kp = _pad_to(_pad_to(k, 0, BB), 1, BB)
+    fkp = _pad_to(_pad_to(fk, 0, BB), 1, BB)
+    sp = _pad_to(_pad_to(scale, 0, BB, value=1), 1, BB, value=1)
+    ap = _pad_to(active[:, None], 0, BB)
+    k_new, res = pl.pallas_call(
+        functools.partial(_newton_iter_kernel, n=f, n_feat=float(f)),
+        grid=(bp_ // BB,),
+        in_specs=[
+            pl.BlockSpec((BB, fr, fc), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+            pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+            pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+            pl.BlockSpec((BB, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BB, fr), lambda i: (i, 0)),
+            pl.BlockSpec((BB, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp_, fr), k.dtype),
+            jax.ShapeDtypeStruct((bp_, 1), k.dtype),
+        ],
+        interpret=interpret,
+    )(lup, permp, kp, fkp, ap, sp)
+    return k_new[:b, :f], res[:b, 0]
+
+
 # --------------------------------------------------------- masked newton update
 
 
@@ -487,18 +677,25 @@ def _ctrl_decide(ratio, dt_cur, run, pi1, pi2, *, ctrl, ctrl_mode):
 
 def _ctrl_commit(
     y, y1, err, f0, f1, t, t_new, dt_cur, run, pi1, pi2, atol, rtol, sdt,
-    *, ctrl, ctrl_mode, n_feat,
+    *, ctrl, ctrl_mode, n_feat, failed=None,
 ):
     """Shared kernel tail: WRMS norm -> controller decision -> masked commit
     -> Hermite coefficients, on one (BB, fp) tile.  Mirrors the ref-oracle
-    expressions exactly."""
+    expressions exactly.  ``failed`` (solver-failure column, implicit steps)
+    forces the ratio to inf BEFORE the decision -- so the pid program rejects
+    and shrinks dt -- and masks accept afterwards for the fixed program,
+    matching ``ref.fused_step``'s order of operations."""
     scale = atol + rtol * jnp.maximum(jnp.abs(y), jnp.abs(y1))
     r = err / scale
     ratio = jnp.sqrt(jnp.sum(r * r, axis=1, keepdims=True) / n_feat)  # (BB, 1)
+    if failed is not None:
+        ratio = jnp.where(failed, jnp.inf, ratio)
 
     accept, dt_next, new_inv, new_inv2 = _ctrl_decide(
         ratio, dt_cur, run, pi1, pi2, ctrl=ctrl, ctrl_mode=ctrl_mode
     )
+    if failed is not None:
+        accept = accept & ~failed
     y_out = jnp.where(accept, y1, y)
     f_out = jnp.where(accept, f1, f0)
     t_out = jnp.where(accept, t_new, t)
@@ -546,7 +743,7 @@ def _poly_stages(y, sdt, f0, poly_ref, a, s):
 
 def _fused_step_kernel(
     y_ref, k_ref, f1_ref, t_ref, tnew_ref, dtc_ref, sdt_ref, run_ref,
-    pi1_ref, pi2_ref, atol_ref, rtol_ref,
+    pi1_ref, pi2_ref, atol_ref, rtol_ref, fail_ref,
     y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
     i1_out, i2_out, c1_out, c2_out, c3_out,
     *, b_sol, b_err, ctrl, ctrl_mode, n_feat,
@@ -558,7 +755,7 @@ def _fused_step_kernel(
     ratio, accept, y_out, f_out, t_out, dt_out, i1, i2, (c1, c2, c3) = _ctrl_commit(
         y, y1, err, k_ref[0], f1_ref[...], t_ref[...], tnew_ref[...], dtc_ref[...],
         run_ref[...], pi1_ref[...], pi2_ref[...], atol_ref[...], rtol_ref[...], sdt,
-        ctrl=ctrl, ctrl_mode=ctrl_mode, n_feat=n_feat,
+        ctrl=ctrl, ctrl_mode=ctrl_mode, n_feat=n_feat, failed=fail_ref[...] != 0,
     )
     y1_out[...] = y1
     ratio_out[...] = ratio
@@ -631,7 +828,7 @@ def _tiled_commit(
     t_ref, tnew_ref, dtc_ref, run_ref, pi1_ref, pi2_ref, atol_ref, rtol_ref,
     y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
     i1_out, i2_out, c1_out, c2_out, c3_out,
-    *, ctrl, ctrl_mode, n_feat, nf_tiles,
+    *, ctrl, ctrl_mode, n_feat, nf_tiles, fail_ref=None,
 ):
     """The two-phase tail shared by the tiled megakernels: WRMS partial-sum
     accumulation + controller decision (phase 0), masked tile commits +
@@ -651,12 +848,17 @@ def _tiled_commit(
         @pl.when(k == nf_tiles - 1)
         def _decide():
             ratio = jnp.sqrt(ratio_out[...] / n_feat)  # (BB, 1)
+            if fail_ref is not None:  # solver-failure column (implicit steps)
+                failed = fail_ref[...] != 0
+                ratio = jnp.where(failed, jnp.inf, ratio)
             run = run_ref[...]
             dt_cur = dtc_ref[...]
             accept, dt_next, new_inv, new_inv2 = _ctrl_decide(
                 ratio, dt_cur, run, pi1_ref[...], pi2_ref[...],
                 ctrl=ctrl, ctrl_mode=ctrl_mode,
             )
+            if fail_ref is not None:
+                accept = accept & ~failed
             ratio_out[...] = ratio
             acc_out[...] = accept.astype(jnp.int32)
             to_out[...] = jnp.where(accept, tnew_ref[...], t_ref[...])
@@ -677,7 +879,7 @@ def _tiled_commit(
 
 def _fused_step_tiled_kernel(
     y_ref, k_ref, f1_ref, t_ref, tnew_ref, dtc_ref, sdt_ref, run_ref,
-    pi1_ref, pi2_ref, atol_ref, rtol_ref,
+    pi1_ref, pi2_ref, atol_ref, rtol_ref, fail_ref,
     y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
     i1_out, i2_out, c1_out, c2_out, c3_out,
     *, b_sol, b_err, ctrl, ctrl_mode, n_feat, nf_tiles,
@@ -693,6 +895,7 @@ def _fused_step_tiled_kernel(
         y1_out, ratio_out, acc_out, yo_out, fo_out, to_out, dto_out,
         i1_out, i2_out, c1_out, c2_out, c3_out,
         ctrl=ctrl, ctrl_mode=ctrl_mode, n_feat=n_feat, nf_tiles=nf_tiles,
+        fail_ref=fail_ref,
     )
 
 
@@ -797,7 +1000,7 @@ def _fused_returns(outs, y, b, f, want_coeffs):
 def fused_step(
     y, K, f1, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
     atol, rtol, *, b_sol, b_err, ctrl, want_coeffs, ctrl_mode="pid",
-    interpret=False,
+    failed=None, interpret=False,
 ):
     b, f = y.shape
     s = K.shape[0]
@@ -813,6 +1016,10 @@ def fused_step(
     atolp, rtolp, tol_spec = _fused_tol_blocks(atol, rtol, b, f, bp, fp, dtype, tiled=tiled)
     cols = [t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv]
     colp = [_pad_to(x[:, None], 0, BB) for x in cols]
+    # Solver-failure column (implicit steps); all-zeros when absent so the
+    # kernel's failure masking is a numeric no-op on the explicit path.
+    fail = jnp.zeros((b,), jnp.int32) if failed is None else failed.astype(jnp.int32)
+    failp = _pad_to(fail[:, None], 0, BB)
     row, col = _fused_row_col_specs(fp, tiled=tiled)
     out_specs, out_shapes = _fused_out_specs(bp, fp, dtype, tiled=tiled)
     if tiled:
@@ -838,12 +1045,13 @@ def fused_step(
             row,
             col, col, col, col, col, col, col,  # t, t_new, dt_cur, sdt, run, pi1, pi2
             tol_spec, tol_spec,
+            col,  # failed
         ],
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
     )(yp, Kp, f1p, colp[0], colp[1], colp[2], colp[3], colp[4], colp[5], colp[6],
-      atolp, rtolp)
+      atolp, rtolp, failp)
     return _fused_returns(outs, y, b, f, want_coeffs)
 
 
@@ -1060,6 +1268,12 @@ class _Impl:
 
     def batched_linsolve(self, A, rhs):
         return batched_linsolve(A, rhs, interpret=self._i)
+
+    def batched_lu_factor(self, A):
+        return batched_lu_factor(A, interpret=self._i)
+
+    def fused_newton_iter(self, lu, perm, k, fk, active, scale):
+        return fused_newton_iter(lu, perm, k, fk, active, scale, interpret=self._i)
 
     def masked_newton_update(self, k, delta, active, scale):
         return masked_newton_update(k, delta, active, scale, interpret=self._i)

@@ -8,6 +8,7 @@ mode would be much slower than XLA:CPU fusion.
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax.lax import linalg as lax_linalg
 
 
 def stage_accum(y, dt, K, coeffs):
@@ -101,6 +102,56 @@ def batched_linsolve(A, rhs):
     Returns (b, f).  The inner hot spot of the masked-Newton layer.
     """
     return jnp.linalg.solve(A, rhs[..., None])[..., 0]
+
+
+def batched_lu_factor(A):
+    """Batched partial-pivoted LU factorization: factor ONCE per solver step.
+
+    A: (b, f, f) chord matrices I - dt*gamma*J.
+
+    Returns ``(lu, permutation)``: the packed LU factors (unit lower + upper
+    triangle in one (b, f, f) array) and the (b, f) int32 row permutation.
+    This is the factor-once half of the fused Newton path -- every subsequent
+    ``fused_newton_iter`` launch back-substitutes against these factors
+    instead of re-eliminating the same matrix.
+
+    ``lax.linalg.lu`` is the exact factorization ``jnp.linalg.solve`` (and
+    hence ``batched_linsolve``) performs internally, so the factor +
+    back-substitution composition reproduces the unfused solve bitwise on
+    this backend.
+    """
+    lu, _, permutation = lax_linalg.lu(A)
+    return lu, permutation
+
+
+def fused_newton_iter(lu, perm, k, fk, active, scale):
+    """One whole chord-Newton iteration against a prefactored LU, as ONE op:
+    residual, permutation scatter, the two triangular back-substitutions,
+    the masked commit and the scaled-RMS convergence norm.
+
+    lu:     (b, f, f) packed LU factors from ``batched_lu_factor``
+    perm:   (b, f) int32 row permutation from ``batched_lu_factor``
+    k:      (b, f) current stage iterate
+    fk:     (b, f) vf evaluation at the iterate, ``eval_fn(k)``
+    active: (b,) bool -- instances still iterating
+    scale:  (b, f) error scale atol + rtol*|y| (may broadcast)
+
+    Returns ``(k_new, res_norm)`` exactly like ``masked_newton_update``; the
+    update solved here is ``delta = M^{-1} (k - fk)`` via the LU factors.
+    The triangular-solve sequence mirrors ``lax.linalg``'s own ``lu_solve``
+    lowering (permutation row-gather, unit-lower then upper solve), which is
+    what ``jnp.linalg.solve`` runs after factorizing -- so a solve composed of
+    ``batched_lu_factor`` + this op is bitwise-equal to ``batched_linsolve``.
+    """
+    g = k - fk
+    x = jnp.take_along_axis(g[..., None], perm[..., None], axis=-2)
+    x = lax_linalg.triangular_solve(lu, x, left_side=True, lower=True,
+                                    unit_diagonal=True)
+    x = lax_linalg.triangular_solve(lu, x, left_side=True, lower=False)
+    delta = x[..., 0]
+    k_new = jnp.where(active[:, None], k - delta, k)
+    ratio = delta / scale
+    return k_new, jnp.sqrt(jnp.mean(ratio * ratio, axis=-1))
 
 
 def masked_newton_update(k, delta, active, scale):
@@ -216,6 +267,7 @@ def poly_eval(y, coeffs):
 def fused_step(
     y, K, f1, t, t_new, dt_cur, safe_dt, running, prev_inv, prev2_inv,
     atol, rtol, *, b_sol, b_err, ctrl, want_coeffs, ctrl_mode="pid",
+    failed=None,
 ):
     """One fused explicit-RK step attempt AROUND the vf calls: stage-combine,
     WRMS error norm, controller decision, masked commit of (t, y, f)
@@ -243,6 +295,13 @@ def fused_step(
               computed (it is 0 for fixed-step tableaus, whose b_err is all
               zeros), matching the unfused path bitwise.
 
+    failed: optional (b,) bool -- instances whose implicit stage solve failed
+    this attempt (Newton divergence / iteration-cap exhaustion).  Failed
+    instances get ``err_ratio = inf`` BEFORE the controller (so an adaptive
+    controller shrinks their step) and are excluded from ``accept``
+    unconditionally -- essential under ``ctrl_mode="fixed"``, whose
+    always-accept contract would otherwise commit a garbage iterate.
+
     Returns ``(y1, err_ratio, accept, y_out, f_out, t_out, dt_out, new_inv,
     new_inv2, coeffs)`` with ``coeffs = (c0, c1, c2, c3)`` or ``None``.
     """
@@ -250,6 +309,8 @@ def fused_step(
         y, K, safe_dt, jnp.asarray(b_sol, K.dtype), jnp.asarray(b_err, K.dtype)
     )
     err_ratio = error_norm(err, y, y1, atol, rtol)
+    if failed is not None:
+        err_ratio = jnp.where(failed, jnp.inf, err_ratio)
     if ctrl_mode == "fixed":
         accept = jnp.ones(dt_cur.shape, dtype=bool)
         dt_next = dt_cur
@@ -263,6 +324,8 @@ def fused_step(
             dt_min=dt_min, dt_max=dt_max,
         )
     accept = accept & running
+    if failed is not None:
+        accept = accept & ~failed
     acc_f = accept[:, None]
     y_out = jnp.where(acc_f, y1, y)
     f_out = jnp.where(acc_f, f1, K[0])

@@ -23,6 +23,7 @@ from repro.core import (
     Event,
     ExplicitRK,
     FixedController,
+    NewtonConfig,
     ODETerm,
     ScanAdjoint,
     Status,
@@ -62,9 +63,9 @@ class TestStaticConfig:
         assert hash(ExplicitRK("tsit5")) == hash(ExplicitRK("tsit5"))
         assert ExplicitRK("tsit5") != ExplicitRK("dopri5")
         assert DiagonallyImplicitRK("kvaerno3") == DiagonallyImplicitRK("kvaerno3")
-        assert DiagonallyImplicitRK("kvaerno3", newton_tol=1e-5) != DiagonallyImplicitRK(
-            "kvaerno3"
-        )
+        assert DiagonallyImplicitRK(
+            "kvaerno3", newton=NewtonConfig(tol=1e-5)
+        ) != DiagonallyImplicitRK("kvaerno3")
         assert get_tableau("dopri5") == get_tableau("dopri5")
         assert hash(get_tableau("dopri5")) != hash(get_tableau("tsit5"))
         assert pid_controller() == pid_controller()

@@ -381,11 +381,25 @@ class TestFusedFallbackReason:
     def test_absent_when_not_requested(self):
         assert "fused_fallback_reason" not in self._solve(False).stats
 
-    def test_implicit_stepper(self):
+    def test_implicit_stepper_engages(self):
+        # DIRK methods take the factor-once fused path since the implicit
+        # megakernel landed; the fallback reason must say ENGAGED.
         sol = self._solve(True, method="kvaerno3")
         np.testing.assert_array_equal(
             np.asarray(sol.stats["fused_fallback_reason"]),
-            np.full(3, int(FusedFallbackReason.NOT_EXPLICIT_RK)))
+            np.full(3, int(FusedFallbackReason.ENGAGED)))
+        assert "n_fused_steps" in sol.stats
+
+    def test_implicit_stepper_subclass_falls_back(self):
+        from repro.core import DiagonallyImplicitRK
+
+        class CustomDIRK(DiagonallyImplicitRK):
+            pass
+
+        sol = self._solve(True, method=CustomDIRK("kvaerno3"))
+        np.testing.assert_array_equal(
+            np.asarray(sol.stats["fused_fallback_reason"]),
+            np.full(3, int(FusedFallbackReason.UNSUPPORTED_IMPLICIT)))
         assert "n_fused_steps" not in sol.stats
 
     def test_unsupported_controller(self):

@@ -17,6 +17,7 @@ from repro.core import (
     BacksolveAdjoint,
     DiagonallyImplicitRK,
     ExplicitRK,
+    NewtonConfig,
     ODETerm,
     Status,
     Stepper,
@@ -180,7 +181,7 @@ class TestNewtonSubsystem:
 
         M = jnp.broadcast_to(jnp.eye(f) - W, (b, f, f))
         res = newton_solve(eval_fn, jnp.zeros((b, f)), M, jnp.ones((b, f)),
-                           tol=1e-5, max_iters=5)
+                           config=NewtonConfig(tol=1e-5, max_iters=5))
         assert np.all(np.asarray(res.converged))
         fixed = np.asarray(res.k)
         np.testing.assert_allclose(fixed, np.asarray(eval_fn(res.k)), atol=1e-4)
@@ -193,7 +194,7 @@ class TestNewtonSubsystem:
 
         M = jnp.broadcast_to(jnp.eye(2), (3, 2, 2))
         res = newton_solve(eval_fn, jnp.ones((3, 2)), M, jnp.ones((3, 2)),
-                           tol=1e-3, max_iters=6)
+                           config=NewtonConfig(tol=1e-3, max_iters=6))
         assert np.all(np.asarray(res.diverged))
         assert not np.any(np.asarray(res.converged))
 
@@ -230,8 +231,8 @@ class TestNewtonSubsystem:
         silently wrong SUCCESS (regression)."""
         # One starved Newton iteration at a hopeless tolerance can never
         # certify convergence on a nonlinear problem.
-        stepper = DiagonallyImplicitRK("implicit_euler", max_newton_iters=1,
-                                       newton_tol=1e-12)
+        stepper = DiagonallyImplicitRK(
+            "implicit_euler", newton=NewtonConfig(tol=1e-12, max_iters=1))
         solver = AutoDiffAdjoint(stepper, max_steps=50)
         sol = solver.solve(lambda t, y, a: -(y**3), jnp.full((2, 1), 2.0), None,
                            t_start=0.0, t_end=1.0, dt0=0.25)
@@ -248,8 +249,8 @@ class TestNewtonSubsystem:
 
         # Starved Newton at an impossible tolerance fails every step: if the
         # knobs survive, the forward solve visibly fails to advance.
-        starved = DiagonallyImplicitRK("kvaerno3", max_newton_iters=1,
-                                       newton_tol=1e-14)
+        starved = DiagonallyImplicitRK(
+            "kvaerno3", newton=NewtonConfig(tol=1e-14, max_iters=1))
         solve = make_adjoint_solve(lambda t, y, p: -(y**3), method=starved,
                                    max_steps=30)
         y_starved = np.asarray(solve(jnp.full((1, 1), 2.0), 0.0, 1.0, None))
@@ -267,7 +268,7 @@ class TestNewtonSubsystem:
         proposes along the stiff slow manifold; each failure is reported
         through the ordinary controller reject path (visible as rejected
         steps) and the solver still finishes correctly on retried steps."""
-        stepper = DiagonallyImplicitRK("kvaerno5", max_newton_iters=2)
+        stepper = DiagonallyImplicitRK("kvaerno5", newton=NewtonConfig(max_iters=2))
         solver = AutoDiffAdjoint(stepper, rtol=1e-5, atol=1e-6, max_steps=20_000)
         sol = solver.solve(vdp, jnp.array([[2.0, 0.0]]), None,
                            t_start=0.0, t_end=20.0, args=1000.0)
@@ -275,6 +276,90 @@ class TestNewtonSubsystem:
         n_steps = np.asarray(sol.stats["n_steps"])
         n_accepted = np.asarray(sol.stats["n_accepted"])
         assert np.all(n_steps > n_accepted)  # rejects happened
+
+
+class TestNewtonConfigAPI:
+    """The consolidated ``NewtonConfig`` surface: ``newton=`` is the one
+    configuration path, legacy kwargs are deprecated aliases, and
+    ``newton_solve`` is config-first."""
+
+    def test_legacy_kwargs_warn_and_alias(self):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            legacy = DiagonallyImplicitRK("kvaerno3", newton_tol=1e-4,
+                                          max_newton_iters=11, slow_iters=3)
+        modern = DiagonallyImplicitRK(
+            "kvaerno3", newton=NewtonConfig(tol=1e-4, max_iters=11, slow_iters=3))
+        assert legacy.newton == modern.newton
+        # the read-only properties survive as views over the config
+        assert legacy.newton_tol == 1e-4
+        assert legacy.max_newton_iters == 11
+        assert legacy.slow_iters == 3
+
+    def test_partial_legacy_kwargs_fill_defaults(self):
+        with pytest.warns(DeprecationWarning):
+            st = DiagonallyImplicitRK("trbdf2", max_newton_iters=3)
+        assert st.newton == NewtonConfig(max_iters=3)
+        assert st.newton_tol == NewtonConfig().tol
+
+    def test_legacy_and_newton_conflict_raises(self):
+        with pytest.raises(TypeError, match="cannot combine"):
+            DiagonallyImplicitRK("kvaerno3", newton=NewtonConfig(),
+                                 newton_tol=1e-4)
+
+    def test_default_slow_iters_derives_from_budget(self):
+        cfg = NewtonConfig(max_iters=8)
+        assert cfg.effective_slow_iters == 4
+        assert NewtonConfig(max_iters=2).effective_slow_iters == 2
+        assert NewtonConfig(max_iters=8, slow_iters=6).effective_slow_iters == 6
+
+    def test_newton_solve_rejects_loose_kwargs(self):
+        M = jnp.broadcast_to(jnp.eye(2), (1, 2, 2))
+        with pytest.raises(TypeError):
+            newton_solve(lambda k: 0.5 * k, jnp.ones((1, 2)), M,
+                         jnp.ones((1, 2)), tol=1e-5)
+        with pytest.raises(TypeError):
+            newton_solve(lambda k: 0.5 * k, jnp.ones((1, 2)), M,
+                         jnp.ones((1, 2)), max_iters=5)
+
+    def test_newton_solve_needs_exactly_one_matrix_path(self):
+        M = jnp.broadcast_to(jnp.eye(2), (1, 2, 2))
+        from repro.kernels import ops
+
+        op = ops.batched_lu_factor(M)
+        with pytest.raises(TypeError, match="exactly one"):
+            newton_solve(lambda k: 0.5 * k, jnp.ones((1, 2)), M,
+                         jnp.ones((1, 2)), operator=op)
+        with pytest.raises(TypeError, match="exactly one"):
+            newton_solve(lambda k: 0.5 * k, jnp.ones((1, 2)),
+                         scale=jnp.ones((1, 2)))
+
+    def test_operator_path_matches_matrix_path(self):
+        """Config-first newton_solve: the prefactored-operator path converges
+        to the same fixed point as the dense-matrix path."""
+        from repro.kernels import ops
+
+        b, f = 4, 3
+        rng = np.random.default_rng(7)
+        W = jnp.asarray(0.3 * rng.standard_normal((f, f)), jnp.float32)
+        bias = jnp.asarray(rng.standard_normal((f,)), jnp.float32)
+
+        def eval_fn(k):
+            return k @ W.T + bias
+
+        M = jnp.broadcast_to(jnp.eye(f) - W, (b, f, f))
+        cfg = NewtonConfig(tol=1e-5, max_iters=5)
+        res_m = newton_solve(eval_fn, jnp.zeros((b, f)), M, jnp.ones((b, f)),
+                             config=cfg)
+        res_op = newton_solve(eval_fn, jnp.zeros((b, f)),
+                              operator=ops.batched_lu_factor(M),
+                              scale=jnp.ones((b, f)), config=cfg)
+        assert np.all(np.asarray(res_op.converged))
+        # bitwise on the ref backend (verified by test_fused_implicit); the
+        # interpret leg runs Gauss-Jordan vs LU, so allow rounding here
+        np.testing.assert_allclose(np.asarray(res_m.k), np.asarray(res_op.k),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(res_m.n_iters),
+                                      np.asarray(res_op.n_iters))
 
 
 class TestVfJacHook:

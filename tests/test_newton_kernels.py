@@ -100,3 +100,86 @@ class TestMaskedNewtonUpdate:
         np.testing.assert_allclose(np.asarray(pn), 0.5, rtol=1e-6)
 
 
+def _chord(rng, b, f):
+    """I - dt*gamma*J-shaped matrices, the regime the factor-once ops see."""
+    return jnp.asarray(
+        np.eye(f) + (0.25 / np.sqrt(f)) * rng.standard_normal((b, f, f)), jnp.float32
+    )
+
+
+class TestBatchedLuFactor:
+    """Factor-once LU kernel vs the lax.linalg.lu oracle."""
+
+    @pytest.mark.parametrize("b,f", SHAPES)
+    def test_matches_ref(self, b, f):
+        rng = np.random.default_rng(5 * b + f)
+        A = _chord(rng, b, f)
+        r_lu, r_p = ref.batched_lu_factor(A)
+        p_lu, p_p = pi.batched_lu_factor(A, interpret=True)
+        # identical pivot choices (same max-magnitude, first-match rule) ...
+        np.testing.assert_array_equal(np.asarray(r_p), np.asarray(p_p))
+        # ... and matching factors up to f32 elimination rounding
+        np.testing.assert_allclose(r_lu, p_lu, rtol=1e-4, atol=1e-5)
+
+    def test_factors_reconstruct_matrix(self):
+        """P @ A == L @ U for the packed kernel output."""
+        rng = np.random.default_rng(2)
+        b, f = 3, 12
+        A = _chord(rng, b, f)
+        lu, perm = pi.batched_lu_factor(A, interpret=True)
+        lu = np.asarray(lu)
+        L = np.tril(lu, -1) + np.eye(f)
+        U = np.triu(lu)
+        PA = np.take_along_axis(np.asarray(A), np.asarray(perm)[:, :, None], axis=1)
+        np.testing.assert_allclose(L @ U, PA, rtol=1e-5, atol=1e-5)
+
+    def test_pivoting_handles_zero_diagonal(self):
+        A = jnp.asarray([[[0.0, 1.0], [1.0, 0.0]]], jnp.float32)
+        lu, perm = pi.batched_lu_factor(A, interpret=True)
+        np.testing.assert_array_equal(np.asarray(perm), [[1, 0]])
+
+
+class TestFusedNewtonIter:
+    """The one-launch Newton iteration vs the ref composition."""
+
+    @pytest.mark.parametrize("b,f", SHAPES)
+    def test_matches_ref(self, b, f):
+        rng = np.random.default_rng(7 * b + f)
+        A = _chord(rng, b, f)
+        k, fk = [jnp.asarray(rng.standard_normal((b, f)), jnp.float32) for _ in range(2)]
+        active = jnp.asarray(rng.uniform(size=(b,)) > 0.4)
+        scale = jnp.asarray(np.abs(rng.standard_normal((b, f))) + 0.3, jnp.float32)
+        r_lu, r_p = ref.batched_lu_factor(A)
+        rk, rn = ref.fused_newton_iter(r_lu, r_p, k, fk, active, scale)
+        p_lu, p_p = pi.batched_lu_factor(A, interpret=True)
+        pk, pn = pi.fused_newton_iter(p_lu, p_p, k, fk, active, scale, interpret=True)
+        np.testing.assert_allclose(rk, pk, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(rn, pn, rtol=2e-4, atol=2e-4)
+
+    def test_solves_the_chord_system(self):
+        """The committed update satisfies M @ delta = k - f(k) directly."""
+        rng = np.random.default_rng(13)
+        b, f = 4, 24
+        A = _chord(rng, b, f)
+        k, fk = [jnp.asarray(rng.standard_normal((b, f)), jnp.float32) for _ in range(2)]
+        active = jnp.ones((b,), bool)
+        lu, perm = pi.batched_lu_factor(A, interpret=True)
+        k_new, _ = pi.fused_newton_iter(lu, perm, k, fk, active,
+                                        jnp.ones((b, f)), interpret=True)
+        delta = np.asarray(k) - np.asarray(k_new)
+        res = np.einsum("bij,bj->bi", np.asarray(A), delta) - np.asarray(k - fk)
+        np.testing.assert_allclose(res, 0.0, atol=5e-6)
+
+    def test_inactive_rows_frozen(self):
+        rng = np.random.default_rng(17)
+        b, f = 3, 4
+        A = _chord(rng, b, f)
+        k, fk = [jnp.asarray(rng.standard_normal((b, f)), jnp.float32) for _ in range(2)]
+        active = jnp.asarray([True, False, True])
+        lu, perm = pi.batched_lu_factor(A, interpret=True)
+        k_new, _ = pi.fused_newton_iter(lu, perm, k, fk, active,
+                                        jnp.ones((b, f)), interpret=True)
+        np.testing.assert_array_equal(np.asarray(k_new)[1], np.asarray(k)[1])
+        assert not np.array_equal(np.asarray(k_new)[0], np.asarray(k)[0])
+
+

@@ -24,9 +24,9 @@ from repro.core import (
     Solution,
     Status,
     Stepper,
-    next_pow2,
     solve_ivp,
 )
+from repro.core.serving import next_pow2
 
 
 def decay(t, y, args):
